@@ -1,0 +1,58 @@
+"""Fill EXPERIMENTS.md placeholders from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.experiments_fill
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import REGISTRY, get_config, shapes_for, skipped_shapes_for
+
+from .roofline import ARTIFACTS, analyze, markdown_table
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def latest_artifact(arch: str, shape: str, mesh: str) -> dict | None:
+    files = sorted(ARTIFACTS.glob(f"{arch}__{shape}__{mesh}__*.json"),
+                   key=lambda f: f.stat().st_mtime)
+    if not files:
+        return None
+    return json.loads(files[-1].read_text())
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | 16×16 (256 chips) | 2×16×16 (512 chips) | "
+        "coll bytes/dev | mem GiB/chip (scan) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch, cfg in REGISTRY.items():
+        for sh in shapes_for(cfg):
+            single = latest_artifact(arch, sh.name, "pod16x16")
+            multi = latest_artifact(arch, sh.name, "pod2x16x16")
+            s_ok = "✓ compiled" if single else "—"
+            m_ok = "✓ compiled" if multi else "—"
+            coll = f"{single['collective']['total_bytes']:.2e}" if single else ""
+            mem = ""
+            if single:
+                m = single["memory"]
+                mem = f"{(m['argument_bytes'] + m['temp_bytes'] + m['output_bytes'] - m['alias_bytes'])/2**30:.1f}"
+            lines.append(f"| {arch} | {sh.name} | {s_ok} | {m_ok} | {coll} | {mem} |")
+        for sh, why in skipped_shapes_for(cfg):
+            lines.append(f"| {arch} | {sh.name} | skip | skip | — ({why}) | |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- ROOFLINE_TABLE -->",
+                    markdown_table("pod16x16"))
+    md = md.replace("<!-- DRYRUN_RESULTS -->", dryrun_table())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Hillclimb helper: compare dry-run artifacts for one cell across option
+tags and print before/after roofline terms + top collective movers.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --arch qwen3-4b --shape prefill_32k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def terms(d: dict) -> dict:
+    return {
+        "compute_s": d["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": d["bytes_accessed_per_device"] / HBM_BW,
+        "collective_s": d["collective"]["total_bytes"] / LINK_BW,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    files = sorted(
+        ARTIFACTS.glob(f"{args.arch}__{args.shape}__{args.mesh}__*.json"),
+        key=lambda f: f.stat().st_mtime)
+    for f in files:
+        d = json.loads(f.read_text())
+        t = terms(d)
+        opts = {k: v for k, v in d.get("options", {}).items()
+                if v not in (True, "full", "chunked", 0, False)}
+        print(f"\n== {f.name}")
+        print(f"   options: {d.get('options')}")
+        print(f"   compute={t['compute_s']:.4f}s  memory={t['memory_s']:.4f}s "
+              f"collective={t['collective_s']:.4f}s  "
+              f"coll_ops={d['collective']['total_count']}")
+        for row in d.get("top_collectives", [])[:8]:
+            print(f"     {row['op']:18} {row['shape']:32} "
+                  f"{row['bytes']/1e9:9.2f} GB  ×{row['count']}")
+
+
+if __name__ == "__main__":
+    main()

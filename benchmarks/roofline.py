@@ -1,0 +1,112 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds per step:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  memory     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_device / link_bw       (50 GB/s/link)
+
+(cost_analysis() and the parsed HLO are the per-device SPMD program, so
+"per device" here equals the spec's global/(chips·rate) formulation.)
+
+Also reported: MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (serve);
+the usefulness ratio MODEL_FLOPS/HLO_FLOPs; the dominant term; and the
+roofline fraction  model_compute_time / dominant_term  (the perf score).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .util import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def load_artifacts(mesh: str = "pod16x16", tag_filter: str | None = None):
+    rows = {}
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        try:
+            d = json.loads(f.read_text())
+        except Exception:
+            continue
+        if d.get("mesh") != mesh:
+            continue
+        if tag_filter and tag_filter not in f.name:
+            continue
+        key = (d["arch"], d["shape"])
+        rows.setdefault(key, []).append((f.name, d))
+    return rows
+
+
+def analyze(d: dict) -> dict:
+    chips = d["chips"]
+    compute = d["flops_per_device"] / PEAK_FLOPS
+    memory = d["bytes_accessed_per_device"] / HBM_BW
+    coll = d["collective"]["total_bytes"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    # recompute MODEL_FLOPS from the config (early artifacts hit an int32
+    # overflow in the stored value)
+    from repro.configs import get_config, get_shape
+    from repro.launch.specs import model_flops
+    mf = model_flops(get_config(d["arch"]), get_shape(d["shape"]))
+    d = dict(d, model_flops_global=mf)
+    model_time = d["model_flops_global"] / (chips * PEAK_FLOPS)
+    hlo_total = d["flops_per_device"] * chips
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": d["model_flops_global"],
+        "useful_ratio": d["model_flops_global"] / max(hlo_total, 1e-30),
+        "roofline_fraction": model_time / max(terms[dominant], 1e-30),
+        "mem_gib": (d["memory"]["argument_bytes"] + d["memory"]["temp_bytes"]
+                    + d["memory"]["output_bytes"]
+                    - d["memory"]["alias_bytes"]) / 2**30,
+    }
+
+
+def markdown_table(mesh: str = "pod16x16") -> str:
+    rows = load_artifacts(mesh)
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO | roofline frac | mem GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), artifacts in sorted(rows.items()):
+        name, d = artifacts[-1]
+        a = analyze(d)
+        lines.append(
+            f"| {arch} | {shape} | {a['compute_s']:.4f} | {a['memory_s']:.4f} "
+            f"| {a['collective_s']:.4f} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_fraction']:.2f} "
+            f"| {a['mem_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def main(quick: bool = False) -> None:
+    rows = load_artifacts()
+    if not rows:
+        emit("roofline/no-artifacts", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for (arch, shape), artifacts in sorted(rows.items()):
+        name, d = artifacts[-1]
+        a = analyze(d)
+        emit(f"roofline/{arch}/{shape}", d.get("compile_s", 0) * 1e6,
+             f"compute={a['compute_s']:.4f}s;memory={a['memory_s']:.4f}s;"
+             f"collective={a['collective_s']:.4f}s;dominant={a['dominant']};"
+             f"useful={a['useful_ratio']:.2f};"
+             f"roofline_frac={a['roofline_fraction']:.2f}")
+    out = ARTIFACTS / "roofline_table.md"
+    out.write_text(markdown_table())
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+
+Prints `name,us_per_call,derived` CSV rows (benchmarks.util contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (fig5_8_simulation, roofline, table1_distances, table2_lattices,
+               throughput_bounds, topology_collectives)
+from .util import header
+
+SECTIONS = {
+    "table1": table1_distances.main,
+    "table2": table2_lattices.main,
+    "throughput": throughput_bounds.main,
+    "fig5_8": fig5_8_simulation.main,
+    "topology": topology_collectives.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of sections")
+    args = ap.parse_args()
+    names = [s for s in args.only.split(",") if s] or list(SECTIONS)
+    header()
+    failed = []
+    for name in names:
+        try:
+            SECTIONS[name](quick=args.quick)
+        except Exception as e:  # noqa: BLE001 — finish remaining sections
+            failed.append((name, e))
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark sections failed: {[n for n, _ in failed]}")
+
+
+if __name__ == "__main__":
+    main()

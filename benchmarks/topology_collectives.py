@@ -1,0 +1,45 @@
+"""Beyond-paper integration: collective cost on crystal pods vs mixed tori
+(the DESIGN.md §2 adaptation) + logical-mesh placement dilations."""
+from __future__ import annotations
+
+import time
+
+from repro.core import BCC, FCC, PC, Torus
+from repro.topology.collective_model import analyze_pod
+from repro.topology.placement import best_embedding
+from repro.topology.upgrade import migration_stats, upgrade_plan
+
+from .util import emit
+
+
+def main(quick: bool = False) -> None:
+    pods = [("BCC4_256", BCC(4), None), ("T_8_8_4", Torus(8, 8, 4), (8, 8, 4)),
+            ("PC8_512", PC(8), None), ("T_16_8_4", Torus(16, 8, 4), (16, 8, 4))]
+    if not quick:
+        pods += [("FCC8_1024", FCC(8), None),
+                 ("T_16_8_8", Torus(16, 8, 8), (16, 8, 8))]
+    for name, g, ts in pods:
+        t0 = time.perf_counter()
+        r = analyze_pod(name, g, ts)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"pod/{name}", us,
+             f"D={r.diameter};kbar={r.avg_distance:.3f};"
+             f"capacity={r.uniform_capacity:.3f};"
+             f"alltoall_256MB_ms={r.alltoall_256MB_ms:.2f}")
+    t0 = time.perf_counter()
+    be = best_embedding(BCC(4), (16, 16))
+    us = (time.perf_counter() - t0) * 1e6
+    emit("placement/BCC4_16x16", us,
+         f"embedding={be['embedding'].name};"
+         f"dil0={be['axis0']['avg']:.2f};dil1={be['axis1']['avg']:.2f}")
+    for chips in (256, 512):
+        t0 = time.perf_counter()
+        st = migration_stats(upgrade_plan(chips))
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"upgrade/{chips}to{chips*2}", us,
+             f"fresh={st['fresh_chips']};avg_hops={st['avg_hops']:.2f};"
+             f"max_hops={st['max_hops']}")
+
+
+if __name__ == "__main__":
+    main()

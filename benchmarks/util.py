@@ -1,0 +1,24 @@
+"""Benchmark harness utilities: timing + the `name,us_per_call,derived` CSV
+contract shared by every benchmark module."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+@contextmanager
+def timed(name: str, derived_fn=lambda: ""):
+    t0 = time.perf_counter()
+    yield
+    emit(name, (time.perf_counter() - t0) * 1e6, derived_fn())
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

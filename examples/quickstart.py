@@ -1,0 +1,34 @@
+"""Quickstart: the paper's lattice graphs in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (BCC, FCC, PC, LatticeGraph, Torus, boxplus,
+                        bcc_matrix, crystal_for_order, norm1, pc_matrix,
+                        route_bcc, summarize, HierarchicalRouter)
+
+# --- the three cubic crystal networks (paper §3) ---
+for name, g in [("PC(4) = 4-ary 3-cube", PC(4)),
+                ("FCC(4) ≅ PDTT(4)", FCC(4)),
+                ("BCC(4)  (new in the paper)", BCC(4)),
+                ("T(8,8,4) mixed torus", Torus(8, 8, 4))]:
+    print(summarize(name, g).row())
+
+# --- minimal routing (paper §5, Algorithm 4) ---
+g = BCC(4)
+src, dst = g.labels[17], g.labels[200]
+r = route_bcc(4, dst - src)
+print(f"\nroute {src} → {dst}: record {r} ({norm1(r)} hops, "
+      f"BFS distance {g.distance(src, dst)})")
+
+# --- hybrid graphs via the common lift ⊞ (paper §4.2) ---
+M = boxplus(pc_matrix(4), bcc_matrix(2))
+h = LatticeGraph(M)
+print(f"\nPC(4) ⊞ BCC(2): dim={h.n}, N={h.order}, diameter={h.diameter}")
+router = HierarchicalRouter(M)   # Algorithm 1 works on any lattice graph
+v = h.labels[123]
+print(f"hierarchical route 0 → {v}: {router(v)} (= BFS {h.distance(v*0, v)})")
+
+# --- TPU pods on the upgrade path (paper §3.4 → DESIGN.md §2) ---
+print("\npod upgrade path:", [f"{crystal_for_order(n).order}" for n in (256, 512, 1024, 2048)])

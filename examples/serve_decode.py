@@ -1,0 +1,11 @@
+"""Batched serving example: prefill a prompt batch, decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen3-4b", "--reduced", "--batch", "4",
+                "--prompt-len", "64", "--gen", "32"])
+    serve_main(["--arch", "mamba2-2.7b", "--reduced", "--batch", "2",
+                "--prompt-len", "64", "--gen", "16"])

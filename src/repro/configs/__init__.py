@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+from .base import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+                   MoEConfig, ModelConfig, ShapeSpec, SSMConfig, shapes_for,
+                   skipped_shapes_for)
+from .command_r_plus_104b import CONFIG as command_r_plus_104b
+from .deepseek_moe_16b import CONFIG as deepseek_moe_16b
+from .internvl2_2b import CONFIG as internvl2_2b
+from .mamba2_2p7b import CONFIG as mamba2_2p7b
+from .olmo_1b import CONFIG as olmo_1b
+from .phi3_mini_3p8b import CONFIG as phi3_mini_3p8b
+from .phi35_moe_42b import CONFIG as phi35_moe_42b
+from .qwen3_4b import CONFIG as qwen3_4b
+from .whisper_base import CONFIG as whisper_base
+from .zamba2_1p2b import CONFIG as zamba2_1p2b
+
+REGISTRY: dict[str, ModelConfig] = {
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b,
+    "phi3-mini-3.8b": phi3_mini_3p8b,
+    "qwen3-4b": qwen3_4b,
+    "olmo-1b": olmo_1b,
+    "command-r-plus-104b": command_r_plus_104b,
+    "zamba2-1.2b": zamba2_1p2b,
+    "mamba2-2.7b": mamba2_2p7b,
+    "internvl2-2b": internvl2_2b,
+    "whisper-base": whisper_base,
+}
+
+SHAPES: dict[str, ShapeSpec] = {s.name: s for s in ALL_SHAPES}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_shape(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeSpec",
+    "REGISTRY", "SHAPES", "get_config", "get_shape", "shapes_for",
+    "skipped_shapes_for", "ALL_SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

@@ -1,0 +1,139 @@
+"""Config system: architecture + shape + parallelism descriptors.
+
+Every assigned architecture gets a `ModelConfig` in its own module under
+`repro.configs`; shapes are the four assigned input-shape cells.  Configs are
+plain frozen dataclasses — a launcher builds everything from
+(`ModelConfig`, `ShapeSpec`, `MeshSpec`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    num_shared_experts: int = 0
+    expert_d_ff: int = 0            # per-expert FFN width (fine-grained MoE)
+    capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_size: int                 # N
+    head_dim: int = 64              # P
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_kernel: int = 4
+    chunk_size: int = 256
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 → d_model // num_heads
+    qk_norm: bool = False
+    nonparametric_norm: bool = False   # OLMo-style LN without learned params
+    parallel_block: bool = False       # Cohere-style attn ∥ FFN
+    use_bias: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # hybrid (Zamba2): a single shared attention block reused every k layers
+    hybrid_attn_period: int = 0
+    # enc-dec (Whisper): encoder depth/length; frontend is a stub
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0
+    # VLM: number of prefix patch-embedding positions (stub frontend)
+    num_patch_tokens: int = 0
+    norm_eps: float = 1e-5
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic (constant-state) sequence mixing → long_500k runs."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        kw: dict = dict(
+            num_layers=min(self.num_layers, 4 if self.hybrid_attn_period else 2),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads < self.num_heads else 4,
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16 if self.head_dim else 0,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2,
+                expert_d_ff=64 if self.moe.expert_d_ff else 0)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_size=16, head_dim=16, chunk_size=32)
+        if self.hybrid_attn_period:
+            kw["hybrid_attn_period"] = 2
+        if self.encoder_layers:
+            kw["encoder_layers"] = 2
+            kw["encoder_seq_len"] = 16
+        if self.num_patch_tokens:
+            kw["num_patch_tokens"] = 4
+        return dataclasses.replace(self, name=self.name + "-smoke", **kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shapes_for(cfg: ModelConfig) -> tuple[ShapeSpec, ...]:
+    """The shape cells an architecture actually runs.
+
+    long_500k requires sub-quadratic sequence mixing (SSM/hybrid); pure
+    full-attention archs skip it (see DESIGN.md §4)."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.supports_long_context:
+        out.append(LONG_500K)
+    return tuple(out)
+
+
+def skipped_shapes_for(cfg: ModelConfig) -> tuple[tuple[ShapeSpec, str], ...]:
+    if cfg.supports_long_context:
+        return ()
+    return ((LONG_500K, "full attention: 524k-token KV cache excluded by spec"),)

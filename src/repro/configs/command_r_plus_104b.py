@@ -1,0 +1,15 @@
+"""Command R+ 104B [hf:CohereForAI/c4ai-command-r-plus]: GQA kv=8, no bias,
+parallel attention/FFN blocks."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12_288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=33_792,
+    vocab_size=256_000,
+    parallel_block=True,
+)

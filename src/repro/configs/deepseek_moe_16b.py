@@ -1,0 +1,16 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066]: fine-grained experts, 2 shared + 64
+routed top-6."""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102_400,
+    moe=MoEConfig(num_experts=64, top_k=6, num_shared_experts=2,
+                  expert_d_ff=1408),
+)

@@ -1,0 +1,15 @@
+"""InternVL2-2B [arXiv:2404.16821]: InternLM2-1.8B backbone; the InternViT
+frontend is a stub — input_specs() provides precomputed patch embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    num_patch_tokens=256,
+)

@@ -1,0 +1,15 @@
+"""Mamba2-2.7B [arXiv:2405.21060]: pure SSD (state-space duality), attention
+free."""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    ssm=SSMConfig(state_size=128),
+)

@@ -1,0 +1,14 @@
+"""OLMo-1B [arXiv:2402.00838]: non-parametric LayerNorm."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50_304,
+    nonparametric_norm=True,
+)

@@ -1,0 +1,15 @@
+"""Phi-3.5-MoE (42B total / 6.6B active) [hf:microsoft/Phi-3.5-MoE-instruct]."""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32_064,
+    moe=MoEConfig(num_experts=16, top_k=2, num_shared_experts=0,
+                  expert_d_ff=6400),
+)

@@ -1,0 +1,13 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219]: dense, RoPE, SwiGLU, MHA (kv=32)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_064,
+)

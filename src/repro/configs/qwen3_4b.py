@@ -1,0 +1,16 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-4B]: qk-norm, GQA kv=8, head_dim=128."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=9728,
+    vocab_size=151_936,
+    head_dim=128,       # Qwen3 decouples head_dim from d_model/num_heads
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,17 @@
+"""Whisper-base [arXiv:2212.04356]: enc-dec; the conv frame frontend is a
+stub — input_specs() provides precomputed frame embeddings (B, 1500, 512)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,            # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51_865,
+    encoder_layers=6,
+    encoder_seq_len=1500,
+    tie_embeddings=True,
+)

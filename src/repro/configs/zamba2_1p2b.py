@@ -1,0 +1,16 @@
+"""Zamba2-1.2B [arXiv:2411.15242]: Mamba2 backbone + one shared attention
+block reused every 6 layers."""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_000,
+    ssm=SSMConfig(state_size=64),
+    hybrid_attn_period=6,
+)

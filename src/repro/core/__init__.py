@@ -1,0 +1,45 @@
+"""Core library: lattice graphs from cubic crystal lattices (the paper's
+contribution), exact integer-matrix machinery, symmetry, routing, distance
+analysis and throughput bounds."""
+from . import intmat
+from .crystals import (BCC, FCC, PC, RTT, FourD_BCC, FourD_FCC, Lip, Torus,
+                       bcc_matrix, boxplus, crystal_for_order, direct_sum,
+                       fcc_matrix, fourd_bcc_matrix, fourd_fcc_matrix,
+                       lip_matrix, nd_bcc_matrix, nd_fcc_matrix, nd_pc_matrix,
+                       pc_matrix, rtt_matrix, torus_matrix, upgrade_path)
+from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
+                        fcc_average_distance, fcc_diameter,
+                        mixed_torus_diameter, pc_average_distance,
+                        pc_diameter, summarize, torus_average_distance)
+from .lattice import LatticeGraph
+from .routing import (HierarchicalRouter, minimal_record_bruteforce, norm1,
+                      route_bcc, route_fcc, route_ring, route_rtt, route_torus)
+from .symmetry import (bcc_lift_is_never_symmetric, is_linear_automorphism,
+                       is_linearly_symmetric, linear_stabilizer,
+                       signed_permutation_matrices,
+                       theorem12_matrix_first_family,
+                       theorem12_matrix_second_family)
+from .throughput import (bcc_throughput_bound, channel_load,
+                         fcc_throughput_bound, mixed_torus_throughput_bound,
+                         pc_throughput_bound, symmetric_throughput_bound)
+
+__all__ = [
+    "intmat", "LatticeGraph",
+    "PC", "FCC", "BCC", "RTT", "Torus", "FourD_FCC", "FourD_BCC", "Lip",
+    "pc_matrix", "fcc_matrix", "bcc_matrix", "rtt_matrix", "torus_matrix",
+    "fourd_fcc_matrix", "fourd_bcc_matrix", "lip_matrix",
+    "nd_pc_matrix", "nd_bcc_matrix", "nd_fcc_matrix",
+    "boxplus", "direct_sum", "crystal_for_order", "upgrade_path",
+    "route_ring", "route_torus", "route_rtt", "route_fcc", "route_bcc",
+    "HierarchicalRouter", "minimal_record_bruteforce", "norm1",
+    "pc_diameter", "fcc_diameter", "bcc_diameter", "mixed_torus_diameter",
+    "pc_average_distance", "fcc_average_distance", "bcc_average_distance",
+    "torus_average_distance", "summarize", "DistanceSummary",
+    "signed_permutation_matrices", "is_linear_automorphism",
+    "linear_stabilizer", "is_linearly_symmetric",
+    "theorem12_matrix_first_family", "theorem12_matrix_second_family",
+    "bcc_lift_is_never_symmetric",
+    "symmetric_throughput_bound", "mixed_torus_throughput_bound",
+    "pc_throughput_bound", "fcc_throughput_bound", "bcc_throughput_bound",
+    "channel_load",
+]

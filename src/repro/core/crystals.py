@@ -1,0 +1,192 @@
+"""Constructors for the paper's graph zoo (§3, §4).
+
+Cubic crystal lattices (Theorem 12 + §3):
+  PC(a)   primitive cubic      = 3D torus,            a³ nodes
+  FCC(a)  face-centered cubic  ≅ PDTT(a),            2a³ nodes
+  BCC(a)  body-centered cubic  (new in the paper),   4a³ nodes
+Lifts and hybrids (§4): 4D-FCC, 4D-BCC, Lip, boxplus (Theorem 24).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import intmat
+from .lattice import LatticeGraph
+
+
+# ---------------------------------------------------------------------------
+# generating matrices
+# ---------------------------------------------------------------------------
+
+def torus_matrix(*sides: int) -> np.ndarray:
+    return np.diag(np.array(sides, dtype=np.int64))
+
+
+def pc_matrix(a: int) -> np.ndarray:
+    return torus_matrix(a, a, a)
+
+
+def fcc_matrix(a: int) -> np.ndarray:
+    # Hermite form of [[a,a,0],[a,0,a],[0,a,a]]
+    return np.array([[2 * a, a, a], [0, a, 0], [0, 0, a]], dtype=np.int64)
+
+
+def bcc_matrix(a: int) -> np.ndarray:
+    # Hermite form of [[-a,a,a],[a,-a,a],[a,a,-a]]
+    return np.array([[2 * a, 0, a], [0, 2 * a, a], [0, 0, a]], dtype=np.int64)
+
+
+def rtt_matrix(a: int) -> np.ndarray:
+    """Rectangular twisted torus RTT(a) = projection of FCC(a)."""
+    return np.array([[2 * a, a], [0, a]], dtype=np.int64)
+
+
+def dtt_matrix(a: int) -> np.ndarray:
+    """2D doubly twisted torus from the tree in Figure 4 ([[a,-a],[a,a]]-type)."""
+    return np.array([[a, -a], [a, a]], dtype=np.int64)
+
+
+def fourd_bcc_matrix(a: int) -> np.ndarray:
+    return np.array(
+        [[2 * a, 0, 0, a],
+         [0, 2 * a, 0, a],
+         [0, 0, 2 * a, a],
+         [0, 0, 0, a]], dtype=np.int64)
+
+
+def fourd_fcc_matrix(a: int) -> np.ndarray:
+    return np.array(
+        [[2 * a, a, a, a],
+         [0, a, 0, 0],
+         [0, 0, a, 0],
+         [0, 0, 0, a]], dtype=np.int64)
+
+
+def lip_matrix(a: int) -> np.ndarray:
+    """Lipschitz graph Lip(a) (Proposition 19): symmetric lift of FCC(2a)."""
+    return np.array(
+        [[a, -a, -a, -a],
+         [a, a, -a, a],
+         [a, a, a, -a],
+         [a, -a, a, a]], dtype=np.int64)
+
+
+def nd_pc_matrix(a: int, n: int) -> np.ndarray:
+    return np.diag(np.full(n, a, dtype=np.int64))
+
+
+def nd_bcc_matrix(a: int, n: int) -> np.ndarray:
+    """nD-BCC: diag(2a, ..., 2a) with last column (a, ..., a)ᵀ (Figure 4)."""
+    M = np.diag(np.full(n, 2 * a, dtype=np.int64))
+    M[:, n - 1] = a
+    M[n - 1, n - 1] = a
+    return M
+
+
+def nd_fcc_matrix(a: int, n: int) -> np.ndarray:
+    """nD-FCC: [[2a, a, ..., a], [0, aI]] (Figure 4 right branch)."""
+    M = np.diag(np.full(n, a, dtype=np.int64))
+    M[0, :] = a
+    M[0, 0] = 2 * a
+    return M
+
+
+def direct_sum(M1, M2) -> np.ndarray:
+    A, B = intmat.as_np(M1), intmat.as_np(M2)
+    n1, n2 = A.shape[0], B.shape[0]
+    out = np.zeros((n1 + n2, n1 + n2), dtype=np.int64)
+    out[:n1, :n1] = A
+    out[n1:, n1:] = B
+    return out
+
+
+def boxplus(M1, M2) -> np.ndarray:
+    """Common lift M1 ⊞ M2 (Theorem 24): overlap the longest common leading
+    Hermite block C, producing a lift of minimal dimension with both G(M1)
+    and G(M2) as projections."""
+    H1 = intmat.hermite_normal_form(M1)
+    H2 = intmat.hermite_normal_form(M2)
+    n1, n2 = H1.shape[0], H2.shape[0]
+    k = 0
+    for t in range(1, min(n1, n2) + 1):
+        if np.array_equal(H1[:t, :t], H2[:t, :t]):
+            k = t
+        else:
+            break
+    C = H1[:k, :k]
+    RA, A = H1[:k, k:], H1[k:, k:]
+    RB, B = H2[:k, k:], H2[k:, k:]
+    da, db = n1 - k, n2 - k
+    n = k + da + db
+    out = np.zeros((n, n), dtype=np.int64)
+    out[:k, :k] = C
+    out[:k, k:k + da] = RA
+    out[k:k + da, k:k + da] = A
+    out[:k, k + da:] = RB
+    out[k + da:, k + da:] = B
+    return out
+
+
+# ---------------------------------------------------------------------------
+# graph constructors
+# ---------------------------------------------------------------------------
+
+def Torus(*sides: int) -> LatticeGraph:
+    return LatticeGraph(torus_matrix(*sides))
+
+
+def PC(a: int) -> LatticeGraph:
+    return LatticeGraph(pc_matrix(a))
+
+
+def FCC(a: int) -> LatticeGraph:
+    return LatticeGraph(fcc_matrix(a))
+
+
+def BCC(a: int) -> LatticeGraph:
+    return LatticeGraph(bcc_matrix(a))
+
+
+def RTT(a: int) -> LatticeGraph:
+    return LatticeGraph(rtt_matrix(a))
+
+
+def FourD_FCC(a: int) -> LatticeGraph:
+    return LatticeGraph(fourd_fcc_matrix(a))
+
+
+def FourD_BCC(a: int) -> LatticeGraph:
+    return LatticeGraph(fourd_bcc_matrix(a))
+
+
+def Lip(a: int) -> LatticeGraph:
+    return LatticeGraph(lip_matrix(a))
+
+
+# ---------------------------------------------------------------------------
+# the power-of-two upgrade path (§3.4): 2^{3t} → 2^{3t+1} → 2^{3t+2} → 2^{3t+3}
+# ---------------------------------------------------------------------------
+
+def crystal_for_order(num_nodes: int) -> LatticeGraph:
+    """The symmetric cubic crystal with exactly `num_nodes` nodes, when
+    num_nodes is a power of two ≥ 8 (paper §3.4 upgrade path)."""
+    n = int(num_nodes)
+    if n < 8 or n & (n - 1):
+        raise ValueError(f"{num_nodes} is not a power of two ≥ 8")
+    t = n.bit_length() - 1  # n = 2^t
+    q, r = divmod(t, 3)
+    if r == 0:
+        return PC(2 ** q)
+    if r == 1:
+        return FCC(2 ** q)
+    return BCC(2 ** q)
+
+
+def upgrade_path(start_order: int, steps: int) -> list[LatticeGraph]:
+    """PC(a) → FCC(a) → BCC(a) → PC(2a) → ...  each step doubles the size."""
+    out = []
+    order = start_order
+    for _ in range(steps + 1):
+        out.append(crystal_for_order(order))
+        order *= 2
+    return out

@@ -1,0 +1,93 @@
+"""Distance properties of cubic crystal graphs — closed forms of Table 1 and
+BFS-based measurement utilities.
+
+Average-distance convention (matches Table 1): k̄ = Σ_v d(0, v) / (N − 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .lattice import LatticeGraph
+
+
+# ---------------------------------------------------------------------------
+# Table 1 closed forms
+# ---------------------------------------------------------------------------
+
+def pc_diameter(a: int) -> int:
+    return 3 * (a // 2)
+
+
+def fcc_diameter(a: int) -> int:
+    return (3 * a) // 2
+
+
+def bcc_diameter(a: int) -> int:
+    return (3 * a) // 2
+
+
+def mixed_torus_diameter(*sides: int) -> int:
+    return sum(s // 2 for s in sides)
+
+
+def pc_average_distance(a: int) -> float:
+    if a % 2 == 0:
+        return 3 * a**4 / (4 * (a**3 - 1))
+    return (3 * a**4 - 3 * a**2) / (4 * (a**3 - 1))
+
+
+def fcc_average_distance(a: int) -> float:
+    if a % 2 == 0:
+        return (7 * a**4 - 2 * a**2) / (4 * (2 * a**3 - 1))
+    return (7 * a**4 - 2 * a**2 - 1) / (4 * (2 * a**3 - 1))
+
+
+def bcc_average_distance(a: int, as_printed: bool = False) -> float:
+    """BCC(a) average distance.
+
+    The paper's odd-a numerator reads `35a⁴ − 14a² + 30`; exhaustive BFS at
+    a ∈ {3, 5, 7} shows the constant is a typo for `+3` (measured 8·Σd equals
+    35a⁴ − 14a² + 3 exactly).  Pass as_printed=True for the printed form."""
+    if a % 2 == 0:
+        return (35 * a**4 - 8 * a**2) / (8 * (4 * a**3 - 1))
+    c = 30 if as_printed else 3
+    return (35 * a**4 - 14 * a**2 + c) / (8 * (4 * a**3 - 1))
+
+
+def torus_average_distance(*sides: int) -> float:
+    """Exact k̄ of a mixed-radix torus: sum of per-dimension ring averages.
+
+    Ring of size s has Σ d = s²/4 (even) or (s²−1)/4 (odd) over all nodes;
+    per-dimension averages add because distance is separable."""
+    N = int(np.prod(sides))
+    total = 0
+    for s in sides:
+        ring_sum = s * s // 4 if s % 2 == 0 else (s * s - 1) // 4
+        total += ring_sum * (N // s)  # each ring value appears N/s times
+    return total / (N - 1)
+
+
+# ---------------------------------------------------------------------------
+# measured summaries
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DistanceSummary:
+    name: str
+    n: int
+    order: int
+    degree: int
+    diameter: int
+    average_distance: float
+
+    def row(self) -> str:
+        return (f"{self.name:<24} n={self.n} N={self.order:<8} Δ={self.degree} "
+                f"D={self.diameter:<4} k̄={self.average_distance:.5f}")
+
+
+def summarize(name: str, g: LatticeGraph) -> DistanceSummary:
+    return DistanceSummary(
+        name=name, n=g.n, order=g.order, degree=g.degree,
+        diameter=g.diameter, average_distance=g.average_distance)

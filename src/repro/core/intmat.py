@@ -1,0 +1,235 @@
+"""Exact integer-matrix machinery for lattice graphs (paper §2).
+
+All arithmetic is exact (Python ints).  Matrices are lists of lists (rows) or
+numpy arrays with small entries; every public function accepts either and
+returns numpy int64 arrays unless noted.
+
+Conventions follow the paper:
+  * right-equivalence  M1 ≅ M2  ⇔  M1 = M2 · P with P unimodular (column ops),
+  * Hermite normal form H is upper triangular, positive diagonal, and
+    0 ≤ H[i, j] < H[i, i] for j > i  (Definition 8),
+  * the labelling set of G(M) is the Hermite box {x : 0 ≤ x_i < H_ii}
+    (Definition 26 with the Hermite labelling).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+Int = int
+
+
+def as_pyint_matrix(M) -> list[list[Int]]:
+    """Copy M into a list-of-lists of Python ints (exact arithmetic)."""
+    A = np.asarray(M)
+    return [[int(x) for x in row] for row in A]
+
+
+def as_np(M) -> np.ndarray:
+    return np.array([[int(x) for x in row] for row in M], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# determinant / adjugate (exact)
+# ---------------------------------------------------------------------------
+
+def det(M) -> Int:
+    """Exact integer determinant via fraction-free (Bareiss) elimination."""
+    A = as_pyint_matrix(M)
+    n = len(A)
+    sign = 1
+    prev = 1
+    for k in range(n - 1):
+        if A[k][k] == 0:  # pivot search
+            for i in range(k + 1, n):
+                if A[i][k] != 0:
+                    A[k], A[i] = A[i], A[k]
+                    sign = -sign
+                    break
+            else:
+                return 0
+        for i in range(k + 1, n):
+            for j in range(k + 1, n):
+                A[i][j] = (A[i][j] * A[k][k] - A[i][k] * A[k][j]) // prev
+            A[i][k] = 0
+        prev = A[k][k]
+    return sign * A[n - 1][n - 1]
+
+
+def _minor(A: list[list[Int]], i: int, j: int) -> list[list[Int]]:
+    return [[A[r][c] for c in range(len(A)) if c != j]
+            for r in range(len(A)) if r != i]
+
+
+def adjugate(M) -> np.ndarray:
+    """adj(M) with M @ adj(M) = det(M) * I, exact."""
+    A = as_pyint_matrix(M)
+    n = len(A)
+    if n == 1:
+        return np.array([[1]], dtype=np.int64)
+    adj = [[0] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(n):
+            c = det(_minor(A, i, j))
+            adj[j][i] = (-c if (i + j) % 2 else c)  # note transpose
+    return as_np(adj)
+
+
+# ---------------------------------------------------------------------------
+# Hermite normal form (column operations → upper triangular)
+# ---------------------------------------------------------------------------
+
+def hermite_normal_form(M) -> np.ndarray:
+    """Column-style HNF: returns H upper-triangular with positive diagonal and
+    0 ≤ H[i, j] < H[i, i] for j > i, such that H = M · U for unimodular U.
+
+    G(H) ≅ G(M) (right-equivalent matrices generate isomorphic graphs)."""
+    A = as_pyint_matrix(M)
+    n = len(A)
+    # process rows bottom-up; columns 0..i are the active set for row i
+    for i in range(n - 1, -1, -1):
+        # gcd-reduce row i over active columns 0..i until one nonzero remains
+        while True:
+            nz = [j for j in range(i + 1) if A[i][j] != 0]
+            if not nz:
+                raise ValueError("singular matrix has no HNF for our purposes")
+            if len(nz) == 1:
+                p = nz[0]
+                break
+            # pick pivot column with min |A[i][j]|, reduce the others mod it
+            p = min(nz, key=lambda j: abs(A[i][j]))
+            for j in nz:
+                if j == p:
+                    continue
+                q = A[i][j] // A[i][p]  # floor division keeps remainders small
+                if q:
+                    for r in range(n):
+                        A[r][j] -= q * A[r][p]
+        # move pivot column into position i
+        if p != i:
+            for r in range(n):
+                A[r][p], A[r][i] = A[r][i], A[r][p]
+        # make diagonal positive
+        if A[i][i] < 0:
+            for r in range(n):
+                A[r][i] = -A[r][i]
+        # reduce columns to the right of i so 0 <= A[i][j] < A[i][i]
+        for j in range(i + 1, n):
+            q = A[i][j] // A[i][i]
+            if q:
+                for r in range(n):
+                    A[r][j] -= q * A[r][i]
+    return as_np(A)
+
+
+def is_unimodular(U) -> bool:
+    return abs(det(U)) == 1
+
+
+def right_equivalent(M1, M2) -> bool:
+    """M1 ≅ M2 ⇔ same Hermite normal form (Definition 6)."""
+    return bool(np.array_equal(hermite_normal_form(M1), hermite_normal_form(M2)))
+
+
+# ---------------------------------------------------------------------------
+# Smith normal form (group invariants of Z^n / M Z^n)
+# ---------------------------------------------------------------------------
+
+def smith_invariants(M) -> tuple[Int, ...]:
+    """Invariant factors d_1 | d_2 | ... | d_n of Z^n / M Z^n (all positive)."""
+    A = as_pyint_matrix(M)
+    n = len(A)
+    res: list[Int] = []
+    t = 0
+    while t < n:
+        # find a nonzero pivot in A[t:, t:]
+        piv = None
+        for i in range(t, n):
+            for j in range(t, n):
+                if A[i][j] != 0:
+                    piv = (i, j)
+                    break
+            if piv:
+                break
+        if piv is None:
+            raise ValueError("singular matrix")
+        while True:
+            # move smallest nonzero entry of the submatrix to (t, t)
+            bi, bj, bv = t, t, 0
+            for i in range(t, n):
+                for j in range(t, n):
+                    if A[i][j] != 0 and (bv == 0 or abs(A[i][j]) < bv):
+                        bi, bj, bv = i, j, abs(A[i][j])
+            A[t], A[bi] = A[bi], A[t]
+            for r in range(n):
+                A[r][t], A[r][bj] = A[r][bj], A[r][t]
+            done = True
+            for i in range(t + 1, n):
+                q = A[i][t] // A[t][t]
+                if A[i][t] % A[t][t]:
+                    done = False
+                for j in range(t, n):
+                    A[i][j] -= q * A[t][j]
+            for j in range(t + 1, n):
+                q = A[t][j] // A[t][t]
+                if A[t][j] % A[t][t]:
+                    done = False
+                for i in range(t, n):
+                    A[i][j] -= q * A[i][t]
+            if done:
+                # ensure pivot divides every remaining entry
+                ok = True
+                for i in range(t + 1, n):
+                    for j in range(t + 1, n):
+                        if A[i][j] % A[t][t]:
+                            # add row i to row t and restart reduction
+                            for c in range(t, n):
+                                A[t][c] += A[i][c]
+                            ok = False
+                            break
+                    if not ok:
+                        break
+                if ok:
+                    break
+        res.append(abs(A[t][t]))
+        t += 1
+    res.sort()
+    return tuple(res)
+
+
+# ---------------------------------------------------------------------------
+# residues / labelling
+# ---------------------------------------------------------------------------
+
+def canonical_label(v, H) -> np.ndarray:
+    """Reduce vector(s) v modulo M into the Hermite labelling box of H=HNF(M).
+
+    v: (..., n) int array.  Returns array of the same shape with
+    0 ≤ out[..., i] < H[i, i].  Vectorised (numpy)."""
+    H = np.asarray(H, dtype=np.int64)
+    n = H.shape[0]
+    out = np.array(v, dtype=np.int64, copy=True)
+    vec = out.reshape(-1, n)
+    for i in range(n - 1, -1, -1):
+        q = vec[:, i] // H[i, i]          # floor division → remainder in [0, H_ii)
+        vec -= q[:, None] * H[:, i][None, :]
+    return out
+
+
+def element_order(x, M) -> Int:
+    """ord(x) in Z^n/MZ^n  =  det/gcd(det, gcd(det·M⁻¹·x))   (paper §2)."""
+    d = abs(det(M))
+    adjM = adjugate(M)
+    s = np.sign(det(M))
+    w = (s * adjM) @ np.asarray(x, dtype=np.int64)   # = det·M⁻¹·x (up to sign fix)
+    g = 0
+    for c in w.tolist():
+        g = np.gcd(g, abs(int(c)))
+    g = int(np.gcd(d, g))
+    return d // g if g else 1
+
+
+def gcd_vec(v) -> Int:
+    g = 0
+    for c in np.asarray(v).ravel().tolist():
+        g = int(np.gcd(g, abs(int(c))))
+    return g

@@ -1,0 +1,222 @@
+"""Minimal routing in lattice graphs (paper §5).
+
+Implements:
+  * Algorithm 3 — routing in RTT(a)                (`route_rtt`)
+  * Algorithm 2 — routing in FCC(a)                (`route_fcc`)
+  * Algorithm 4 — routing in BCC(a)                (`route_bcc`)
+  * Algorithm 1 — generic hierarchical routing     (`HierarchicalRouter`)
+  * a brute-force CVP oracle for tests             (`minimal_record_bruteforce`)
+
+All routers are batched: they take (..., n) integer arrays of differences
+v = v_d − v_s and return minimum-Minkowski-norm routing records r with
+r ≡ v (mod M).  Component r_i is the signed hop count in dimension i.
+
+NOTE on the paper's Algorithm 4: as printed it contains two typos
+(`ŷ := x + a(z<0)` should read `ŷ := y + a(z<0)`, and `y' := x̂ + 2a(ŷ<0)…`
+should read `y' := ŷ + …`).  We implement the corrected version, which is
+validated to be minimal against a BFS oracle in tests/test_routing.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import intmat
+from .lattice import LatticeGraph
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def norm1(r) -> np.ndarray:
+    """Minkowski norm |r| = Σ|r_i| (path length of a record)."""
+    return np.abs(np.asarray(r)).sum(axis=-1)
+
+
+def route_ring(a: int, d, rng: np.random.Generator | None = None) -> np.ndarray:
+    """Signed shortest hop count in a ring of size a.  For even a the
+    half-way distance has two minimal directions; ties are broken toward +
+    unless an rng is given (Remark 30: randomize to balance link usage)."""
+    d = np.asarray(d, dtype=np.int64)
+    r = np.mod(d, a)
+    r = np.where(r > a // 2, r - a, r)
+    if rng is not None and a % 2 == 0:
+        flip = (r == a // 2) & (rng.random(r.shape) < 0.5)
+        r = np.where(flip, r - a, r)
+    return r
+
+
+def route_torus(sides, v, rng: np.random.Generator | None = None) -> np.ndarray:
+    """Per-dimension ring routing (DOR components) in T(sides)."""
+    v = np.asarray(v, dtype=np.int64)
+    out = np.empty_like(v)
+    for i, a in enumerate(sides):
+        out[..., i] = route_ring(int(a), v[..., i], rng)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: RTT(a) = G([[2a, a], [0, a]])
+# ---------------------------------------------------------------------------
+
+def route_rtt(a: int, v) -> np.ndarray:
+    """Minimal routing record in the rectangular twisted torus RTT(a)."""
+    v = np.asarray(v, dtype=np.int64)
+    x, y = v[..., 0], v[..., 1]
+    p = np.mod(x + y + a, 2 * a)
+    q = np.mod(y - x + a, 2 * a)
+    xo = (p - q) // 2
+    yo = (p + q - 2 * a) // 2
+    return np.stack([xo, yo], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: FCC(a) = G([[2a, a, a], [0, a, 0], [0, 0, a]])
+# ---------------------------------------------------------------------------
+
+def route_fcc(a: int, v, rng: np.random.Generator | None = None) -> np.ndarray:
+    """Minimal routing record in FCC(a) via two RTT(a) sub-routes."""
+    v = np.asarray(v, dtype=np.int64)
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    yneg, zneg = y < 0, z < 0
+    y1 = y + a * yneg
+    z1 = z + a * zneg
+    xh = x + a * (yneg ^ zneg)
+    x1 = xh + 2 * a * (xh < 0) - 2 * a * (xh >= 2 * a)
+    # (x1, y1, z1) is now in the labelling box L
+    xy = np.stack([x1, y1], axis=-1)
+    r1 = route_rtt(a, xy)                                  # from (0, 0)
+    r2 = route_rtt(a, xy - np.array([a, 0], dtype=np.int64))  # from (a, 0)
+    c1 = np.concatenate([r1, z1[..., None]], axis=-1)
+    c2 = np.concatenate([r2, (z1 - a)[..., None]], axis=-1)
+    return _pick_min(c1, c2, rng)
+
+
+def _pick_min(c1: np.ndarray, c2: np.ndarray,
+              rng: np.random.Generator | None) -> np.ndarray:
+    """Choose the lower-norm record; break exact ties randomly when an rng is
+    supplied (Remark 30) to balance path usage in edge-symmetric graphs."""
+    n1, n2 = norm1(c1), norm1(c2)
+    pick = n2 < n1
+    if rng is not None:
+        tie = (n2 == n1) & (rng.random(n1.shape) < 0.5)
+        pick = pick | tie
+    return np.where(pick[..., None], c2, c1)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4 (corrected): BCC(a) = G([[2a, 0, a], [0, 2a, a], [0, 0, a]])
+# ---------------------------------------------------------------------------
+
+def route_bcc(a: int, v, rng: np.random.Generator | None = None) -> np.ndarray:
+    """Minimal routing record in BCC(a) via two T(2a, 2a) sub-routes."""
+    v = np.asarray(v, dtype=np.int64)
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    zneg = z < 0
+    z1 = z + a * zneg
+    xh = x + a * zneg
+    yh = y + a * zneg
+    x1 = xh + 2 * a * (xh < 0) - 2 * a * (xh >= 2 * a)
+    y1 = yh + 2 * a * (yh < 0) - 2 * a * (yh >= 2 * a)
+    xy = np.stack([x1, y1], axis=-1)
+    r1 = route_torus((2 * a, 2 * a), xy, rng)
+    r2 = route_torus((2 * a, 2 * a), xy - np.array([a, a], dtype=np.int64), rng)
+    c1 = np.concatenate([r1, z1[..., None]], axis=-1)
+    c2 = np.concatenate([r2, (z1 - a)[..., None]], axis=-1)
+    return _pick_min(c1, c2, rng)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: generic hierarchical routing
+# ---------------------------------------------------------------------------
+
+class HierarchicalRouter:
+    """Minimal routing for *any* lattice graph G(M) (Theorem 29).
+
+    Routing in G(M) with M ≅ [[B, c], [0, a]] is done by routing along the
+    cycle generated by e_n to each of the ord(e_n)/a intersection vertices
+    lying in the destination copy of G(B), plus routing inside that copy.
+    The recursion bottoms out at rings / diagonal (torus) blocks.
+    """
+
+    def __init__(self, M):
+        self.H = intmat.hermite_normal_form(M)
+        self.n = self.H.shape[0]
+        self.diag = np.diagonal(self.H).copy()
+        self._is_diagonal = bool(
+            np.array_equal(self.H, np.diag(self.diag)))
+        if not self._is_diagonal and self.n > 1:
+            self.sub = HierarchicalRouter(self.H[: self.n - 1, : self.n - 1])
+            a = int(self.diag[self.n - 1])
+            e_n = np.zeros(self.n, dtype=np.int64)
+            e_n[self.n - 1] = 1
+            self.ord_n = intmat.element_order(e_n, self.H)
+            ks = np.arange(self.ord_n, dtype=np.int64)
+            cyc = intmat.canonical_label(
+                ks[:, None] * e_n[None, :], self.H)       # (ord, n)
+            self.cycle_labels = cyc
+            # group cycle positions by which copy (last label component) they hit
+            per_copy = self.ord_n // a
+            table = np.zeros((a, per_copy), dtype=np.int64)
+            fill = np.zeros(a, dtype=np.int64)
+            for k in range(self.ord_n):
+                y = int(cyc[k, self.n - 1])
+                table[y, fill[y]] = k
+                fill[y] += 1
+            assert (fill == per_copy).all()
+            self.copy_table = table
+
+    def __call__(self, v) -> np.ndarray:
+        """v: (..., n) integer differences → minimal records (..., n)."""
+        v = np.asarray(v, dtype=np.int64)
+        if self._is_diagonal:
+            return route_torus(self.diag.tolist(), v)
+        if self.n == 1:
+            return route_ring(int(self.diag[0]), v[..., 0])[..., None]
+        shape = v.shape
+        W = intmat.canonical_label(v.reshape(-1, self.n), self.H)
+        y = W[:, self.n - 1]
+        best_r = None
+        best_norm = None
+        for slot in range(self.copy_table.shape[1]):
+            k = self.copy_table[y, slot]                  # (B,)
+            c = self.cycle_labels[k]                      # (B, n)
+            rproj = self.sub(W[:, : self.n - 1] - c[:, : self.n - 1])
+            for kk in (k, k - self.ord_n):
+                r = np.concatenate([rproj, kk[:, None]], axis=-1)
+                nrm = norm1(r)
+                if best_r is None:
+                    best_r, best_norm = r, nrm
+                else:
+                    take = (nrm < best_norm)[:, None]
+                    best_r = np.where(take, r, best_r)
+                    best_norm = np.minimum(best_norm, nrm)
+        return best_r.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracle (exact CVP in the L1 metric)
+# ---------------------------------------------------------------------------
+
+def minimal_record_bruteforce(M, v, box: int | None = None) -> np.ndarray:
+    """argmin_{r ≡ v (mod M)} |r|  by enumerating r = v − M·u over a box of
+    lattice coefficients u.  Exact when the box is large enough; the default
+    bound is derived from ‖M⁻¹‖ and |v| so that every record with
+    |r| ≤ |v| is covered (u = 0 always gives the candidate r = v)."""
+    M = intmat.as_np(M)
+    n = M.shape[0]
+    v = np.asarray(v, dtype=np.int64)
+    single = v.ndim == 1
+    V = v.reshape(-1, n)
+    if box is None:
+        inv_norm = np.abs(np.linalg.inv(M.astype(np.float64))).sum(axis=1).max()
+        box = int(np.ceil(inv_norm * 2 * np.abs(V).sum(axis=-1).max())) + 1
+        box = min(box, 6)  # diameters of test graphs keep coefficients tiny
+    rng = np.arange(-box, box + 1)
+    grids = np.meshgrid(*([rng] * n), indexing="ij")
+    U = np.stack([g.ravel() for g in grids], axis=-1)     # (K, n)
+    cand = V[:, None, :] - U[None, :, :] @ M.T            # (B, K, n)
+    norms = np.abs(cand).sum(axis=-1)
+    idx = norms.argmin(axis=1)
+    out = cand[np.arange(V.shape[0]), idx]
+    return out[0] if single else out.reshape(v.shape)

@@ -1,0 +1,303 @@
+"""Cycle-level interconnection-network simulator (paper §6.2), JAX-vectorised.
+
+Reproduces the INSEE experiments comparing 4D-FCC(8) vs T(16,8,8,8) and
+4D-BCC(4) vs T(8,8,8,4) under uniform / antipodal / central-symmetric /
+random-pairings traffic.
+
+Router model (simplifications vs INSEE noted in DESIGN.md §10):
+  * packet = 16 phits; a link moves one packet per 16-cycle slot
+    (virtual cut-through at packet granularity),
+  * per-input-port queues of `queue` packets (paper Table 3: 4),
+  * DOR over minimal routing records (Algorithms 1–4) with random
+    tie-breaking between the two equal-norm records r and −route(−v)
+    (Remark 30),
+  * bubble flow control: entering a dimension ring (injection or turn)
+    requires 2 free slots in the target queue, continuing in-dimension
+    requires 1 — the paper's deadlock-avoidance rule,
+  * random arbitration per output link; in-transit traffic beats injection
+    (the BlueGene congestion-control behaviour noted in §6.2).
+
+Throughput is reported in phits/cycle/node = packets/slot/node.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lattice import LatticeGraph
+from .routing import HierarchicalRouter
+
+PACKET_PHITS = 16
+
+
+# ---------------------------------------------------------------------------
+# static tables
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SimTables:
+    n: int
+    N: int
+    neighbors: np.ndarray        # (N, 2n) — col 2i: +e_i, 2i+1: −e_i
+    records_a: np.ndarray        # (N, n) minimal record per delta index
+    records_b: np.ndarray        # (N, n) alternate minimal record (= −route(−v))
+    labels: np.ndarray           # (N, n)
+    hermite: np.ndarray          # (n, n)
+    strides: np.ndarray          # (n,)
+
+
+def build_tables(g: LatticeGraph, seed: int = 0) -> SimTables:
+    router = HierarchicalRouter(g.matrix)
+    labels = g.labels
+    rec_a = router(labels)
+    # −route(−v) is also minimal for v and picks the *other* option on every
+    # direction tie (half-ring hops, twin cycle intersections) — per-packet
+    # coin between the two implements Remark 30's randomized tie-breaking.
+    rec_b = -router(-labels)
+    return SimTables(
+        n=g.n, N=g.order, neighbors=g.neighbor_indices.astype(np.int32),
+        records_a=rec_a.astype(np.int32), records_b=rec_b.astype(np.int32),
+        labels=labels.astype(np.int32),
+        hermite=g.hermite.astype(np.int32),
+        strides=g.strides.astype(np.int32))
+
+
+def _delta_idx(labels_src, labels_dst, hermite, strides):
+    """Vectorised canonical reduction of (dst − src) into a node index."""
+    n = hermite.shape[0]
+    v = labels_dst - labels_src
+    for i in range(n - 1, -1, -1):
+        q = jnp.floor_divide(v[..., i], hermite[i, i])
+        v = v - q[..., None] * hermite[:, i]
+    return (v * strides).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# traffic patterns
+# ---------------------------------------------------------------------------
+
+def pattern_table(g: LatticeGraph, pattern: str, seed: int = 0) -> np.ndarray | None:
+    """Fixed destination table (N,) for deterministic patterns; None for
+    uniform (destination sampled per packet)."""
+    N = g.order
+    if pattern == "uniform":
+        return None
+    if pattern == "antipodal":
+        d = g.distances_from_origin
+        far = g.labels[int(np.argmax(d))]
+        dst = g.label_to_index(g.labels + far)
+        return dst.astype(np.int32)
+    if pattern == "centralsymmetric":
+        dst = g.label_to_index(-g.labels)
+        return dst.astype(np.int32)
+    if pattern == "randompairings":
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(N)
+        dst = np.empty(N, dtype=np.int32)
+        dst[perm[0::2]] = perm[1::2]
+        dst[perm[1::2]] = perm[0::2]
+        return dst
+    raise ValueError(pattern)
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SimResult:
+    accepted_load: float      # phits / cycle / node
+    avg_latency_cycles: float
+    delivered: int
+    injected: int
+    slots: int
+
+
+_RUNNER_CACHE: dict = {}
+
+
+def simulate(g: LatticeGraph, pattern: str, load: float, *,
+             slots: int = 512, warmup: int = 128, queue: int = 4,
+             seed: int = 0, tables: SimTables | None = None) -> SimResult:
+    """Run `slots` packet-slots (16 cycles each) at offered load `load`
+    (phits/cycle/node) and measure accepted throughput + latency."""
+    t = tables or build_tables(g, seed)
+    n, N = t.n, t.N
+    P = 2 * n
+    Q = queue
+
+    nbr = jnp.asarray(t.neighbors)
+    rec_a = jnp.asarray(t.records_a)
+    rec_b = jnp.asarray(t.records_b)
+    labels = jnp.asarray(t.labels)
+    hermite = jnp.asarray(t.hermite)
+    strides = jnp.asarray(t.strides)
+    dst_np = pattern_table(g, pattern, seed)
+    fixed_dst = dst_np is not None
+    dst_table = jnp.asarray(dst_np if fixed_dst else np.zeros(N, np.int32))
+    opp = [p ^ 1 for p in range(P)]
+
+    def next_port(rec):
+        """DOR: first nonzero dimension of the record → output port."""
+        nz = jnp.abs(rec) > 0
+        dim = jnp.argmax(nz, axis=-1)
+        sgn = jnp.take_along_axis(rec, dim[..., None], -1)[..., 0]
+        return 2 * dim + (sgn < 0), dim, sgn
+
+    def slot_step(state, key):
+        dst, rec, birth = state["dst"], state["rec"], state["birth"]
+        slot = state["slot"]
+        occ = dst >= 0                                     # (N, P, Q)
+        port, dim, sgn = next_port(rec)                    # (N, P, Q)
+        port = jnp.where(occ, port, -1)
+
+        # ---- arbitration: one winner packet per (node, out-port) ----
+        rand = jax.random.uniform(jax.random.fold_in(key, 1), (N, P, Q))
+        flatscore = jnp.where(port[..., None] == jnp.arange(P), rand[..., None], -1.0)
+        flat = flatscore.reshape(N, P * Q, P)
+        widx = jnp.argmax(flat, axis=1)                    # (N, P) flat pq index
+        whas = jnp.take_along_axis(flat, widx[:, None, :], axis=1)[:, 0, :] >= 0.0
+
+        def pick(arr):
+            """Gather winner-packet fields per (node, out-port)."""
+            flat_arr = arr.reshape(N, P * Q, *arr.shape[3:])
+            idx = widx
+            if arr.ndim > 3:
+                idx = widx[..., None]
+            take = jnp.take_along_axis(
+                flat_arr, idx[:, :, None] if arr.ndim == 3 else idx[:, :, None, :] if False else idx[:, :, None], axis=1)
+            return take
+
+        # simpler explicit gathers
+        flat_dst = dst.reshape(N, P * Q)
+        flat_rec = rec.reshape(N, P * Q, n)
+        flat_birth = birth.reshape(N, P * Q)
+        rows = jnp.arange(N)[:, None]
+        w_dst = flat_dst[rows, widx]                       # (N, P)
+        w_rec = flat_rec[rows, widx]                       # (N, P, n)
+        w_birth = flat_birth[rows, widx]
+        w_dim = widx  # placeholder; recompute below
+        w_port_dim = (jnp.arange(P) // 2)[None, :].repeat(N, 0)
+
+        # the queue (= dimension ring) each winner currently occupies
+        w_src_port = widx // Q                             # (N, P)
+
+        # ---- per-link acceptance (each in-queue receives ≤ 1 packet) ----
+        delivered = jnp.int32(0)
+        lat_sum = jnp.int32(0)
+        new_dst, new_rec, new_birth = dst, rec, birth
+        for p in range(P):
+            d_p = p // 2
+            s_p = 1 - 2 * (p % 2)                          # +1 / −1
+            u = nbr[:, opp[p]]                             # sender for recv w
+            has = whas[u, p]
+            pk_dst = w_dst[u, p]
+            pk_rec = w_rec[u, p]
+            pk_birth = w_birth[u, p]
+            pk_src_port = w_src_port[u, p]
+            rec_after = pk_rec.at[:, d_p].add(-s_p)
+            done = jnp.abs(rec_after).sum(-1) == 0
+            will_deliver = has & done
+            turning = pk_src_port != p                     # entering this ring
+            freeq = (new_dst[:, p] < 0).sum(axis=1)
+            ok = has & ~done & (freeq >= jnp.where(turning, 2, 1))
+            moved = will_deliver | ok
+            # stats
+            delivered += will_deliver.sum()
+            lat_sum += jnp.where(will_deliver, slot + 1 - pk_birth, 0).sum()
+            # clear winner slot at sender
+            clr = jnp.where(moved, -1, flat_dst[jnp.arange(N), widx[:, p]])
+            sel = widx[:, p]
+            fd = new_dst.reshape(N, P * Q)
+            fd = fd.at[u, sel[u]].set(jnp.where(moved, -1, fd[u, sel[u]]))
+            new_dst = fd.reshape(N, P, Q)
+            # write into receiver queue p (first free slot)
+            slot_idx = jnp.argmax(new_dst[:, p] < 0, axis=1)
+            r_ = jnp.arange(N)
+            new_dst = new_dst.at[r_, p, slot_idx].set(
+                jnp.where(ok, pk_dst, new_dst[r_, p, slot_idx]))
+            new_rec = new_rec.at[r_, p, slot_idx].set(
+                jnp.where(ok[:, None], rec_after, new_rec[r_, p, slot_idx]))
+            new_birth = new_birth.at[r_, p, slot_idx].set(
+                jnp.where(ok, pk_birth, new_birth[r_, p, slot_idx]))
+
+        # ---- injection (after transit: in-flight traffic has priority) ----
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
+        want_new = jax.random.uniform(k1, (N,)) < state["load"]
+        want = want_new | (state["backlog"] > 0)
+        if fixed_dst:
+            d = state["dst_table"]
+        else:
+            d = jax.random.randint(k2, (N,), 0, N - 1)
+            d = jnp.where(d >= jnp.arange(N), d + 1, d)
+        di = _delta_idx(labels[jnp.arange(N)], labels[d], hermite, strides)
+        coin = jax.random.uniform(k3, (N,)) < 0.5
+        r = jnp.where(coin[:, None], rec_a[di], rec_b[di])
+        inj_port, _, _ = next_port(r[:, None, :])
+        inj_port = inj_port[:, 0]
+        freeq = jnp.take_along_axis(
+            (new_dst < 0).sum(axis=2), inj_port[:, None], axis=1)[:, 0]
+        can = want & (freeq >= 2) & (jnp.abs(r).sum(-1) > 0)
+        r_ = jnp.arange(N)
+        slot_idx = jnp.argmax(new_dst[r_, inj_port] < 0, axis=1)
+        new_dst = new_dst.at[r_, inj_port, slot_idx].set(
+            jnp.where(can, d, new_dst[r_, inj_port, slot_idx]))
+        new_rec = new_rec.at[r_, inj_port, slot_idx].set(
+            jnp.where(can[:, None], r, new_rec[r_, inj_port, slot_idx]))
+        new_birth = new_birth.at[r_, inj_port, slot_idx].set(
+            jnp.where(can, slot, new_birth[r_, inj_port, slot_idx]))
+        backlog = jnp.clip(state["backlog"] + want_new - can, 0, 1 << 30)
+
+        counted = slot >= warmup
+        new_state = dict(
+            state, dst=new_dst, rec=new_rec, birth=new_birth,
+            backlog=backlog, slot=slot + 1,
+            delivered=state["delivered"] + jnp.where(counted, delivered, 0),
+            lat_sum=state["lat_sum"] + jnp.where(counted, lat_sum, 0),
+            injected=state["injected"] + jnp.where(counted, can.sum(), 0))
+        return new_state, None
+
+    state = dict(
+        load=jnp.float32(load),
+        dst_table=dst_table,
+        dst=jnp.full((N, P, Q), -1, dtype=jnp.int32),
+        rec=jnp.zeros((N, P, Q, n), dtype=jnp.int32),
+        birth=jnp.zeros((N, P, Q), dtype=jnp.int32),
+        backlog=jnp.zeros((N,), dtype=jnp.int32),
+        slot=jnp.int32(0),
+        delivered=jnp.int32(0),
+        lat_sum=jnp.int32(0),
+        injected=jnp.int32(0))
+
+    cache_key = (t.neighbors.tobytes(), fixed_dst, slots, warmup, Q)
+    if cache_key not in _RUNNER_CACHE:
+        _RUNNER_CACHE[cache_key] = jax.jit(
+            lambda st, ks: jax.lax.scan(slot_step, st, ks)[0])
+    keys = jax.random.split(jax.random.PRNGKey(seed + 17), slots)
+    out = _RUNNER_CACHE[cache_key](state, keys)
+    measured = slots - warmup
+    delivered = int(out["delivered"])
+    return SimResult(
+        accepted_load=delivered / max(measured * N, 1),
+        avg_latency_cycles=PACKET_PHITS * float(out["lat_sum"]) / max(delivered, 1),
+        delivered=delivered,
+        injected=int(out["injected"]),
+        slots=slots)
+
+
+def throughput_curve(g: LatticeGraph, pattern: str, loads, **kw):
+    """Accepted-vs-offered load curve (one build of the static tables)."""
+    t = kw.pop("tables", None) or build_tables(g, kw.pop("seed", 0))
+    return [simulate(g, pattern, float(l), tables=t, **kw) for l in loads]
+
+
+def peak_throughput(g: LatticeGraph, pattern: str, loads=None, **kw):
+    """Max accepted load over an offered-load sweep (the paper's
+    'throughput peak')."""
+    loads = loads if loads is not None else np.linspace(0.1, 1.0, 10)
+    res = throughput_curve(g, pattern, loads, **kw)
+    best = max(res, key=lambda r: r.accepted_load)
+    return best, res

@@ -1,0 +1,87 @@
+"""Symmetry analysis of lattice graphs (paper §3 + Appendix A).
+
+A lattice graph G(M) is *linearly symmetric* (Definition 37) when for every i
+there is a linear automorphism φ fixing 0 with φ(e_1) = ±e_i.  By Lemma 35
+linear automorphisms fixing 0 are signed permutation matrices P, and by
+Lemma 36 P is an automorphism iff M⁻¹PM is integral.
+"""
+from __future__ import annotations
+
+from itertools import permutations, product
+
+import numpy as np
+
+from . import intmat
+
+
+def signed_permutation_matrices(n: int):
+    """All n!·2^n signed permutation matrices (Definition 34)."""
+    eye = np.eye(n, dtype=np.int64)
+    for perm in permutations(range(n)):
+        base = eye[list(perm)].T  # column j holds e_{perm[j]}
+        for signs in product((1, -1), repeat=n):
+            yield base * np.array(signs, dtype=np.int64)[None, :]
+
+
+def is_linear_automorphism(P, M) -> bool:
+    """Lemma 36: φ(x)=Px is an automorphism of G(M) iff M⁻¹PM ∈ Z^{n×n}."""
+    M = intmat.as_np(M)
+    P = intmat.as_np(P)
+    d = intmat.det(M)
+    adj = intmat.adjugate(M)
+    prod_ = adj.astype(object) @ P.astype(object) @ M.astype(object)
+    return bool(np.all(np.vectorize(lambda x: x % d == 0)(prod_)))
+
+
+def linear_stabilizer(M) -> list[np.ndarray]:
+    """All signed-permutation automorphisms of G(M) (= LAut(G(M), 0) by
+    Lemma 35)."""
+    M = intmat.as_np(M)
+    n = M.shape[0]
+    return [P for P in signed_permutation_matrices(n)
+            if is_linear_automorphism(P, M)]
+
+
+def is_linearly_symmetric(M) -> bool:
+    """Definition 37: ∀i ∃φ ∈ LAut(G(M),0) with φ(e_1) = ±e_i.
+
+    Checked over the group *generated* by the signed-permutation
+    automorphisms; since signed permutations form a finite group closed under
+    composition and every automorphism here is a signed permutation, checking
+    the stabilizer set directly is exhaustive."""
+    M = intmat.as_np(M)
+    n = M.shape[0]
+    hit = [False] * n
+    for P in linear_stabilizer(M):
+        img = P[:, 0]  # φ(e_1)
+        nz = np.nonzero(img)[0]
+        if len(nz) == 1 and abs(img[nz[0]]) == 1:
+            hit[int(nz[0])] = True
+    return all(hit)
+
+
+def theorem12_matrix_first_family(a: int, b: int, c: int) -> np.ndarray:
+    """M1 = circulant [[a,c,b],[b,a,c],[c,b,a]] — always symmetric (Thm 12)."""
+    return np.array([[a, c, b], [b, a, c], [c, b, a]], dtype=np.int64)
+
+
+def theorem12_matrix_second_family(a: int, b: int, c: int) -> np.ndarray:
+    """M'1 = [[a,b,c],[a,c,−b−c],[a,−b−c,b]] — always symmetric (Thm 47)."""
+    return np.array([[a, b, c], [a, c, -b - c], [a, -b - c, b]], dtype=np.int64)
+
+
+def bcc_lift_is_never_symmetric(a: int) -> bool:
+    """Computational check of Theorem 20 for a given a: no Hermite-form lift
+      L = [[2a,0,a,x],[0,2a,a,y],[0,0,a,z],[0,0,0,1]]
+    (t=1 wlog per the proof) is linearly symmetric."""
+    for x in range(2 * a):
+        for y in range(2 * a):
+            for z in range(a):
+                L = np.array(
+                    [[2 * a, 0, a, x],
+                     [0, 2 * a, a, y],
+                     [0, 0, a, z],
+                     [0, 0, 0, 1]], dtype=np.int64)
+                if is_linearly_symmetric(L):
+                    return False
+    return True

@@ -1,0 +1,70 @@
+"""Throughput bounds under uniform traffic (paper §3.4).
+
+For edge-symmetric graphs the uniform-traffic throughput (phits/cycle/node)
+is bounded by Δ/k̄.  For edge-asymmetric mixed-radix tori the binding
+constraint is the most loaded dimension: Δ/(n·k̄_max), where k̄_max is the
+largest per-dimension average distance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .distances import (bcc_average_distance, fcc_average_distance,
+                        pc_average_distance)
+from .lattice import LatticeGraph
+
+
+def symmetric_throughput_bound(g: LatticeGraph) -> float:
+    """Δ/k̄ for edge-symmetric lattice graphs."""
+    return g.degree / g.average_distance
+
+
+def ring_average_distance(s: int) -> float:
+    return (s * s // 4 if s % 2 == 0 else (s * s - 1) // 4) / s
+
+
+def mixed_torus_throughput_bound(*sides: int) -> float:
+    """Δ/(n·k̄_max) (inferred from [7] as quoted in §3.4)."""
+    n = len(sides)
+    k_max = max(ring_average_distance(s) for s in sides)
+    return (2 * n) / (n * k_max)
+
+
+def fcc_throughput_bound(a: int) -> float:
+    """48/(7a) asymptotically (§3.4); exact via the closed-form k̄."""
+    return 6.0 / fcc_average_distance(a)
+
+
+def bcc_throughput_bound(a: int) -> float:
+    """192/(35a) asymptotically (§3.4)."""
+    return 6.0 / bcc_average_distance(a)
+
+
+def pc_throughput_bound(a: int) -> float:
+    return 6.0 / pc_average_distance(a)
+
+
+def channel_load(g: LatticeGraph, records: np.ndarray) -> np.ndarray:
+    """Directional link loads (N, 2n) implied by a set of routing records under
+    one-packet-per-node uniform traffic, assuming DOR traversal order.
+
+    records: (P, n) minimal routing records for P source→dest pairs, sources
+    drawn uniformly.  Returns expected phit-crossings per directional link per
+    injected packet; max load determines saturation throughput 1/max."""
+    n = g.n
+    N = g.order
+    P = records.shape[0]
+    load = np.zeros((N, 2 * n), dtype=np.float64)
+    # DOR: dimension 0 hops first, then 1, ...
+    srcs = np.random.default_rng(0).integers(0, N, size=P)
+    pos = g.labels[srcs].astype(np.int64).copy()
+    for dim in range(n):
+        r = records[:, dim]
+        sgn = np.sign(r).astype(np.int64)
+        direction = (sgn < 0).astype(np.int64)
+        for s in range(int(np.abs(r).max(initial=0))):
+            active = np.abs(r) > s
+            idx = g.label_to_index(pos[active])
+            np.add.at(load, (idx, 2 * dim + direction[active]), 1.0)
+            pos[active, dim] += sgn[active]
+    return load * (N / P)

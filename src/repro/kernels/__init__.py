@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots:
+flash attention (prefill/train), decode attention (long-KV serve),
+SSD intra-chunk (Mamba2), fused RMSNorm.  Each has a pure-jnp oracle in
+ref.py; ops.py holds the jit'd model-facing wrappers."""
+from . import ops, ref

@@ -1,0 +1,111 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These adapt model-layout tensors (GQA heads, chunked SSD) to kernel layouts,
+fall back to interpret mode off-TPU (this container is CPU-only; TPU is the
+target), and keep the jnp oracles in repro.kernels.ref as ground truth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import rmsnorm as _rms
+from . import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) — GQA folded by repeating KV."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = _fa.flash_attention(
+        fold(q), fold(k), fold(v), causal=causal,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu())
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, position, *, block_k: int = 512):
+    """q: (B, 1, H, hd); caches: (B, S_max, KV, hd); position scalar int32."""
+    B, one, H, hd = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    if KV != H:
+        k_cache = jnp.repeat(k_cache, H // KV, axis=2)
+        v_cache = jnp.repeat(v_cache, H // KV, axis=2)
+    qf = jnp.broadcast_to(
+        q.transpose(0, 2, 1, 3).reshape(B * H, 1, hd),
+        (B * H, _dec.Q_PAD, hd))                      # pad query to 8 rows
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = _dec.decode_attention(qf, kf, vf, position, block_k=block_k,
+                                interpret=not _on_tpu())
+    return out[:, :1, :].reshape(B, H, 1, hd).transpose(0, 2, 1, 3) \
+        .reshape(B, 1, H * hd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(xdt, Adt, Bm, Cm, *, chunk: int = 256):
+    """Full SSD using the intra-chunk Pallas kernel + XLA inter-chunk scan.
+
+    xdt: (B, S, H, P); Adt: (B, S, H); Bm, Cm: (B, S, G, N).
+    Returns y (B, S, H, P) and final state (B, H, P, N)."""
+    B, S, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if S % chunk:
+        pad = chunk - S % chunk
+        padt = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, final = ssd(padt(xdt), padt(Adt), padt(Bm), padt(Cm), chunk=chunk)
+        return y[:, :S], final
+    nc = S // chunk
+    rep = H // G
+    # fold (B, H) and slice chunks
+    xk = xdt.transpose(0, 2, 1, 3).reshape(B * H, nc, chunk, P)
+    ak = Adt.transpose(0, 2, 1).reshape(B * H, nc, chunk)
+    Bh = jnp.repeat(Bm, rep, axis=2)                  # (B, S, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    bk = Bh.transpose(0, 2, 1, 3).reshape(B * H, nc, chunk, N)
+    ck = Ch.transpose(0, 2, 1, 3).reshape(B * H, nc, chunk, N)
+
+    y_diag, states, chunk_sum = _ssd.ssd_intra_chunk(
+        xk, ak, bk, ck, interpret=not _on_tpu())
+
+    # inter-chunk recurrence (cheap, O(nc)) in XLA
+    decay = jnp.exp(chunk_sum)                        # (BH, nc)
+
+    def step(carry, t):
+        st, dec = t
+        new = carry * dec[:, None, None] + st.astype(jnp.float32)
+        return new, carry
+
+    init = jnp.zeros((B * H, P, N), jnp.float32)
+    final, prev = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3), decay.T))
+    prev = prev.transpose(1, 0, 2, 3)                 # (BH, nc, P, N)
+
+    # y_off: rank-N correction from the carried-in state
+    a_cum = jnp.cumsum(ak.astype(jnp.float32), axis=-1)     # (BH, nc, Q)
+    y_off = jnp.einsum("bcqn,bcpn,bcq->bcqp", ck, prev,
+                       jnp.exp(a_cum)).astype(xdt.dtype)
+    y = (y_diag + y_off).reshape(B, H, nc * chunk, P).transpose(0, 2, 1, 3)
+    final = final.reshape(B, H, P, N).astype(xdt.dtype)
+    return y, final
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, weight, *, eps: float = 1e-5, block_rows: int = 256):
+    return _rms.rmsnorm(x, weight, eps=eps, block_rows=block_rows,
+                        interpret=not _on_tpu())

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the ground truth the interpret-mode kernels are allclose-tested
+against, and the `impl="xla"` path the dry-run roofline reads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """q, k, v: (BH, S, hd) — multi-head folded into the leading dim."""
+    BH, S, hd = q.shape
+    scores = jnp.einsum("bqh,bkh->bqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w.astype(q.dtype), v)
+
+
+def decode_attention(q, k, v, position):
+    """q: (BH, 1, hd); k, v: (BH, S_max, hd); slots > position are masked."""
+    BH, S, hd = k.shape
+    scores = jnp.einsum("bqh,bkh->bqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    valid = jnp.arange(S)[None, None, :] <= position
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w.astype(q.dtype), v)
+
+
+def ssd_intra_chunk(xdt, Adt, Bm, Cm):
+    """Intra-chunk SSD: per (BH, chunk): y_diag, per-chunk end state, and the
+    chunk's total log-decay.
+
+    xdt: (BH, nc, Q, P); Adt: (BH, nc, Q); Bm, Cm: (BH, nc, Q, N)
+    Returns y_diag (BH, nc, Q, P), states (BH, nc, P, N), chunk_sum (BH, nc)."""
+    A_cum = jnp.cumsum(Adt.astype(jnp.float32), axis=-1)          # (BH,nc,Q)
+    Q = Adt.shape[-1]
+    diff = A_cum[..., :, None] - A_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cm, Bm).astype(jnp.float32)
+    y_diag = jnp.einsum("bcqk,bckp->bcqp", (scores * L).astype(xdt.dtype), xdt)
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)               # (BH,nc,Q)
+    states = jnp.einsum("bckn,bck,bckp->bcpn", Bm,
+                        decay_states.astype(xdt.dtype), xdt)
+    return y_diag, states, A_cum[..., -1]

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against ShapeDtypeStruct stand-ins — no allocation — and record
+memory_analysis / cost_analysis / collective traffic for the roofline.
+
+Must be run as its own process (device count is locked at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY, get_config, get_shape, shapes_for
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import collective_stats, top_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding as shard
+from repro.runtime.steps import make_decode_step, make_prefill_step, make_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+               remat: str = "full", impl: str = "chunked", microbatch: int = 0,
+               seq_shard: bool = False, unroll: int = 0,
+               bf16_barrier: bool = False):
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings, donate)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    pspecs = shard.make_param_specs(cfg, mesh, fsdp=fsdp)
+    params = S.abstract_params(cfg)
+    ax_rules = shard.make_activation_rules(
+        cfg, mesh, shape.kind, shape.global_batch, fsdp=fsdp,
+        seq_shard=seq_shard)
+    if bf16_barrier:
+        ax_rules["_bf16_barrier"] = True
+    b = shard.Axes(cfg, mesh, fsdp).batch_dim(shape.global_batch)
+    vocab_sh = shard.Axes(cfg, mesh, fsdp).tp_dim(cfg.vocab_size)
+
+    n_unroll = unroll if unroll > 0 else cfg.num_layers
+    if shape.kind == "train":
+        from repro.optim.adamw import AdamWState
+        step = make_train_step(cfg, remat=remat, impl=impl,
+                               microbatch=microbatch, unroll=n_unroll)
+        opt_specs = AdamWState(step=P(), m=pspecs, v=pspecs)
+        batch_specs = shard.make_input_specs_tree(cfg, mesh, shape, fsdp=fsdp)
+        args = (params, S.abstract_opt_state(cfg), S.input_specs(cfg, shape))
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, opt_specs), _ns(mesh, batch_specs))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, opt_specs),
+                  {"loss": NamedSharding(mesh, P())})
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_len=shape.seq_len, impl=impl,
+                                 unroll=n_unroll)
+        cache_specs = shard.make_cache_specs(cfg, mesh, shape.global_batch,
+                                             seq_len=shape.seq_len, fsdp=fsdp)
+        batch_specs = shard.make_input_specs_tree(cfg, mesh, shape, fsdp=fsdp)
+        batch_specs.pop("labels", None)
+        args = (params, S.input_specs(cfg, shape))
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, batch_specs))
+        out_sh = (NamedSharding(mesh, P(b, None, vocab_sh)),
+                  _ns(mesh, cache_specs))
+        donate = ()
+    elif shape.kind == "decode":
+        step = make_decode_step(cfg, impl=impl, unroll=n_unroll)
+        cache_specs = shard.make_cache_specs(cfg, mesh, shape.global_batch,
+                                             seq_len=shape.seq_len, fsdp=fsdp)
+        cache = S.abstract_cache(cfg, shape)
+        ins = S.input_specs(cfg, shape)
+        args = (params, cache, ins["token"], ins["position"])
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, cache_specs),
+                 NamedSharding(mesh, P(b, None)), NamedSharding(mesh, P()))
+        out_sh = (NamedSharding(mesh, P(b, None)),
+                  NamedSharding(mesh, P(b, None, vocab_sh)),
+                  _ns(mesh, cache_specs))
+        donate = (1,)
+    else:
+        raise ValueError(shape.kind)
+    return step, args, in_sh, out_sh, donate, ax_rules
+
+
+def _compile_once(arch, shape_name, mesh, build_kw):
+    step, args, in_sh, out_sh, donate, ax_rules = build_cell(
+        arch, shape_name, mesh, **build_kw)
+    fsdp_axis = "data" if build_kw.get("fsdp", True) else None
+    with mesh, shard.activation_rules(ax_rules, mesh=mesh,
+                                      fsdp_axis=fsdp_axis):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, verbose: bool = True, fast: bool = False,
+             no_mem: bool = False, **build_kw) -> dict:
+    """Two compiles per cell: the COST pass unrolls the layer stack so
+    cost_analysis counts every layer (XLA treats a while body as one
+    iteration) and per-layer collectives appear individually; the MEMORY pass
+    uses the production lax.scan config (XLA:CPU, unlike the TPU backend,
+    never reuses buffers across unrolled layers, so unrolled temp_bytes is a
+    CPU artifact — the scanned number is the deployable one)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    if fast:
+        # single scanned compile: proves the sharding config lowers+compiles
+        # (the multi-pod validity pass); costs are per-while-body
+        compiled = _compile_once(arch, shape_name, mesh,
+                                 dict(build_kw, unroll=1))
+        mem_pass = compiled
+    else:
+        compiled = _compile_once(
+            arch, shape_name, mesh,
+            dict(build_kw, unroll=build_kw.get("unroll", 0) or 0))
+        if no_mem:
+            mem_pass = compiled
+        else:
+            mem_pass = _compile_once(arch, shape_name, mesh,
+                                     dict(build_kw, unroll=1))
+    t_lower = 0.0
+    t_compile = time.time() - t0
+    mem = mem_pass.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_stats(hlo_text)
+    top_coll = top_collectives(hlo_text)
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": int(mesh.devices.size),
+        "kind": shape.kind,
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective": coll.as_dict(),
+        "top_collectives": top_coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "model_flops_global": S.model_flops(cfg, shape),
+        "active_params": S.active_param_count(cfg),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "options": {k: v for k, v in build_kw.items()},
+    }
+    if verbose:
+        peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes +
+                mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK  "
+              f"flops/dev={result['flops_per_device']:.3e}  "
+              f"bytes/dev={result['bytes_accessed_per_device']:.3e}  "
+              f"coll/dev={coll.total_bytes:.3e}B ({coll.total_count} ops)  "
+              f"mem/dev≈{peak/2**30:.2f}GiB  "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s", flush=True)
+    if save:
+        tag = "_".join(f"{k}-{v}" for k, v in build_kw.items())
+        tag = ("fast_" if fast else "") + (tag or "baseline")
+        ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+        out = ARTIFACT_DIR / f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None,
+                    help="train_4k|prefill_32k|decode_32k|long_500k")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × assigned shape) cell")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--impl", default="chunked",
+                    choices=["xla", "chunked", "pallas"])
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--unroll", type=int, default=0,
+                    help="scan unroll factor (0 = fully unroll)")
+    ap.add_argument("--fast", action="store_true",
+                    help="single scanned compile (validity only)")
+    ap.add_argument("--no-mem", action="store_true",
+                    help="skip the scanned memory pass (perf iterations)")
+    ap.add_argument("--barrier", action="store_true",
+                    help="bf16 barrier at block boundaries (§Perf)")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch, cfg in REGISTRY.items():
+            for sh in shapes_for(cfg):
+                cells.append((arch, sh.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, shape_name in cells:
+        for multi_pod in meshes:
+            try:
+                run_cell(arch, shape_name, multi_pod=multi_pod,
+                         save=not args.no_save, fast=args.fast,
+                         no_mem=args.no_mem,
+                         fsdp=bool(args.fsdp),
+                         remat=args.remat, impl=args.impl,
+                         microbatch=args.microbatch,
+                         seq_shard=args.seq_shard, unroll=args.unroll,
+                         bf16_barrier=args.barrier)
+            except Exception as e:  # noqa: BLE001 — report all failures at end
+                failures.append((arch, shape_name, multi_pod, repr(e)))
+                print(f"[{arch} × {shape_name} × multi={multi_pod}] FAILED: {e}",
+                      flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + "; ".join(f"{a}×{s}" for a, s, _, _ in failures))
+    print("dry-run: all requested cells compiled successfully", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+`collective_bytes` parses the optimized (per-device) HLO text and sums the
+operand bytes of every communication op: all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (+ their async -start
+forms).  cost_analysis() does not report these — this is the third roofline
+term's source of truth.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+
+# ordered by specificity: -start forms first; -done lines are skipped
+_OPS = [
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+    "reduce-scatter-start", "all-to-all-start",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+]
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "bytes_by_op": dict(self.bytes_by_op),
+            "count_by_op": dict(self.count_by_op),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from optimized HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        for op in _OPS:
+            idx = line.find(f" {op}(")
+            if idx < 0:
+                continue
+            left, right = line[:idx], line[idx:]
+            out_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(left))
+            in_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(right))
+            name = op.removesuffix("-start")
+            stats.bytes_by_op[name] += in_b if in_b else out_b
+            stats.count_by_op[name] += 1
+            break
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return collective_stats(hlo_text).total_bytes
+
+
+def top_collectives(hlo_text: str, k: int = 12) -> list[dict]:
+    """Aggregate collective traffic by (op, operand shape) — the profile the
+    perf loop iterates on."""
+    agg: dict[tuple[str, str], int] = defaultdict(int)
+    cnt: dict[tuple[str, str], int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        for op in _OPS:
+            idx = line.find(f" {op}(")
+            if idx < 0:
+                continue
+            right_shapes = _SHAPE_RE.findall(line[idx:])
+            left_shapes = _SHAPE_RE.findall(line[:idx])
+            in_b = sum(_shape_bytes(d, s) for d, s in right_shapes)
+            out_b = sum(_shape_bytes(d, s) for d, s in left_shapes)
+            b = in_b if in_b else out_b
+            sig_src = right_shapes or left_shapes
+            sig = f"{sig_src[0][0]}[{sig_src[0][1]}]" if sig_src else "?"
+            key = (op.removesuffix("-start"), sig)
+            agg[key] += b
+            cnt[key] += 1
+            break
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+    return [{"op": op, "shape": sig, "bytes": b, "count": cnt[(op, sig)]}
+            for (op, sig), b in rows]

@@ -1,0 +1,78 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params, param_count
+from repro.runtime.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={param_count(params):,}")
+
+    max_len = args.prompt_len + args.gen
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg, sample=args.sample,
+                                      temperature=args.temperature))
+
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.num_patch_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        batch["enc_frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    generated = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        rng = jax.random.fold_in(key, i)
+        tok, logits, cache = decode(params, cache, tok,
+                                    jnp.int32(args.prompt_len + i), rng) \
+            if args.sample else decode(params, cache, tok,
+                                       jnp.int32(args.prompt_len + i))
+        generated.append(tok)
+    toks = jnp.concatenate(generated, axis=1)
+    toks.block_until_ready()
+    t_decode = time.time() - t0
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill {args.batch}×{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decode {args.gen - 1} steps at {tps:.1f} tok/s")
+    print("sample generations (token ids):")
+    for row in toks[: min(args.batch, 2)]:
+        print("  ", row.tolist()[:16], "...")
+    return {"tokens": toks, "tok_per_s": tps}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Abstract (ShapeDtypeStruct) inputs, params, optimizer state and caches for
+every (architecture × input-shape) cell — the dry-run lowers against these,
+so nothing is ever allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models import init_cache, init_params
+from repro.optim import adamw
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every *data* input of the step.
+
+    train/prefill: {tokens[, labels][, patch_embeds][, enc_frames]}
+    decode:        {token, position}  (the cache comes from cache_specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "position": jax.ShapeDtypeStruct((), i32)}
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patch_tokens, cfg.d_model), f32)
+    if cfg.is_encdec:
+        out["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), f32)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    return jax.eval_shape(adamw.init, abstract_params(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N·D for inference,
+    with N = active parameter count and D = tokens processed."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count, with MoE experts scaled to the active top-k."""
+    import math
+    counts = jax.tree.map(lambda s: math.prod(s.shape),
+                          abstract_params(cfg))
+    total = sum(jax.tree.leaves(counts))
+    if cfg.moe is not None:
+        mc = cfg.moe
+        fe = mc.expert_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * fe
+        all_experts = cfg.num_layers * mc.num_experts * per_expert
+        active_experts = cfg.num_layers * mc.top_k * per_expert
+        total = total - all_experts + active_experts
+    return total

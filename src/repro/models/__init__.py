@@ -1,0 +1,3 @@
+from . import attention, common, mlp, model, ssm
+from .model import (decode_step, forward, init_cache, init_params,
+                    param_count, prefill)

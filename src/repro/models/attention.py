@@ -1,0 +1,171 @@
+"""Grouped-query attention with optional qk-norm, RoPE, KV caches.
+
+Three entry points matching the three shape kinds:
+  * `attend_train`  — full causal self-attention over a sequence,
+  * `attend_prefill` — same, but also returns the KV cache,
+  * `attend_decode` — one query token against a cached context.
+
+`impl="xla"` uses the pure-jnp path (what the dry-run lowers, so the roofline
+reads dot_general FLOPs); `impl="pallas"` dispatches to the blocked Pallas
+kernels in repro.kernels (TPU target, validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, cast_compute, rms_norm
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array          # (D, H * hd)
+    wk: jax.Array          # (D, KV * hd)
+    wv: jax.Array          # (D, KV * hd)
+    wo: jax.Array          # (H * hd, D)
+    q_norm: jax.Array      # (hd,) or (0,)
+    k_norm: jax.Array      # (hd,) or (0,)
+
+
+def init_attn(key, cfg) -> AttnParams:
+    from .common import dense_init
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    qk = jnp.ones((hd,), jnp.float32) if cfg.qk_norm else jnp.zeros((0,), jnp.float32)
+    return AttnParams(
+        wq=dense_init(kq, cfg.d_model, cfg.num_heads * hd),
+        wk=dense_init(kk, cfg.d_model, cfg.num_kv_heads * hd),
+        wv=dense_init(kv, cfg.d_model, cfg.num_kv_heads * hd),
+        wo=dense_init(ko, cfg.num_heads * hd, cfg.d_model),
+        q_norm=qk, k_norm=qk)
+
+
+def _project_qkv(p: AttnParams, cfg, x, positions, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ cast_compute(p.wq)).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ cast_compute(p.wk)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ cast_compute(p.wv)).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = rms_norm(k, p.k_norm, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) — GQA broadcast, fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    qg = q.reshape(B, Sq, KV, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, block_q: int = 512):
+    """XLA-flash: lax.scan over query blocks so only a (bq × Sk) score slab is
+    live at a time instead of the full (Sq × Sk) matrix.  Numerically equal to
+    `_sdpa` (each row's softmax still sees its whole key range)."""
+    B, Sq, H, hd = q.shape
+    block_q = min(block_q, Sq)
+    if Sq % block_q:
+        return _sdpa(q, k, v, causal)
+    nq = Sq // block_q
+    qb = q.reshape(B, nq, block_q, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        i, qblk = args                                 # qblk: (B, bq, H, hd)
+        offset = i * block_q
+        out = _sdpa(qblk, k, v, causal, q_offset=offset)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def attend_train(p: AttnParams, cfg, x, positions, causal=True, impl="xla",
+                 rope=True):
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=rope)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal)
+    elif impl == "chunked":
+        out = _sdpa_chunked(q, k, v, causal=causal)
+    else:
+        out = _sdpa(q, k, v, causal=causal)
+    return out.reshape(B, S, -1) @ cast_compute(p.wo)
+
+
+def attend_prefill(p: AttnParams, cfg, x, positions, impl="xla", rope=True):
+    """Returns (output, (k_cache, v_cache)) with cache length = S."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=rope)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True)
+    elif impl == "chunked":
+        out = _sdpa_chunked(q, k, v, causal=True)
+    else:
+        out = _sdpa(q, k, v, causal=True)
+    return out.reshape(B, S, -1) @ cast_compute(p.wo), (k, v)
+
+
+def attend_decode(p: AttnParams, cfg, x, cache, position, impl="xla",
+                  rope=True):
+    """x: (B, 1, D); cache: (k, v) each (B, S_max, KV, hd); position: scalar
+    int32 index of the new token.  Returns (out, updated cache)."""
+    B, one, D = x.shape
+    k_cache, v_cache = cache
+    pos = jnp.full((B, 1), position, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos, rope=rope)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), position, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), position, axis=1)
+    S_max = k_cache.shape[1]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, k_cache, v_cache, position)
+    else:
+        # mask out cache slots beyond `position`
+        hd = cfg.resolved_head_dim
+        KV = cfg.num_kv_heads
+        groups = cfg.num_heads // KV
+        qg = q.reshape(B, 1, KV, groups, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+        scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+        valid = jnp.arange(S_max)[None, None, None, None, :] <= position
+        scores = jnp.where(valid, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w, v_cache).reshape(B, 1, -1)
+    return out @ cast_compute(p.wo), (k_cache, v_cache)
+
+
+def attend_cross(p: AttnParams, cfg, x, enc_kv, impl="xla"):
+    """Cross-attention against precomputed encoder K/V (no RoPE, no mask)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ cast_compute(p.wq)).reshape(B, S, cfg.num_heads, hd)
+    k, v = enc_kv
+    out = _sdpa_chunked(q, k, v, causal=False) if impl == "chunked" \
+        else _sdpa(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ cast_compute(p.wo)
+
+
+def cross_kv(p: AttnParams, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    B, S, D = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ cast_compute(p.wk)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (enc_out @ cast_compute(p.wv)).reshape(B, S, cfg.num_kv_heads, hd)
+    return k, v

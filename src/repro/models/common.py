@@ -1,0 +1,114 @@
+"""Shared model building blocks (pure JAX, no flax).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init helper
+has a mirrored `*_spec` helper producing the same-structure pytree of
+`PartitionSpec`s (see repro.parallel.sharding).  Compute follows a mixed
+precision policy: parameters are stored fp32 and cast to bf16 for compute;
+reductions (norms, softmax, losses) run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def cast_compute(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), PARAM_DTYPE) * scale
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), PARAM_DTYPE) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm_nonparametric(x, eps: float = 1e-5):
+    """OLMo-style non-parametric LayerNorm (no learned scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(cfg):
+    if cfg.nonparametric_norm:
+        return lambda x, w: layer_norm_nonparametric(x, cfg.norm_eps)
+    return lambda x, w: rms_norm(x, w, cfg.norm_eps)
+
+
+def norm_param(cfg, d: int):
+    if cfg.nonparametric_norm:
+        return jnp.zeros((0,), PARAM_DTYPE)  # placeholder keeps pytrees uniform
+    return jnp.ones((d,), PARAM_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv_freq = jnp.asarray(rope_frequencies(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int):
+    """Whisper-style sinusoidal embeddings, (S, d)."""
+    pos = np.arange(seq_len, dtype=np.float32)[:, None]
+    dim = np.arange(d // 2, dtype=np.float32)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(angle), np.cos(angle)], axis=-1), jnp.float32)
+
+
+def sinusoidal_at(position, d: int):
+    """Sinusoidal embedding for a traced scalar position → (d,)."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = position.astype(jnp.float32) / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token cross-entropy in fp32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,702 @@
+"""Language models over the assigned architecture families.
+
+One parameter pytree layout shared by all decoder-only families
+(dense / moe / ssm / hybrid / vlm) plus an encoder-decoder variant (audio).
+Layers are stacked along a leading axis and executed with `lax.scan` so HLO
+size is O(1) in depth (hybrid models unroll: their shared attention block
+makes layers heterogeneous, see DESIGN.md).
+
+Entry points: `init_params`, `forward` (train), `prefill`, `decode_step`,
+`init_cache`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import ssm as ssm_mod
+from .attention import (AttnParams, attend_cross, attend_decode,
+                        attend_prefill, attend_train, cross_kv, init_attn)
+from .common import (cast_compute, dense_init, embed_init, make_norm,
+                     norm_param, sinusoidal_positions)
+from .mlp import init_mlp, init_moe, mlp, moe
+from .ssm import (MambaCache, init_mamba, init_mamba_cache, mamba_decode,
+                  mamba_train)
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    layer = {
+        "attn": init_attn(k1, cfg),
+        "norm1": norm_param(cfg, cfg.d_model),
+        "norm2": norm_param(cfg, cfg.d_model),
+    }
+    layer["ffn"] = init_moe(k2, cfg) if cfg.moe is not None else \
+        init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return layer
+
+
+def _init_mamba_layer(key, cfg):
+    return {
+        "mamba": init_mamba(key, cfg),
+        "norm1": norm_param(cfg, cfg.d_model),
+    }
+
+
+def _init_encdec_layer(key, cfg, cross: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    layer = {
+        "attn": init_attn(k1, cfg),
+        "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff),
+        "norm1": norm_param(cfg, cfg.d_model),
+        "norm2": norm_param(cfg, cfg.d_model),
+    }
+    if cross:
+        layer["cross"] = init_attn(k3, cfg)
+        layer["norm3"] = norm_param(cfg, cfg.d_model)
+    return layer
+
+
+def init_params(cfg, key) -> dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": norm_param(cfg, cfg.d_model),
+    }
+    lkeys = jax.random.split(keys[1], cfg.num_layers)
+    if cfg.is_encdec:
+        ekeys = jax.random.split(keys[2], cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_encdec_layer(k, cfg, cross=False))(ekeys),
+            "final_norm": norm_param(cfg, cfg.d_model),
+        }
+        params["layers"] = jax.vmap(
+            lambda k: _init_encdec_layer(k, cfg, cross=True))(lkeys)
+    elif cfg.family in ("dense", "moe", "vlm"):
+        params["layers"] = jax.vmap(lambda k: _init_dense_layer(k, cfg))(lkeys)
+    elif cfg.family in ("ssm", "hybrid"):
+        params["layers"] = jax.vmap(lambda k: _init_mamba_layer(k, cfg))(lkeys)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(keys[3])
+        params["shared_attn"] = {
+            "attn": init_attn(k1, cfg),
+            "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff),
+            "norm1": norm_param(cfg, cfg.d_model),
+            "norm2": norm_param(cfg, cfg.d_model),
+        }
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(keys[4], cfg.d_model, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[5], cfg.d_model, cfg.vocab_size, scale=0.02)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def hybrid_attn_layers(cfg) -> list[int]:
+    """Layer indices after which the shared attention block runs."""
+    p = cfg.hybrid_attn_period
+    return [i for i in range(cfg.num_layers) if i % p == p - 1]
+
+
+def _hybrid_groups(cfg):
+    p = cfg.hybrid_attn_period
+    G = cfg.num_layers // p
+    return G, p, cfg.num_layers - G * p
+
+
+def _split_hybrid_params(layers, G: int, p: int):
+    grouped = jax.tree.map(
+        lambda a: a[: G * p].reshape(G, p, *a.shape[1:]), layers)
+    tail = jax.tree.map(lambda a: a[G * p:], layers)
+    return grouped, tail
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _bf16_grad_identity(x):
+    return x
+
+
+_bf16_grad_identity.defvjp(
+    lambda x: (x, None),
+    lambda _, g: (g.astype(jnp.bfloat16),))
+
+
+def _block_out(x):
+    """Pin the residual stream at the block boundary.  With the
+    `_bf16_barrier` rule on, the backward cotangent is cast to bf16 here
+    (Megatron-style bf16 activation grads): the cross-entropy's fp32
+    cotangent otherwise propagates fp32 through every residual hop, so the
+    TP partial-sum all-reduces move 2× the bytes (measured: 1443 GB/step/
+    device on command-r-plus — §Perf)."""
+    from repro.parallel.sharding import current_rules
+    rules = current_rules()
+    if rules is not None and rules.get("_bf16_barrier"):
+        return _bf16_grad_identity(constrain(x, "hidden"))
+    return constrain(x, "hidden")
+
+
+def _dense_block(layer, cfg, x, positions, impl):
+    norm = make_norm(cfg)
+    h = norm(x, layer["norm1"])
+    h = constrain(h, "hidden")
+    a = attend_train(layer["attn"], cfg, h, positions, impl=impl)
+    if cfg.parallel_block:
+        # Cohere-style: attention and FFN read the same normed input
+        if cfg.moe is not None:
+            f, aux = moe(layer["ffn"], cfg, h)
+        else:
+            f, aux = mlp(layer["ffn"], h), 0.0
+        return _block_out(x + a + f), aux
+    x = x + a
+    h2 = norm(x, layer["norm2"])
+    if cfg.moe is not None:
+        f, aux = moe(layer["ffn"], cfg, h2)
+    else:
+        f, aux = mlp(layer["ffn"], h2), 0.0
+    return _block_out(x + f), aux
+
+
+def _mamba_block(layer, cfg, x, impl):
+    norm = make_norm(cfg)
+    h = norm(x, layer["norm1"])
+    return constrain(x + mamba_train(layer["mamba"], cfg, h, impl=impl), "hidden")
+
+
+def _shared_attn_block(shared, cfg, x, positions, impl):
+    norm = make_norm(cfg)
+    h = norm(x, shared["norm1"])
+    x = x + attend_train(shared["attn"], cfg, h, positions, impl=impl)
+    h = norm(x, shared["norm2"])
+    return constrain(x + mlp(shared["ffn"], h), "hidden")
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(remat)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval over a full sequence)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, tokens, *, patch_embeds=None, enc_frames=None,
+            impl: str = "xla", remat: str = "none", unroll: int = 1):
+    """tokens: (B, S) int32 → (logits (B, S, V), aux_loss scalar)."""
+    B, S = tokens.shape
+    tokens = constrain(tokens, "tokens")
+    x = cast_compute(params["embed"])[tokens]
+    x = constrain(x, "hidden")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family == "vlm":
+        pe = cast_compute(patch_embeds) @ cast_compute(params["vision_proj"])
+        x = jax.lax.dynamic_update_slice(x, pe.astype(x.dtype), (0, 0, 0))
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params["encoder"], cfg, enc_frames, impl, remat, unroll)
+        x = x + cast_compute(sinusoidal_positions(S, cfg.d_model))[None]
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm") and not cfg.is_encdec:
+        def body(carry, layer):
+            h, aux = _dense_block(layer, cfg, carry, positions, impl)
+            return h, aux
+        body = _maybe_remat(body, remat)
+        x, auxes = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+        aux_total = aux_total + jnp.sum(auxes)
+
+    elif cfg.is_encdec:
+        def body(carry, layer):
+            h = _encdec_decoder_block(layer, cfg, carry, positions, enc_out, impl)
+            return h, 0.0
+        body = _maybe_remat(body, remat)
+        x, _ = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+
+    elif cfg.family == "ssm":
+        def body(carry, layer):
+            return _mamba_block(layer, cfg, carry, impl), 0.0
+        body = _maybe_remat(body, remat)
+        x, _ = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+
+    elif cfg.family == "hybrid":
+        if unroll == 1:
+            # grouped scan: [period × mamba + shared attn] per group; the
+            # shared block's weights are scan-invariant (the Zamba trick)
+            G, pperiod, tail = _hybrid_groups(cfg)
+            grouped, tail_layers = _split_hybrid_params(params["layers"], G, pperiod)
+
+            def group_body(carry, grp):
+                h = carry
+
+                def inner(c, lay):
+                    return _mamba_block(lay, cfg, c, impl), None
+
+                h, _ = jax.lax.scan(inner, h, grp)
+                h = _shared_attn_block(params["shared_attn"], cfg, h,
+                                       positions, impl)
+                return h, None
+
+            body = _maybe_remat(group_body, remat)
+            x, _ = jax.lax.scan(body, x, grouped)
+            for i in range(tail):
+                layer = jax.tree.map(lambda a: a[i], tail_layers)
+                x = _mamba_block(layer, cfg, x, impl)
+        else:
+            attn_after = set(hybrid_attn_layers(cfg))
+            for i in range(cfg.num_layers):
+                layer = jax.tree.map(lambda a: a[i], params["layers"])
+                blk = _maybe_remat(
+                    lambda h, l=layer: _mamba_block(l, cfg, h, impl), remat)
+                x = blk(x)
+                if i in attn_after:
+                    sab = _maybe_remat(
+                        lambda h: _shared_attn_block(
+                            params["shared_attn"], cfg, h, positions, impl),
+                        remat)
+                    x = sab(x)
+    else:
+        raise ValueError(cfg.family)
+
+    norm = make_norm(cfg)
+    x = norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ cast_compute(head)
+    return constrain(logits, "logits"), aux_total
+
+
+def _encode(enc_params, cfg, frames, impl, remat, unroll: int = 1):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    x = cast_compute(frames)
+    B, S, D = x.shape
+    x = x + cast_compute(sinusoidal_positions(S, cfg.d_model))[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    norm = make_norm(cfg)
+
+    def body(carry, layer):
+        h = norm(carry, layer["norm1"])
+        h = attend_train(layer["attn"], cfg, h, positions, causal=False,
+                         impl=impl, rope=False)
+        x2 = carry + h
+        h2 = norm(x2, layer["norm2"])
+        return x2 + mlp(layer["ffn"], h2), 0.0
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, enc_params["layers"], unroll=unroll)
+    return norm(x, enc_params["final_norm"])
+
+
+def _encdec_decoder_block(layer, cfg, x, positions, enc_out, impl):
+    norm = make_norm(cfg)
+    h = norm(x, layer["norm1"])
+    x = x + attend_train(layer["attn"], cfg, h, positions, impl=impl, rope=False)
+    h = norm(x, layer["norm3"])
+    kv = cross_kv(layer["cross"], cfg, enc_out)
+    x = x + attend_cross(layer["cross"], cfg, h, kv, impl=impl)
+    h = norm(x, layer["norm2"])
+    return constrain(x + mlp(layer["ffn"], h), "hidden")
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    kv_shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    if cfg.is_encdec:
+        cross_shape = (cfg.num_layers, batch, cfg.encoder_seq_len,
+                       cfg.num_kv_heads, hd)
+        return {
+            "k": jnp.zeros(kv_shape, CACHE_DTYPE),
+            "v": jnp.zeros(kv_shape, CACHE_DTYPE),
+            "cross_k": jnp.zeros(cross_shape, CACHE_DTYPE),
+            "cross_v": jnp.zeros(cross_shape, CACHE_DTYPE),
+        }
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": jnp.zeros(kv_shape, CACHE_DTYPE),
+                "v": jnp.zeros(kv_shape, CACHE_DTYPE)}
+    if cfg.family == "ssm":
+        single = init_mamba_cache(cfg, batch, CACHE_DTYPE)
+        return {"mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(),
+            single)}
+    if cfg.family == "hybrid":
+        single = init_mamba_cache(cfg, batch, CACHE_DTYPE)
+        n_inv = len(hybrid_attn_layers(cfg))
+        akv = (n_inv, batch, max_len, cfg.num_kv_heads, hd)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(),
+                single),
+            "k": jnp.zeros(akv, CACHE_DTYPE),
+            "v": jnp.zeros(akv, CACHE_DTYPE),
+        }
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, tokens, max_len: int, *, patch_embeds=None,
+            enc_frames=None, impl="xla", remat: str = "none", unroll: int = 1):
+    """Run the model over a prompt, returning (last-position logits, cache).
+
+    The cache is allocated at max_len and filled in [0, S)."""
+    B, S = tokens.shape
+    x = cast_compute(params["embed"])[tokens]
+    x = constrain(x, "hidden")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cache = init_cache(cfg, B, max_len)
+
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = cast_compute(patch_embeds) @ cast_compute(params["vision_proj"])
+        x = jax.lax.dynamic_update_slice(x, pe.astype(x.dtype), (0, 0, 0))
+
+    def pad_kv(kv):
+        k, v = kv
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return (jnp.pad(k.astype(CACHE_DTYPE), pad),
+                jnp.pad(v.astype(CACHE_DTYPE), pad))
+
+    if cfg.is_encdec:
+        enc_out = _encode(params["encoder"], cfg, enc_frames, impl, remat, unroll)
+        x = x + cast_compute(sinusoidal_positions(S, cfg.d_model))[None]
+
+        def body(carry, layer):
+            h = carry
+            norm = make_norm(cfg)
+            hn = norm(h, layer["norm1"])
+            a, kv = attend_prefill(layer["attn"], cfg, hn, positions,
+                                   impl=impl, rope=False)
+            h = h + a
+            hn = norm(h, layer["norm3"])
+            ckv = cross_kv(layer["cross"], cfg, enc_out)
+            h = h + attend_cross(layer["cross"], cfg, hn, ckv, impl=impl)
+            hn = norm(h, layer["norm2"])
+            h = h + mlp(layer["ffn"], hn)
+            k, v = pad_kv(kv)
+            return h, (k, v, ckv[0].astype(CACHE_DTYPE), ckv[1].astype(CACHE_DTYPE))
+
+        body = _maybe_remat(body, remat)
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["layers"],
+                                             unroll=unroll)
+        cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+
+    elif cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, layer):
+            h = carry
+            norm = make_norm(cfg)
+            hn = norm(h, layer["norm1"])
+            hn = constrain(hn, "hidden")
+            a, kv = attend_prefill(layer["attn"], cfg, hn, positions, impl=impl)
+            if cfg.parallel_block:
+                f = moe(layer["ffn"], cfg, hn)[0] if cfg.moe is not None \
+                    else mlp(layer["ffn"], hn)
+                k, v = pad_kv(kv)
+                return constrain(h + a + f, "hidden"), (k, v)
+            h = h + a
+            hn = norm(h, layer["norm2"])
+            if cfg.moe is not None:
+                f, _ = moe(layer["ffn"], cfg, hn)
+            else:
+                f = mlp(layer["ffn"], hn)
+            k, v = pad_kv(kv)
+            return constrain(h + f, "hidden"), (k, v)
+
+        body = _maybe_remat(body, remat)
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body(carry, layer):
+            norm = make_norm(cfg)
+            hn = norm(carry, layer["norm1"])
+            sc = cfg.ssm
+            y, state = _mamba_prefill(layer["mamba"], cfg, hn, impl)
+            return constrain(carry + y, "hidden"), state
+
+        body = _maybe_remat(body, remat)
+        x, states = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+        cache = {"mamba": states}
+
+    elif cfg.family == "hybrid" and unroll == 1:
+        G, pperiod, tail = _hybrid_groups(cfg)
+        grouped, tail_layers = _split_hybrid_params(params["layers"], G, pperiod)
+
+        def group_body(carry, grp):
+            h = carry
+            norm = make_norm(cfg)
+
+            def inner(c, lay):
+                hn = norm(c, lay["norm1"])
+                y, state = _mamba_prefill(lay["mamba"], cfg, hn, impl)
+                return constrain(c + y, "hidden"), state
+
+            h, states = jax.lax.scan(inner, h, grp)
+            shared = params["shared_attn"]
+            hn = norm(h, shared["norm1"])
+            a, kv = attend_prefill(shared["attn"], cfg, hn, positions, impl=impl)
+            h = h + a
+            hn = norm(h, shared["norm2"])
+            h = constrain(h + mlp(shared["ffn"], hn), "hidden")
+            k, v = pad_kv(kv)
+            return h, (states, k, v)
+
+        x, (g_states, ks, vs) = jax.lax.scan(group_body, x, grouped)
+        m_states = jax.tree.map(
+            lambda a: a.reshape(G * pperiod, *a.shape[2:]), g_states)
+        tail_states = []
+        norm = make_norm(cfg)
+        for i in range(tail):
+            layer = jax.tree.map(lambda a: a[i], tail_layers)
+            hn = norm(x, layer["norm1"])
+            y, state = _mamba_prefill(layer["mamba"], cfg, hn, impl)
+            x = constrain(x + y, "hidden")
+            tail_states.append(state)
+        if tail_states:
+            tail_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *tail_states)
+            m_states = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), m_states, tail_stack)
+        cache = {"mamba": m_states, "k": ks, "v": vs}
+
+    elif cfg.family == "hybrid":
+        attn_after = set(hybrid_attn_layers(cfg))
+        m_states, akv = [], []
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["layers"])
+            norm = make_norm(cfg)
+            hn = norm(x, layer["norm1"])
+            y, state = _mamba_prefill(layer["mamba"], cfg, hn, impl)
+            x = constrain(x + y, "hidden")
+            m_states.append(state)
+            if i in attn_after:
+                shared = params["shared_attn"]
+                hn = norm(x, shared["norm1"])
+                a, kv = attend_prefill(shared["attn"], cfg, hn, positions, impl=impl)
+                x = x + a
+                hn = norm(x, shared["norm2"])
+                x = constrain(x + mlp(shared["ffn"], hn), "hidden")
+                akv.append(pad_kv(kv))
+        cache = {
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *m_states),
+            "k": jnp.stack([k for k, _ in akv]),
+            "v": jnp.stack([v for _, v in akv]),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    norm = make_norm(cfg)
+    x_last = norm(x[:, -1:, :], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x_last @ cast_compute(head)
+    return constrain(logits, "logits"), cache
+
+
+def _mamba_prefill(p, cfg, u, impl):
+    """Like mamba_train but also returns the final cache (conv tail + state)."""
+    sc = cfg.ssm
+    d_inner, H, conv_ch = ssm_mod.dims(cfg)
+    proj = u @ cast_compute(p.in_proj)
+    z, xBC, dt = ssm_mod._split_proj(cfg, proj)
+    conv_tail = xBC[:, -(sc.conv_kernel - 1):, :].astype(CACHE_DTYPE)
+    xBC = ssm_mod._causal_conv(xBC, p.conv_w, p.conv_b)
+    gn = sc.ngroups * sc.state_size
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + gn], axis=-1)
+    B_, S_ = u.shape[0], u.shape[1]
+    x = x.reshape(B_, S_, H, sc.head_dim)
+    Bm = Bm.reshape(B_, S_, sc.ngroups, sc.state_size)
+    Cm = Cm.reshape(B_, S_, sc.ngroups, sc.state_size)
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.A_log)
+    xdt = x * dt_[..., None].astype(x.dtype)
+    Adt = dt_ * A
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, final = kops.ssd(xdt, Adt, Bm, Cm, chunk=sc.chunk_size)
+    else:
+        y, final = ssm_mod.ssd_chunked(xdt, Adt, Bm, Cm, chunk=sc.chunk_size)
+    y = y + x * cast_compute(p.D_skip)[None, None, :, None]
+    y = y.reshape(B_, S_, d_inner) * jax.nn.silu(z)
+    y = ssm_mod.rms_norm(y, p.out_norm, cfg.norm_eps)
+    out = y @ cast_compute(p.out_proj)
+    return out, MambaCache(conv_tail, final.astype(CACHE_DTYPE))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg, token, cache, position, *, impl="xla",
+                unroll: int = 1):
+    """token: (B, 1) int32; position: scalar int32 — index of the new token.
+    Returns (logits (B, 1, V), updated cache)."""
+    B = token.shape[0]
+    x = cast_compute(params["embed"])[token]
+    norm = make_norm(cfg)
+
+    if cfg.is_encdec:
+        from .common import sinusoidal_at
+        x = x + cast_compute(sinusoidal_at(position, cfg.d_model))[None, None]
+
+        def body(carry, scanned):
+            layer, k, v, ck, cv = scanned
+            h = carry
+            hn = norm(h, layer["norm1"])
+            a, (k2, v2) = attend_decode(layer["attn"], cfg, hn, (k, v),
+                                        position, impl=impl, rope=False)
+            h = h + a
+            hn = norm(h, layer["norm3"])
+            h = h + attend_cross(layer["cross"], cfg, hn, (ck, cv), impl=impl)
+            hn = norm(h, layer["norm2"])
+            h = h + mlp(layer["ffn"], hn)
+            return h, (k2, v2)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]), unroll=unroll)
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, scanned):
+            layer, k, v = scanned
+            h = carry
+            hn = norm(h, layer["norm1"])
+            a, (k2, v2) = attend_decode(layer["attn"], cfg, hn, (k, v),
+                                        position, impl=impl)
+            if cfg.parallel_block:
+                f = moe(layer["ffn"], cfg, hn)[0] if cfg.moe is not None \
+                    else mlp(layer["ffn"], hn)
+                return h + a + f, (k2, v2)
+            h = h + a
+            hn = norm(h, layer["norm2"])
+            if cfg.moe is not None:
+                f, _ = moe(layer["ffn"], cfg, hn)
+            else:
+                f = mlp(layer["ffn"], hn)
+            return h + f, (k2, v2)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]),
+            unroll=unroll)
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body(carry, scanned):
+            layer, mc = scanned
+            hn = norm(carry, layer["norm1"])
+            y, mc2 = mamba_decode(layer["mamba"], cfg, hn, mc)
+            return carry + y, mc2
+
+        x, states = jax.lax.scan(body, x, (params["layers"], cache["mamba"]),
+                                 unroll=unroll)
+        cache = {"mamba": states}
+
+    elif cfg.family == "hybrid" and unroll == 1:
+        G, pperiod, tail = _hybrid_groups(cfg)
+        grouped, tail_layers = _split_hybrid_params(params["layers"], G, pperiod)
+        g_mcache, tail_mcache = _split_hybrid_params(cache["mamba"], G, pperiod)
+
+        def group_body(carry, scanned):
+            h = carry
+            grp, mc, k, v = scanned
+
+            def inner(c, lay_mc):
+                lay, m = lay_mc
+                hn = norm(c, lay["norm1"])
+                y, m2 = mamba_decode(lay["mamba"], cfg, hn, m)
+                return c + y, m2
+
+            h, mc2 = jax.lax.scan(inner, h, (grp, mc))
+            shared = params["shared_attn"]
+            hn = norm(h, shared["norm1"])
+            a, (k2, v2) = attend_decode(shared["attn"], cfg, hn, (k, v),
+                                        position, impl=impl)
+            h = h + a
+            hn = norm(h, shared["norm2"])
+            h = h + mlp(shared["ffn"], hn)
+            return h, (mc2, k2, v2)
+
+        x, (g_mc2, ks, vs) = jax.lax.scan(
+            group_body, x, (grouped, g_mcache, cache["k"], cache["v"]))
+        m_states = jax.tree.map(
+            lambda a: a.reshape(G * pperiod, *a.shape[2:]), g_mc2)
+        tail_states = []
+        for i in range(tail):
+            layer = jax.tree.map(lambda a: a[i], tail_layers)
+            mc = jax.tree.map(lambda a: a[i], tail_mcache)
+            hn = norm(x, layer["norm1"])
+            y, mc2 = mamba_decode(layer["mamba"], cfg, hn, mc)
+            x = x + y
+            tail_states.append(mc2)
+        if tail_states:
+            tail_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *tail_states)
+            m_states = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), m_states, tail_stack)
+        cache = {"mamba": m_states, "k": ks, "v": vs}
+
+    elif cfg.family == "hybrid":
+        attn_after = set(hybrid_attn_layers(cfg))
+        new_states, new_k, new_v = [], [], []
+        inv = 0
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["layers"])
+            mc = jax.tree.map(lambda a: a[i], cache["mamba"])
+            hn = norm(x, layer["norm1"])
+            y, mc2 = mamba_decode(layer["mamba"], cfg, hn, mc)
+            x = x + y
+            new_states.append(mc2)
+            if i in attn_after:
+                shared = params["shared_attn"]
+                hn = norm(x, shared["norm1"])
+                a, (k2, v2) = attend_decode(
+                    shared["attn"], cfg, hn,
+                    (cache["k"][inv], cache["v"][inv]), position, impl=impl)
+                x = x + a
+                hn = norm(x, shared["norm2"])
+                x = x + mlp(shared["ffn"], hn)
+                new_k.append(k2)
+                new_v.append(v2)
+                inv += 1
+        cache = {
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_states),
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ cast_compute(head)
+    return constrain(logits, "logits"), cache

@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked training path, single
+step decode path, and caches.
+
+Shapes: d_inner = expand·d_model, H = d_inner / head_dim heads, state N,
+groups G (B/C shared across heads within a group).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import cast_compute, dense_init, rms_norm
+
+
+class MambaParams(NamedTuple):
+    in_proj: jax.Array     # (D, 2*d_inner + 2*G*N + H)
+    conv_w: jax.Array      # (k, d_conv_ch)  depthwise causal conv
+    conv_b: jax.Array      # (d_conv_ch,)
+    A_log: jax.Array       # (H,)
+    D_skip: jax.Array      # (H,)
+    dt_bias: jax.Array     # (H,)
+    out_norm: jax.Array    # (d_inner,)
+    out_proj: jax.Array    # (d_inner, D)
+
+
+def dims(cfg):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    H = d_inner // sc.head_dim
+    conv_ch = d_inner + 2 * sc.ngroups * sc.state_size
+    return d_inner, H, conv_ch
+
+
+def init_mamba(key, cfg) -> MambaParams:
+    sc = cfg.ssm
+    d_inner, H, conv_ch = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_all = 2 * d_inner + 2 * sc.ngroups * sc.state_size + H
+    return MambaParams(
+        in_proj=dense_init(k1, cfg.d_model, d_in_all),
+        conv_w=jax.random.normal(k2, (sc.conv_kernel, conv_ch), jnp.float32) * 0.1,
+        conv_b=jnp.zeros((conv_ch,), jnp.float32),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        D_skip=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        out_norm=jnp.ones((d_inner,), jnp.float32),
+        out_proj=dense_init(k4, d_inner, cfg.d_model))
+
+
+def _split_proj(cfg, proj):
+    sc = cfg.ssm
+    d_inner, H, _ = dims(cfg)
+    gn = sc.ngroups * sc.state_size
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + d_inner + 2 * gn], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv along time.  xBC: (B, S, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1], :] * cast_compute(conv_w[i])[None, None]
+              for i in range(k))
+    return jax.nn.silu(out + cast_compute(conv_b))
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x[..., k],
+    lower-triangular, -inf above the diagonal.  x: (..., Q)."""
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt, Adt, Bm, Cm, chunk: int):
+    """Chunked SSD (Mamba2 paper, discrete form).
+
+    xdt: (B, S, H, P) inputs pre-multiplied by dt
+    Adt: (B, S, H)    log-decay per step (dt · A, negative)
+    Bm, Cm: (B, S, G, N)
+    Returns y: (B, S, H, P) and final state (B, H, P, N)."""
+    B, S, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if S % chunk:
+        # pad the tail with identity steps (x=0, decay=1): outputs beyond S
+        # are discarded and the final state is unaffected
+        pad = chunk - S % chunk
+        padt = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, final = ssd_chunked(padt(xdt), padt(Adt), padt(Bm), padt(Cm), chunk)
+        return y[:, :S], final
+    nc = S // chunk
+    rep = H // G
+    x_ = xdt.reshape(B, nc, chunk, H, P)
+    A_ = Adt.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)  # (B, H, nc, Q)
+    B_ = Bm.reshape(B, nc, chunk, G, N)
+    C_ = Cm.reshape(B, nc, chunk, G, N)
+
+    A_cum = jnp.cumsum(A_, axis=-1)                          # (B, H, nc, Q)
+    L = jnp.exp(_segsum(A_))                                 # (B, H, nc, Q, Q)
+
+    # intra-chunk (quadratic) term
+    Bh = jnp.repeat(B_, rep, axis=3)                         # (B, nc, Q, H, N)
+    Ch = jnp.repeat(C_, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bhcqk", Ch, Bh).astype(jnp.float32)
+    y_diag = jnp.einsum("bhcqk,bckhp->bcqhp",
+                        (scores * L).astype(xdt.dtype), x_)
+
+    # per-chunk final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)          # (B, H, nc, Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn",
+                        Bh, decay_states.astype(xdt.dtype), x_)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(A_cum[..., -1])                    # (B, H, nc)
+
+    def step(carry, inp):
+        st, dec = inp                                        # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None].astype(carry.dtype) + st
+        return new, carry                                    # emit state *before* chunk
+
+    init = jnp.zeros((B, H, P, N), xdt.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B, nc, H, P, N)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(A_cum)                             # (B, H, nc, Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       Ch, prev_states, state_decay.astype(xdt.dtype))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final
+
+
+def ssd_reference(xdt, Adt, Bm, Cm):
+    """Naive sequential recurrence (oracle for tests)."""
+    B, S, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def step(state, t):
+        x_t, a_t, b_t, c_t = t
+        state = state * jnp.exp(a_t)[..., None, None] + \
+            x_t[..., :, None] * b_t[..., None, :]
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (xdt.astype(jnp.float32).transpose(1, 0, 2, 3),
+          Adt.astype(jnp.float32).transpose(1, 0, 2),
+          Bh.astype(jnp.float32).transpose(1, 0, 2, 3),
+          Ch.astype(jnp.float32).transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xdt.dtype), final.astype(xdt.dtype)
+
+
+def mamba_train(p: MambaParams, cfg, u, impl="xla"):
+    """Full-sequence Mamba2 block.  u: (B, S, D) → (B, S, D)."""
+    sc = cfg.ssm
+    d_inner, H, _ = dims(cfg)
+    proj = u @ cast_compute(p.in_proj)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, p.conv_w, p.conv_b)
+    gn = sc.ngroups * sc.state_size
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + gn], axis=-1)
+    B_, S_ = u.shape[0], u.shape[1]
+    x = x.reshape(B_, S_, H, sc.head_dim)
+    Bm = Bm.reshape(B_, S_, sc.ngroups, sc.state_size)
+    Cm = Cm.reshape(B_, S_, sc.ngroups, sc.state_size)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)          # (B,S,H)
+    A = -jnp.exp(p.A_log)                                             # (H,)
+    xdt = x * dt[..., None].astype(x.dtype)
+    Adt = dt * A
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xdt, Adt, Bm, Cm, chunk=sc.chunk_size)
+    else:
+        y, _ = ssd_chunked(xdt, Adt, Bm, Cm, chunk=sc.chunk_size)
+    y = y + x * cast_compute(p.D_skip)[None, None, :, None]
+    y = y.reshape(B_, S_, d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, p.out_norm, cfg.norm_eps)
+    return y @ cast_compute(p.out_proj)
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, k-1, conv_ch) rolling conv inputs
+    state: jax.Array   # (B, H, P, N) SSM state
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    sc = cfg.ssm
+    d_inner, H, conv_ch = dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, sc.conv_kernel - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, H, sc.head_dim, sc.state_size), dtype))
+
+
+def mamba_decode(p: MambaParams, cfg, u, cache: MambaCache):
+    """One-token step.  u: (B, 1, D) → ((B, 1, D), cache)."""
+    sc = cfg.ssm
+    d_inner, H, conv_ch = dims(cfg)
+    proj = u @ cast_compute(p.in_proj)
+    z, xBC, dt = _split_proj(cfg, proj)                      # (B,1,·)
+    # rolling conv window
+    window = jnp.concatenate([cache.conv, xBC], axis=1)      # (B, k, C)
+    conv_out = (window * cast_compute(p.conv_w)[None]).sum(axis=1, keepdims=True)
+    xBC = jax.nn.silu(conv_out + cast_compute(p.conv_b))
+    new_conv = window[:, 1:, :]
+    gn = sc.ngroups * sc.state_size
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + gn], axis=-1)
+    B_ = u.shape[0]
+    x = x.reshape(B_, H, sc.head_dim)
+    Bm = jnp.repeat(Bm.reshape(B_, sc.ngroups, sc.state_size), H // sc.ngroups, axis=1)
+    Cm = jnp.repeat(Cm.reshape(B_, sc.ngroups, sc.state_size), H // sc.ngroups, axis=1)
+    dt_ = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p.dt_bias)   # (B,H)
+    A = -jnp.exp(p.A_log)
+    decay = jnp.exp(dt_ * A).astype(x.dtype)                          # (B,H)
+    state = cache.state * decay[..., None, None] + \
+        (x * dt_.astype(x.dtype)[..., None])[..., :, None] * Bm[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm)
+    y = y + x * cast_compute(p.D_skip)[None, :, None]
+    y = y.reshape(B_, 1, d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, p.out_norm, cfg.norm_eps)
+    return y @ cast_compute(p.out_proj), MambaCache(new_conv, state)

@@ -1,0 +1,69 @@
+"""AdamW in pure JAX (no optax dependency).
+
+Moments are fp32 and inherit each parameter's sharding (ZeRO-1/3 falls out of
+the param specs for free).  The update is fused into train_step so XLA can
+overlap it with the tail of the backward pass.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # () int32
+    m: Any               # pytree like params, fp32
+    v: Any               # pytree like params, fp32
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+           b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+           grad_clip: float = 1.0):
+    """Returns (new_params, new_state).  `lr` may be a scalar array (from a
+    schedule) or a python float."""
+    step = state.step + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * g32 * g32
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr_at(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr_at

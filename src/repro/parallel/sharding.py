@@ -1,0 +1,310 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP partition specs for params and
+activations, plus a context-scoped `constrain()` used inside model code.
+
+Logical axes:
+  dp    — batch data parallelism = ("pod", "data") on the multi-pod mesh
+  fsdp  — parameter/optimizer sharding (ZeRO-3) = "data" (intra-pod only, so
+          cross-pod traffic stays pure gradient all-reduce)
+  tp    — tensor/expert parallel = "model"
+
+Rules adapt per architecture: a tensor dimension is only sharded when it is
+divisible by the axis size (e.g. 8 KV heads on a 16-way model axis stay
+replicated, Megatron-style; a 51865-entry vocab stays unsharded).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> dict[str, P] | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict[str, P] | None, mesh=None,
+                     fsdp_axis: str | None = None):
+    """Scope activation-sharding rules used by `constrain` inside models.
+    When a mesh is supplied, model code may also use explicit shard_map
+    regions (expert-parallel MoE dispatch)."""
+    prev = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_fsdp = getattr(_state, "fsdp_axis", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    _state.fsdp_axis = fsdp_axis
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh = prev_mesh
+        _state.fsdp_axis = prev_fsdp
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def current_fsdp_axis() -> str | None:
+    return getattr(_state, "fsdp_axis", None)
+
+
+def current_rules() -> dict[str, P] | None:
+    return _rules()
+
+
+def constrain(x, name: str):
+    """Apply `with_sharding_constraint` if a rule for `name` is in scope."""
+    rules = _rules()
+    if rules is None or name not in rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules[name])
+
+
+# ---------------------------------------------------------------------------
+# axis helpers
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+class Axes:
+    """Resolved per-(config, mesh) axis assignment."""
+
+    def __init__(self, cfg, mesh, fsdp: bool = True):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp = dp_axes(mesh)
+        self.dp_size = 1
+        for a in self.dp:
+            self.dp_size *= axis_size(mesh, a)
+        self.tp = axis_size(mesh, "model")
+        self.fsdp_axis = "data" if (fsdp and "data" in mesh.axis_names) else None
+        self.fsdp_size = axis_size(mesh, "data") if self.fsdp_axis else 1
+
+    def tp_dim(self, dim: int) -> str | None:
+        return "model" if _div(dim, self.tp) else None
+
+    def fsdp_dim(self, dim: int) -> str | None:
+        if self.fsdp_axis and _div(dim, self.fsdp_size):
+            return self.fsdp_axis
+        return None
+
+    def batch_dim(self, global_batch: int):
+        """Shard batch over dp axes only when divisible."""
+        if global_batch % self.dp_size == 0:
+            return self.dp
+        if "data" in self.dp and global_batch % axis_size(self.mesh, "data") == 0:
+            return ("data",)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# activation rules per (config, mesh, shape-kind)
+# ---------------------------------------------------------------------------
+
+def make_activation_rules(cfg, mesh, kind: str, global_batch: int,
+                          fsdp: bool = True, seq_shard: bool = False) -> dict[str, P]:
+    ax = Axes(cfg, mesh, fsdp)
+    b = ax.batch_dim(global_batch)
+    rules: dict[str, P] = {}
+    rules["tokens"] = P(b)
+    rules["hidden"] = P(b, "model" if seq_shard else None, None)
+    rules["attn_heads"] = P(b, None, ax.tp_dim(cfg.num_heads), None)
+    rules["kv_heads"] = P(b, None, ax.tp_dim(cfg.num_kv_heads), None)
+    rules["ffn_hidden"] = P(b, None, ax.tp_dim(cfg.d_ff))
+    rules["logits"] = P(b, None, ax.tp_dim(cfg.vocab_size))
+    if cfg.moe is not None:
+        ep = ax.tp_dim(cfg.moe.num_experts)
+        rules["expert_tokens"] = P(ep, None, None)          # (E, C, D)
+    if cfg.ssm is not None:
+        from repro.models.ssm import dims as ssm_dims
+        _, H, _ = ssm_dims(cfg)
+        sh = ax.tp_dim(H)
+        rules["ssm_heads"] = P(b, None, sh, None)           # (B, S, H, P)
+        rules["ssm_state"] = P(b, sh, None, None)           # (B, H, P, N)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (FSDP over "data" + TP over "model")
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg, ax: Axes, stacked: bool):
+    lead = (None,) if stacked else ()
+    hd = cfg.resolved_head_dim
+    q_sh = ax.tp_dim(cfg.num_heads * hd) if ax.tp_dim(cfg.num_heads) else None
+    kv_sh = ax.tp_dim(cfg.num_kv_heads * hd) if ax.tp_dim(cfg.num_kv_heads) else None
+    d_sh = ax.fsdp_dim(cfg.d_model)
+    from repro.models.attention import AttnParams
+    return AttnParams(
+        wq=P(*lead, d_sh, q_sh),
+        wk=P(*lead, d_sh, kv_sh),
+        wv=P(*lead, d_sh, kv_sh),
+        wo=P(*lead, q_sh, d_sh),
+        q_norm=P(*lead, None),
+        k_norm=P(*lead, None))
+
+
+def _mlp_specs(cfg, ax: Axes, stacked: bool, d_ff: int | None = None):
+    lead = (None,) if stacked else ()
+    f = d_ff if d_ff is not None else cfg.d_ff
+    f_sh = ax.tp_dim(f)
+    d_sh = ax.fsdp_dim(cfg.d_model)
+    from repro.models.mlp import MLPParams
+    return MLPParams(
+        w_gate=P(*lead, d_sh, f_sh),
+        w_up=P(*lead, d_sh, f_sh),
+        w_down=P(*lead, f_sh, d_sh))
+
+
+def _moe_specs(cfg, ax: Axes, stacked: bool):
+    lead = (None,) if stacked else ()
+    mc = cfg.moe
+    ep = ax.tp_dim(mc.num_experts)
+    d_sh = ax.fsdp_dim(cfg.d_model)
+    from repro.models.mlp import MoEParams
+    shared = None
+    if mc.num_shared_experts:
+        fe = (mc.expert_d_ff or cfg.d_ff) * mc.num_shared_experts
+        shared = _mlp_specs(cfg, ax, stacked, d_ff=fe)
+    return MoEParams(
+        router=P(*lead, d_sh, None),
+        w_gate=P(*lead, ep, d_sh, None),
+        w_up=P(*lead, ep, d_sh, None),
+        w_down=P(*lead, ep, None, d_sh),
+        shared=shared)
+
+
+def _mamba_specs(cfg, ax: Axes, stacked: bool):
+    lead = (None,) if stacked else ()
+    from repro.models.ssm import MambaParams, dims as ssm_dims
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    d_sh = ax.fsdp_dim(cfg.d_model)
+    return MambaParams(
+        in_proj=P(*lead, d_sh, None),
+        conv_w=P(*lead, None, None),
+        conv_b=P(*lead, None),
+        A_log=P(*lead, None),
+        D_skip=P(*lead, None),
+        dt_bias=P(*lead, None),
+        out_norm=P(*lead, None),
+        out_proj=P(*lead, ax.tp_dim(d_inner), d_sh))
+
+
+def make_param_specs(cfg, mesh, fsdp: bool = True) -> Any:
+    """Pytree of PartitionSpec mirroring `init_params(cfg)` exactly."""
+    ax = Axes(cfg, mesh, fsdp)
+    vocab_sh = ax.tp_dim(cfg.vocab_size)
+    d_sh = ax.fsdp_dim(cfg.d_model)
+    specs: dict[str, Any] = {
+        "embed": P(vocab_sh, d_sh),
+        "final_norm": P(None),
+    }
+    if cfg.is_encdec:
+        enc_layer = {
+            "attn": _attn_specs(cfg, ax, stacked=True),
+            "ffn": _mlp_specs(cfg, ax, stacked=True),
+            "norm1": P(None, None),
+            "norm2": P(None, None),
+        }
+        dec_layer = dict(enc_layer)
+        dec_layer["cross"] = _attn_specs(cfg, ax, stacked=True)
+        dec_layer["norm3"] = P(None, None)
+        specs["encoder"] = {"layers": enc_layer, "final_norm": P(None)}
+        specs["layers"] = dec_layer
+    elif cfg.family in ("dense", "moe", "vlm"):
+        layer: dict[str, Any] = {
+            "attn": _attn_specs(cfg, ax, stacked=True),
+            "norm1": P(None, None),
+            "norm2": P(None, None),
+        }
+        layer["ffn"] = _moe_specs(cfg, ax, stacked=True) if cfg.moe is not None \
+            else _mlp_specs(cfg, ax, stacked=True)
+        specs["layers"] = layer
+    elif cfg.family in ("ssm", "hybrid"):
+        specs["layers"] = {
+            "mamba": _mamba_specs(cfg, ax, stacked=True),
+            "norm1": P(None, None),
+        }
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "hybrid":
+        specs["shared_attn"] = {
+            "attn": _attn_specs(cfg, ax, stacked=False),
+            "ffn": _mlp_specs(cfg, ax, stacked=False),
+            "norm1": P(None),
+            "norm2": P(None),
+        }
+    if cfg.family == "vlm":
+        specs["vision_proj"] = P(d_sh, None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(d_sh, vocab_sh)
+    return specs
+
+
+def make_cache_specs(cfg, mesh, global_batch: int, seq_len: int = 0,
+                     fsdp: bool = True) -> Any:
+    """PartitionSpec tree mirroring `init_cache(cfg, batch, max_len)`.
+
+    KV layout: shard kv-heads over the model axis when divisible; otherwise
+    shard the *sequence* dimension (GQA archs with kv < tp, e.g. 8 kv heads
+    on a 16-way axis) — this keeps both the cache memory and the decode
+    attention FLOPs sharded, at the cost of softmax partial-reductions."""
+    ax = Axes(cfg, mesh, fsdp)
+    b = ax.batch_dim(global_batch)
+    kv_sh = ax.tp_dim(cfg.num_kv_heads)
+    seq_sh = None
+    if kv_sh is None and seq_len and ax.tp_dim(seq_len):
+        seq_sh = "model"
+    kv = P(None, b, seq_sh, kv_sh, None)     # (L, B, S, KV, hd)
+    if cfg.is_encdec:
+        cross_seq = "model" if (kv_sh is None and
+                                ax.tp_dim(cfg.encoder_seq_len)) else None
+        cross = P(None, b, cross_seq, kv_sh, None)
+        return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross}
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": kv, "v": kv}
+    from repro.models.ssm import MambaCache, dims as ssm_dims
+    _, H, _ = ssm_dims(cfg)
+    sh = ax.tp_dim(H)
+    mamba = MambaCache(
+        conv=P(None, b, None, None),          # (L, B, k-1, conv_ch)
+        state=P(None, b, sh, None, None))     # (L, B, H, P, N)
+    if cfg.family == "ssm":
+        return {"mamba": mamba}
+    return {"mamba": mamba, "k": kv, "v": kv}
+
+
+def make_input_specs_tree(cfg, mesh, shape, fsdp: bool = True) -> dict[str, P]:
+    ax = Axes(cfg, mesh, fsdp)
+    b = ax.batch_dim(shape.global_batch)
+    out = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = P(b, None, None)
+    if cfg.is_encdec:
+        out["enc_frames"] = P(b, None, None)
+    return out
+
+
+def named_tree(mesh, spec_tree):
+    """PartitionSpec pytree → NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,126 @@
+"""Fault tolerance at fleet scale: step-time monitoring, straggler
+detection, failure handling policy, and the elastic rescale decision loop.
+
+On real pods this wraps jax.distributed heartbeats; here every component is
+driven through injectable clocks/timings so the logic is fully unit-tested
+on CPU.  The policy pieces:
+
+  * `StepTimeMonitor` — per-host EWMA of step durations; flags hosts whose
+    EWMA exceeds `threshold ×` fleet median (stragglers),
+  * `FailureDetector` — missed-heartbeat counting,
+  * `RunSupervisor` — ties it together: on straggler → reassign data shards
+    (repro.data.reassign_shards); on failure → restore from the latest
+    checkpoint onto the surviving mesh, possibly a smaller/larger crystal
+    from the §3.4 upgrade path (topology.upgrade gives the shard-migration
+    plan).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class StepTimeMonitor:
+    """EWMA step-time tracker with median-based straggler flags."""
+
+    def __init__(self, num_hosts: int, alpha: float = 0.2,
+                 threshold: float = 1.5, warmup_steps: int = 5):
+        self.num_hosts = num_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup_steps = warmup_steps
+        self.ewma = [0.0] * num_hosts
+        self.count = [0] * num_hosts
+
+    def record(self, host: int, seconds: float):
+        if self.count[host] == 0:
+            self.ewma[host] = seconds
+        else:
+            self.ewma[host] = (1 - self.alpha) * self.ewma[host] + \
+                self.alpha * seconds
+        self.count[host] += 1
+
+    def stragglers(self) -> list[int]:
+        ready = [h for h in range(self.num_hosts)
+                 if self.count[h] >= self.warmup_steps]
+        if len(ready) < 2:
+            return []
+        vals = sorted(self.ewma[h] for h in ready)
+        median = vals[len(vals) // 2]
+        return [h for h in ready if self.ewma[h] > self.threshold * median]
+
+
+class FailureDetector:
+    """Missed-heartbeat failure detection with an injectable clock."""
+
+    def __init__(self, num_hosts: int, timeout_s: float = 60.0,
+                 clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.last_seen = {h: clock() for h in range(num_hosts)}
+
+    def heartbeat(self, host: int):
+        self.last_seen[host] = self.clock()
+
+    def dead(self) -> set[int]:
+        now = self.clock()
+        return {h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s}
+
+
+@dataclass
+class SupervisorEvent:
+    kind: str                      # "straggler" | "failure" | "rescale"
+    detail: dict = field(default_factory=dict)
+
+
+class RunSupervisor:
+    """Policy loop: consume monitor signals, emit recovery actions.
+
+    Actions are descriptions (pure data) — the launcher applies them; this
+    keeps the policy deterministic and testable."""
+
+    def __init__(self, num_hosts: int, monitor: StepTimeMonitor | None = None,
+                 detector: FailureDetector | None = None):
+        self.num_hosts = num_hosts
+        self.monitor = monitor or StepTimeMonitor(num_hosts)
+        self.detector = detector or FailureDetector(num_hosts)
+        self.shard_plan = {h: [h] for h in range(num_hosts)}
+        self.events: list[SupervisorEvent] = []
+
+    def poll(self) -> list[SupervisorEvent]:
+        out: list[SupervisorEvent] = []
+        dead = self.detector.dead()
+        if dead:
+            from repro.data.pipeline import reassign_shards
+            self.shard_plan = reassign_shards(self.num_hosts, dead)
+            out.append(SupervisorEvent(
+                "failure",
+                {"dead": sorted(dead),
+                 "action": "restore latest checkpoint on surviving mesh",
+                 "shard_plan": self.shard_plan}))
+        stragglers = [h for h in self.monitor.stragglers() if h not in dead]
+        if stragglers:
+            from repro.data.pipeline import reassign_shards
+            plan = reassign_shards(self.num_hosts, set(stragglers))
+            out.append(SupervisorEvent(
+                "straggler",
+                {"hosts": stragglers,
+                 "action": "shed data shards from stragglers",
+                 "shard_plan": plan}))
+        self.events.extend(out)
+        return out
+
+    def propose_rescale(self, target_chips: int) -> SupervisorEvent:
+        """Elastic rescale along the crystal upgrade path (§3.4)."""
+        from repro.topology.upgrade import migration_stats, upgrade_plan
+        plan = upgrade_plan(target_chips // 2) if target_chips >= 16 else None
+        stats = migration_stats(plan) if plan else {}
+        ev = SupervisorEvent(
+            "rescale",
+            {"target_chips": target_chips,
+             "topology": f"crystal_for_order({target_chips})",
+             "migration": stats,
+             "action": "checkpoint, re-mesh, reshard (checkpoint.reshard_for_mesh)"})
+        self.events.append(ev)
+        return ev

@@ -1,0 +1,97 @@
+"""Step builders: the jit-able train / prefill / decode step functions that
+the launcher lowers, compiles and runs.  These are shared by real training
+(examples, launch/train.py) and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as model_decode
+from repro.models import forward, prefill
+from repro.models.common import cross_entropy
+from repro.optim import adamw
+
+
+def make_train_step(cfg, *, lr: float = 3e-4, remat: str = "dots",
+                    impl: str = "xla", microbatch: int = 0, unroll: int = 1):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    With microbatch > 0 the global batch is split and gradients accumulated
+    with a lax.scan (keeps peak activation memory ∝ microbatch and lets XLA
+    overlap the DP gradient reduction of step i with compute of i+1)."""
+
+    def loss_fn(p, batch):
+        logits, aux = forward(
+            p, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"),
+            impl=impl, remat=remat, unroll=unroll)
+        return cross_entropy(logits, batch["labels"]) + aux
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if microbatch:
+            n = batch["tokens"].shape[0] // microbatch
+
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * microbatch, microbatch, axis=0), batch)
+
+            def body(carry, i):
+                loss_acc, grads_acc = carry
+                loss, grads = grad_fn(params, slice_mb(i))
+                grads = jax.tree.map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), jnp.arange(n))
+            loss = loss / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+        params, opt_state = adamw.update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, max_len: int, impl: str = "xla",
+                      unroll: int = 1):
+    """(params, batch) → (logits_last, cache)."""
+
+    def prefill_step(params, batch):
+        return prefill(
+            params, cfg, batch["tokens"], max_len=max_len,
+            patch_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"), impl=impl, unroll=unroll)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, *, impl: str = "xla", sample: bool = False,
+                     temperature: float = 1.0, unroll: int = 1):
+    """(params, cache, token, position[, rng]) → (next_token, logits, cache).
+
+    serve_step for the `decode_*` shape cells: one new token against a KV
+    cache of seq_len."""
+
+    def decode_fn(params, cache, token, position, rng=None):
+        logits, cache = model_decode(params, cfg, token, cache, position,
+                                     impl=impl, unroll=unroll)
+        if sample:
+            nxt = jax.random.categorical(
+                rng, logits[:, -1, :].astype(jnp.float32) / temperature,
+                axis=-1)
+        else:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, cache
+
+    return decode_fn

@@ -1,0 +1,3 @@
+"""Lattice-topology-aware TPU layer: collective cost model, logical-mesh
+placement, elastic pod upgrades (the paper's §3.4 path)."""
+from . import collective_model, placement, upgrade

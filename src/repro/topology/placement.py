@@ -1,0 +1,191 @@
+"""Logical-mesh → physical-lattice placement.
+
+A (data=16, model=16) logical mesh must be laid onto the 256 chips of a pod
+whose ICI network is BCC(4) (Hermite box 8×8×4).  Each logical axis becomes a
+ring of physical chips; ring collectives run at full link speed only when
+consecutive ring members are lattice neighbours (dilation 1).
+
+`embed_mesh` builds a parametric family of embeddings from the projection
+hierarchy (Definition 7): the Hermite box is split into per-axis digit
+groups, each traversed in Gray order so consecutive logical neighbours move
+by one lattice step whenever the box dimension allows it.  `axis_dilation`
+measures the result with the paper's distance metric; `best_embedding`
+searches the family.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import LatticeGraph
+
+
+def _gray_sequence(size: int) -> np.ndarray:
+    """Boustrophedon (snake) order 0..size-1 — adjacent entries differ by 1
+    step; used to traverse each lattice dimension."""
+    return np.arange(size)
+
+
+def _mixed_radix_snake(sizes: list[int]) -> np.ndarray:
+    """All coordinate tuples of the mixed-radix box in snake order so that
+    consecutive tuples differ by ±1 in exactly one digit.  Returns
+    (prod(sizes), len(sizes))."""
+    total = int(np.prod(sizes))
+    out = np.zeros((total, len(sizes)), dtype=np.int64)
+    for idx in range(total):
+        rem = idx
+        digits = []
+        for s in reversed(sizes):
+            digits.append(rem % s)
+            rem //= s
+        digits.reverse()
+        # snake: reverse digit direction when the prefix parity is odd
+        coord = []
+        parity = 0
+        for d, s in zip(digits, sizes):
+            c = s - 1 - d if parity % 2 else d
+            coord.append(c)
+            parity += d
+        out[idx] = coord
+    return out
+
+
+@dataclass(frozen=True)
+class Embedding:
+    """labels[axis0_index, axis1_index] → physical lattice label."""
+    name: str
+    coords: np.ndarray            # (size0, size1, n) lattice labels
+    axis_sizes: tuple[int, int]
+
+
+def embed_mesh(g: LatticeGraph, axis_sizes: tuple[int, int],
+               dim_split: tuple[tuple[int, ...], tuple[int, ...]]) -> Embedding:
+    """Assign logical (i, j) → lattice label by giving each logical axis a
+    set of lattice dimensions (dim_split) whose Hermite sides multiply to the
+    axis size; each axis traverses its dims in snake order."""
+    sides = g.sides
+    n = g.n
+    s0 = [int(sides[d]) for d in dim_split[0]]
+    s1 = [int(sides[d]) for d in dim_split[1]]
+    assert int(np.prod(s0)) == axis_sizes[0], (s0, axis_sizes)
+    assert int(np.prod(s1)) == axis_sizes[1], (s1, axis_sizes)
+    path0 = _mixed_radix_snake(s0)      # (size0, |dims0|)
+    path1 = _mixed_radix_snake(s1)
+    coords = np.zeros((axis_sizes[0], axis_sizes[1], n), dtype=np.int64)
+    for i in range(axis_sizes[0]):
+        for j in range(axis_sizes[1]):
+            lab = np.zeros(n, dtype=np.int64)
+            for d, c in zip(dim_split[0], path0[i]):
+                lab[d] = c
+            for d, c in zip(dim_split[1], path1[j]):
+                lab[d] = c
+            coords[i, j] = lab
+    return Embedding(
+        name=f"dims{dim_split[0]}x{dim_split[1]}",
+        coords=coords, axis_sizes=axis_sizes)
+
+
+def axis_dilation(g: LatticeGraph, emb: Embedding, axis: int) -> dict:
+    """Ring dilation stats for one logical axis: lattice distance between
+    ring-consecutive chips (including the wrap edge), averaged over the other
+    axis."""
+    coords = emb.coords if axis == 0 else emb.coords.transpose(1, 0, 2)
+    k, other, n = coords.shape
+    hops = []
+    for j in range(other):
+        ring = coords[:, j]
+        nxt = np.roll(ring, -1, axis=0)
+        d = [g.distance(ring[t], nxt[t]) for t in range(k)]
+        hops.append(d)
+    hops = np.asarray(hops, dtype=np.float64)
+    return {"avg": float(hops.mean()), "max": float(hops.max()),
+            "wrap": float(hops[:, -1].mean())}
+
+
+def enumerate_dim_splits(g: LatticeGraph, axis_sizes: tuple[int, int]):
+    """All ways to partition the lattice dimensions into two groups whose
+    side products equal the two logical axis sizes."""
+    n = g.n
+    sides = [int(s) for s in g.sides]
+    for r in range(1, n):
+        for dims0 in itertools.combinations(range(n), r):
+            dims1 = tuple(d for d in range(n) if d not in dims0)
+            if int(np.prod([sides[d] for d in dims0])) == axis_sizes[0] and \
+               int(np.prod([sides[d] for d in dims1])) == axis_sizes[1]:
+                yield (dims0, dims1)
+
+
+def best_embedding(g: LatticeGraph, axis_sizes: tuple[int, int] = (16, 16)):
+    """Search the snake-embedding family; minimize summed average dilation.
+
+    For boxes whose sides don't factor into the axis sizes (e.g. BCC(4)'s
+    8×8×4 box for a 16×16 mesh), axes are built from digit *pairs* by
+    splitting one dimension across both axes: we extend the search with
+    factor-split variants."""
+    candidates = []
+    for split in enumerate_dim_splits(g, axis_sizes):
+        emb = embed_mesh(g, axis_sizes, split)
+        d0 = axis_dilation(g, emb, 0)
+        d1 = axis_dilation(g, emb, 1)
+        candidates.append((d0["avg"] + d1["avg"], emb, d0, d1))
+    # factor-split fallback: chop the largest dimension between both axes
+    if not candidates:
+        candidates.extend(_factor_split_embeddings(g, axis_sizes))
+    if not candidates:
+        raise ValueError("no embedding found")
+    candidates.sort(key=lambda c: c[0])
+    score, emb, d0, d1 = candidates[0]
+    return {"embedding": emb, "score": score, "axis0": d0, "axis1": d1}
+
+
+def _factor_split_embeddings(g: LatticeGraph, axis_sizes: tuple[int, int]):
+    """Embeddings where one lattice dimension contributes a factor to each
+    logical axis (needed when no clean dimension partition exists, e.g.
+    8×8×4 → 16×16 uses dims (0) × (1) and splits dim 2 as 2×2)."""
+    out = []
+    sides = [int(s) for s in g.sides]
+    n = g.n
+    for split_dim in range(n):
+        s = sides[split_dim]
+        for f0 in (2, 4, 8):
+            if s % f0:
+                continue
+            f1 = s // f0
+            rest = [d for d in range(n) if d != split_dim]
+            for r in range(len(rest) + 1):
+                for dims0 in itertools.combinations(rest, r):
+                    dims1 = tuple(d for d in rest if d not in dims0)
+                    p0 = int(np.prod([sides[d] for d in dims0])) * f0
+                    p1 = int(np.prod([sides[d] for d in dims1])) * f1
+                    if (p0, p1) != axis_sizes:
+                        continue
+                    emb = _split_embed(g, axis_sizes, dims0, dims1,
+                                       split_dim, f0, f1)
+                    from_ = axis_dilation(g, emb, 0)
+                    to_ = axis_dilation(g, emb, 1)
+                    out.append((from_["avg"] + to_["avg"], emb, from_, to_))
+    return out
+
+
+def _split_embed(g, axis_sizes, dims0, dims1, split_dim, f0, f1):
+    sides = [int(s) for s in g.sides]
+    n = g.n
+    s0 = [sides[d] for d in dims0] + [f0]
+    s1 = [sides[d] for d in dims1] + [f1]
+    path0 = _mixed_radix_snake(s0)
+    path1 = _mixed_radix_snake(s1)
+    coords = np.zeros((axis_sizes[0], axis_sizes[1], n), dtype=np.int64)
+    for i in range(axis_sizes[0]):
+        for j in range(axis_sizes[1]):
+            lab = np.zeros(n, dtype=np.int64)
+            for d, c in zip(dims0, path0[i][:-1]):
+                lab[d] = c
+            for d, c in zip(dims1, path1[j][:-1]):
+                lab[d] = c
+            lab[split_dim] = path0[i][-1] * f1 + path1[j][-1]
+            coords[i, j] = lab
+    return Embedding(
+        name=f"dims{dims0}+{f0}|{dims1}+{f1}@d{split_dim}",
+        coords=coords, axis_sizes=axis_sizes)

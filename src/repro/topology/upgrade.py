@@ -1,0 +1,86 @@
+"""Elastic pod scaling along the paper's §3.4 upgrade path.
+
+PC(a) → FCC(a) → BCC(a) → PC(2a): each step doubles the machine while
+conserving symmetry and "maintaining most of the original connections" (§7).
+A very useful structural fact falls out of the Hermite labellings:
+
+    PC(a)  box (a,  a,  a)   ⊂  FCC(a) box (2a, a, a)
+    FCC(a) box (2a, a,  a)   ⊂  BCC(a) box (2a, 2a, a)
+    BCC(a) box (2a, 2a, a)   ⊂  PC(2a) box (2a, 2a, 2a)
+
+so every old chip's label is a valid label in the upgraded lattice.  The
+upgrade plan keeps old shards in place and streams the newly required shard
+halves to the new chips; `migration_stats` prices that movement with lattice
+distances (the checkpoint layer consumes the plan for resharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import LatticeGraph, crystal_for_order
+
+
+@dataclass(frozen=True)
+class UpgradePlan:
+    old: LatticeGraph
+    new: LatticeGraph
+    old_to_new_index: np.ndarray    # (N_old,) index of each old chip in new graph
+    new_is_old: np.ndarray          # (N_new,) bool
+    source_of_new: np.ndarray       # (N_new,) old-chip index feeding each new chip
+
+
+def upgrade_plan(old_chips: int) -> UpgradePlan:
+    """Plan the next doubling step for a pod of `old_chips` chips."""
+    old = crystal_for_order(old_chips)
+    new = crystal_for_order(old_chips * 2)
+    if not (old.sides <= new.sides).all():
+        raise ValueError(f"labelling boxes do not nest: {old.sides} vs {new.sides}")
+    old_labels = old.labels                       # valid labels in new graph too
+    old_to_new = new.label_to_index(old_labels)
+    assert len(np.unique(old_to_new)) == old.order
+    new_is_old = np.zeros(new.order, dtype=bool)
+    new_is_old[old_to_new] = True
+    # each fresh chip pulls its shard from the nearest old chip (in the NEW
+    # lattice metric — the wires that actually exist after the upgrade)
+    source = np.empty(new.order, dtype=np.int64)
+    source[old_to_new] = np.arange(old.order)
+    fresh = np.where(~new_is_old)[0]
+    dist_from = new.distances_from_origin
+    new_labels = new.labels
+    for idx in fresh:
+        deltas = old_labels - new_labels[idx]
+        d = dist_from[new.label_to_index(deltas)]
+        source[idx] = int(np.argmin(d))
+    return UpgradePlan(old=old, new=new, old_to_new_index=old_to_new,
+                       new_is_old=new_is_old, source_of_new=source)
+
+
+def migration_stats(plan: UpgradePlan) -> dict:
+    """Hop statistics of the shard migration the upgrade implies."""
+    new = plan.new
+    old_pos = plan.old_to_new_index[plan.source_of_new]
+    hops = []
+    dist = new.distances_from_origin
+    for idx in np.where(~plan.new_is_old)[0]:
+        delta = new.labels[old_pos[idx]] - new.labels[idx]
+        hops.append(int(dist[new.label_to_index(delta)]))
+    hops = np.asarray(hops)
+    return {
+        "fresh_chips": int((~plan.new_is_old).sum()),
+        "avg_hops": float(hops.mean()),
+        "max_hops": int(hops.max()),
+        "diameter_new": new.diameter,
+    }
+
+
+def upgrade_path_names(start: int, steps: int) -> list[str]:
+    kinds = {0: "PC", 1: "FCC", 2: "BCC"}
+    out = []
+    n = start
+    for _ in range(steps + 1):
+        t = n.bit_length() - 1
+        out.append(f"{kinds[t % 3]}({2 ** (t // 3)}) [{n} chips]")
+        n *= 2
+    return out

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU; asserts output shapes and finiteness (no NaNs).
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, get_config, shapes_for, skipped_shapes_for
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          param_count, prefill)
+from repro.models.common import cross_entropy
+
+ARCHS = sorted(REGISTRY)
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(r, B, S):
+    tokens = jax.random.randint(KEY, (B, S), 0, r.vocab_size)
+    kwargs = {}
+    if r.family == "vlm":
+        kwargs["patch_embeds"] = jax.random.normal(
+            KEY, (B, r.num_patch_tokens, r.d_model), jnp.float32)
+    if r.is_encdec:
+        kwargs["enc_frames"] = jax.random.normal(
+            KEY, (B, r.encoder_seq_len, r.d_model), jnp.float32)
+    return tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    r = get_config(arch).reduced()
+    params = init_params(r, KEY)
+    B, S = 2, 64
+    tokens, kwargs = _inputs(r, B, S)
+    logits, aux = jax.jit(lambda p, t: forward(p, r, t, **kwargs))(params, tokens)
+    assert logits.shape == (B, S, r.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite_grads(arch):
+    r = get_config(arch).reduced()
+    params = init_params(r, KEY)
+    B, S = 2, 32
+    tokens, kwargs = _inputs(r, B, S)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = forward(p, r, tokens, **kwargs)
+        return cross_entropy(logits, labels) + aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+    # at least the embedding gets a gradient
+    assert float(jnp.abs(grads["embed"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    r = get_config(arch).reduced()
+    params = init_params(r, KEY)
+    B, S = 2, 33  # deliberately not chunk-aligned
+    tokens, kwargs = _inputs(r, B, S + 1)
+    full_logits, _ = forward(params, r, tokens, **kwargs)
+    last_logits, cache = prefill(params, r, tokens[:, :S], max_len=S + 8, **kwargs)
+    e_prefill = float(jnp.max(jnp.abs(
+        full_logits[:, S - 1].astype(jnp.float32) -
+        last_logits[:, 0].astype(jnp.float32))))
+    dec_logits, cache = decode_step(params, r, tokens[:, S:S + 1], cache,
+                                    jnp.int32(S))
+    e_decode = float(jnp.max(jnp.abs(
+        full_logits[:, S].astype(jnp.float32) -
+        dec_logits[:, 0].astype(jnp.float32))))
+    assert e_prefill < 0.05, f"prefill mismatch {e_prefill}"
+    assert e_decode < 0.05, f"decode mismatch {e_decode}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_multi_step_decode_runs(arch):
+    r = get_config(arch).reduced()
+    params = init_params(r, KEY)
+    B, S = 2, 16
+    tokens, kwargs = _inputs(r, B, S)
+    _, cache = prefill(params, r, tokens, max_len=S + 4, **kwargs)
+    step = jax.jit(lambda p, t, c, pos: decode_step(p, r, t, c, pos))
+    tok = tokens[:, -1:]
+    for i in range(3):
+        logits, cache = step(params, tok, cache, jnp.int32(S + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_remat_matches_no_remat(arch):
+    r = get_config(arch).reduced()
+    params = init_params(r, KEY)
+    tokens, kwargs = _inputs(r, 2, 32)
+    l1, _ = forward(params, r, tokens, remat="none", **kwargs)
+    l2, _ = forward(params, r, tokens, remat="full", **kwargs)
+    assert float(jnp.max(jnp.abs(l1.astype(jnp.float32) -
+                                 l2.astype(jnp.float32)))) < 1e-3
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (the 10-arch table)."""
+    c = get_config("deepseek-moe-16b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 2048, 16, 16, 1408, 102_400)
+    assert (c.moe.num_experts, c.moe.top_k, c.moe.num_shared_experts) == (64, 6, 2)
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4096, 32, 8, 6400, 32_064)
+    assert (c.moe.num_experts, c.moe.top_k) == (16, 2)
+    c = get_config("phi3-mini-3.8b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 3072, 32, 32, 8192, 32_064)
+    c = get_config("qwen3-4b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (36, 2560, 32, 8, 9728, 151_936)
+    assert c.qk_norm
+    c = get_config("olmo-1b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (16, 2048, 16, 16, 8192, 50_304)
+    assert c.nonparametric_norm
+    c = get_config("command-r-plus-104b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (64, 12_288, 96, 8, 33_792, 256_000)
+    c = get_config("zamba2-1.2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (38, 2048, 32, 32, 8192, 32_000)
+    assert c.ssm.state_size == 64
+    c = get_config("mamba2-2.7b")
+    assert (c.num_layers, c.d_model, c.vocab_size) == (64, 2560, 50_280)
+    assert c.ssm.state_size == 128
+    c = get_config("internvl2-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (24, 2048, 16, 8, 8192, 92_553)
+    c = get_config("whisper-base")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (6, 512, 8, 8, 2048, 51_865)
+    assert c.encoder_layers == 6
+
+
+def test_shape_cell_assignment():
+    """40 cells total: 32 live + 8 documented long_500k skips."""
+    live = sum(len(shapes_for(c)) for c in REGISTRY.values())
+    skipped = sum(len(skipped_shapes_for(c)) for c in REGISTRY.values())
+    assert live + skipped == 40
+    assert skipped == 8
+    assert len(shapes_for(get_config("mamba2-2.7b"))) == 4
+    assert len(shapes_for(get_config("zamba2-1.2b"))) == 4

@@ -1,0 +1,198 @@
+"""Paper §3 (Table 1) and §4 (Table 2) reproduction tests."""
+import numpy as np
+import pytest
+
+from repro.core import (BCC, FCC, PC, RTT, FourD_BCC, FourD_FCC, LatticeGraph,
+                        Lip, Torus, bcc_average_distance, bcc_diameter,
+                        bcc_matrix, boxplus, crystal_for_order, direct_sum,
+                        fcc_average_distance, fcc_diameter, fcc_matrix,
+                        mixed_torus_diameter, pc_average_distance, pc_diameter,
+                        pc_matrix, rtt_matrix, torus_average_distance,
+                        torus_matrix, upgrade_path)
+from repro.core import intmat
+
+
+# ---------------------------------------------------------------------------
+# orders (determinants)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("a", [1, 2, 3, 4, 5])
+def test_crystal_orders(a):
+    assert PC(a).order == a**3
+    assert FCC(a).order == 2 * a**3
+    assert BCC(a).order == 4 * a**3
+    assert RTT(a).order == 2 * a**2
+    assert FourD_FCC(a).order == 2 * a**4
+    assert FourD_BCC(a).order == 8 * a**4
+    assert Lip(a).order == 16 * a**4
+
+
+def test_degree_regularity():
+    g = BCC(3)
+    nbr = g.neighbor_indices
+    assert nbr.shape == (g.order, 6)
+
+
+# ---------------------------------------------------------------------------
+# Table 1: diameters and average distances
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("a", [2, 3, 4, 5, 6])
+def test_table1_pc(a):
+    g = PC(a)
+    assert g.diameter == pc_diameter(a) == 3 * (a // 2)
+    assert g.average_distance == pytest.approx(pc_average_distance(a), rel=1e-12)
+
+
+@pytest.mark.parametrize("a", [2, 3, 4, 5, 6])
+def test_table1_fcc(a):
+    g = FCC(a)
+    assert g.diameter == fcc_diameter(a) == (3 * a) // 2
+    assert g.average_distance == pytest.approx(fcc_average_distance(a), rel=1e-12)
+
+
+@pytest.mark.parametrize("a", [2, 3, 4, 5, 6])
+def test_table1_bcc(a):
+    g = BCC(a)
+    assert g.diameter == bcc_diameter(a) == (3 * a) // 2
+    assert g.average_distance == pytest.approx(bcc_average_distance(a), rel=1e-12)
+
+
+@pytest.mark.parametrize("a", [2, 3, 4])
+def test_table1_mixed_tori(a):
+    t1 = Torus(2 * a, a, a)
+    assert t1.order == 2 * a**3
+    assert t1.diameter == mixed_torus_diameter(2 * a, a, a) == a + 2 * (a // 2)
+    assert t1.average_distance == pytest.approx(
+        torus_average_distance(2 * a, a, a), rel=1e-12)
+    t2 = Torus(2 * a, 2 * a, a)
+    assert t2.order == 4 * a**3
+    assert t2.diameter == 2 * a + a // 2
+
+
+def test_crystals_beat_equal_size_tori():
+    """The crux of §3.4: crystals have strictly better k̄ and diameter than
+    the same-size mixed-radix tori."""
+    for a in (2, 4, 6):
+        assert FCC(a).average_distance < Torus(2 * a, a, a).average_distance
+        assert FCC(a).diameter <= Torus(2 * a, a, a).diameter
+        assert BCC(a).average_distance < Torus(2 * a, 2 * a, a).average_distance
+        assert BCC(a).diameter < Torus(2 * a, 2 * a, a).diameter
+
+
+# ---------------------------------------------------------------------------
+# projections (Lemmas 13, 14, 16; Propositions 17, 18)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("a", [2, 3, 4])
+def test_projections(a):
+    assert intmat.right_equivalent(PC(a).projection().matrix, torus_matrix(a, a))
+    assert intmat.right_equivalent(FCC(a).projection().matrix, rtt_matrix(a))
+    assert intmat.right_equivalent(BCC(a).projection().matrix, torus_matrix(2 * a, 2 * a))
+    assert intmat.right_equivalent(FourD_FCC(a).projection().matrix, fcc_matrix(a))
+    assert intmat.right_equivalent(FourD_BCC(a).projection().matrix,
+                                   torus_matrix(2 * a, 2 * a, 2 * a))
+
+
+def test_lip_projection_is_fcc_2a():
+    """Proposition 19: Lip(a) is a lift of FCC(2a)."""
+    a = 2
+    assert intmat.right_equivalent(Lip(a).projection().matrix, fcc_matrix(2 * a))
+
+
+def test_projection_node_count_identity():
+    """|G(M)| = |G(B)| * side (paper §2)."""
+    for g in (FCC(3), BCC(3), FourD_FCC(2), Lip(2)):
+        assert g.order == g.projection().order * g.side
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5: torus == diagonal lattice graph
+# ---------------------------------------------------------------------------
+
+def test_torus_is_lattice_graph():
+    g = Torus(4, 3, 2)
+    assert g.order == 24
+    # distance from origin equals separable ring distance
+    for v in g.labels:
+        ring = sum(min(int(c) % s, s - int(c) % s) for c, s in zip(v, (4, 3, 2)))
+        assert g.distance(np.zeros(3, dtype=np.int64), v) == ring
+
+
+# ---------------------------------------------------------------------------
+# Example 10: G([[4,0,0],[0,4,2],[0,0,4]])
+# ---------------------------------------------------------------------------
+
+def test_example_10():
+    M = np.array([[4, 0, 0], [0, 4, 2], [0, 0, 4]])
+    g = LatticeGraph(M)
+    assert g.order == 64
+    # projection is T(4, 4); e_3 generates a cycle of length 8
+    assert intmat.right_equivalent(g.projection().matrix, torus_matrix(4, 4))
+    assert g.order_of([0, 0, 1]) == 8
+    # 8 / side = 2 vertices of the cycle per copy
+    assert g.order_of([0, 0, 1]) // g.side == 2
+
+
+# ---------------------------------------------------------------------------
+# Theorem 24: boxplus common lifts (Example 25)
+# ---------------------------------------------------------------------------
+
+def test_example25_pc_bcc():
+    out = boxplus(pc_matrix(2 * 2), bcc_matrix(2))
+    a = 2
+    expect = np.array([
+        [2 * a, 0, 0, a],
+        [0, 2 * a, 0, a],
+        [0, 0, 2 * a, 0],
+        [0, 0, 0, a]])
+    assert np.array_equal(out, expect)
+
+
+def test_example25_pc_fcc_is_5d():
+    out = boxplus(pc_matrix(4), fcc_matrix(2))
+    assert out.shape == (5, 5)
+    assert abs(intmat.det(out)) == 8 * 2**5
+
+
+def test_example25_bcc_fcc_is_5d():
+    out = boxplus(bcc_matrix(2), fcc_matrix(2))
+    assert out.shape == (5, 5)
+    assert abs(intmat.det(out)) == 4 * 2**5
+
+
+def test_boxplus_projections_recover_both():
+    """Theorem 24 i): both operands appear as projections of the common lift."""
+    M = boxplus(pc_matrix(4), bcc_matrix(2))
+    g = LatticeGraph(M)
+    # project away dim 4 -> PC(4); project away dim 3 (swap first) -> BCC-like
+    assert intmat.right_equivalent(g.projection().matrix, pc_matrix(4))
+
+
+def test_boxplus_no_common_columns_is_direct_sum():
+    M1, M2 = torus_matrix(3, 3), torus_matrix(5, 5)
+    assert np.array_equal(boxplus(M1, M2), direct_sum(M1, M2))
+
+
+# ---------------------------------------------------------------------------
+# §3.4 upgrade path
+# ---------------------------------------------------------------------------
+
+def test_upgrade_path_powers_of_two():
+    path = upgrade_path(64, 6)  # 64,128,256,512,1024,2048,4096
+    orders = [g.order for g in path]
+    assert orders == [64, 128, 256, 512, 1024, 2048, 4096]
+    kinds = [g.n for g in path]
+    assert all(k == 3 for k in kinds)
+    # 256-chip pod is BCC(4); 512 is PC(8); 1024 is FCC(8)
+    assert np.array_equal(crystal_for_order(256).matrix, bcc_matrix(4))
+    assert np.array_equal(crystal_for_order(512).matrix, pc_matrix(8))
+    assert np.array_equal(crystal_for_order(1024).matrix, fcc_matrix(8))
+
+
+def test_upgrade_path_diameter_monotone_vs_torus():
+    """Doubling along the crystal path keeps diameter growth below the
+    mixed-radix torus alternative."""
+    for a in (2, 4):
+        assert FCC(a).diameter <= Torus(2 * a, a, a).diameter
+        assert BCC(a).diameter <= Torus(2 * a, 2 * a, a).diameter

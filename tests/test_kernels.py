@@ -1,0 +1,205 @@
+"""Per-kernel shape/dtype sweeps: interpret-mode Pallas vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+def _fold(t):
+    B, S, H, hd = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,hd,bq,bk", [
+    (1, 128, 2, 2, 64, 64, 64),
+    (2, 256, 4, 2, 64, 128, 64),
+    (1, 256, 8, 1, 128, 64, 128),   # heavy GQA
+    (2, 512, 2, 2, 32, 128, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(dtype, B, S, H, KV, hd, bq, bk, causal):
+    q = jax.random.normal(KEY, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    kr = jnp.repeat(k, H // KV, axis=2)
+    vr = jnp.repeat(v, H // KV, axis=2)
+    expect = ref.flash_attention(_fold(q), _fold(kr), _fold(vr), causal=causal)
+    expect = expect.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **_tol(dtype))
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 128, 256]),
+       st.sampled_from([32, 64]))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property(B, S, hd):
+    H = 2
+    q = jax.random.normal(KEY, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    expect = ref.flash_attention(_fold(q), _fold(k), _fold(v), causal=True)
+    expect = expect.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, expect, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_rows_are_convex_combinations():
+    """Softmax output rows must lie in the convex hull of V rows: max |out|
+    bounded by max |v| (sanity property independent of the oracle)."""
+    B, S, H, hd = 1, 128, 2, 32
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+    # first row attends only to itself
+    np.testing.assert_allclose(out[:, 0], v[:, 0], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S_max,pos,bk", [
+    (512, 0, 128), (512, 511, 128), (1024, 700, 256), (2048, 33, 512),
+])
+def test_decode_attention_sweep(dtype, S_max, pos, bk):
+    B, H, KV, hd = 2, 4, 2, 64
+    q = jax.random.normal(KEY, (B, 1, H, hd), dtype)
+    kc = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S_max, KV, hd), dtype)
+    vc = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S_max, KV, hd), dtype)
+    out = ops.decode_attention(q, kc, vc, jnp.int32(pos), block_k=bk)
+    kr = jnp.repeat(kc, H // KV, axis=2)
+    vr = jnp.repeat(vc, H // KV, axis=2)
+    expect = ref.decode_attention(_fold(q), _fold(kr), _fold(vr), pos)
+    expect = expect.reshape(B, H, 1, hd).transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **_tol(dtype))
+
+
+def test_decode_matches_flash_last_row():
+    """Decoding token S-1 with a full cache equals the last row of causal
+    flash attention over the same sequence."""
+    B, S, H, hd = 1, 256, 2, 64
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd))
+    full = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    dec = ops.decode_attention(q[:, -1:], k, v, jnp.int32(S - 1), block_k=128)
+    np.testing.assert_allclose(
+        dec, full[:, -1:].reshape(B, 1, H * hd), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,H,P,N,G,chunk", [
+    (128, 4, 16, 8, 1, 32),
+    (256, 2, 32, 16, 1, 64),
+    (96, 4, 16, 8, 2, 32),     # grouped B/C
+    (100, 2, 16, 8, 1, 32),    # non-chunk-aligned
+])
+def test_ssd_kernel_sweep(dtype, S, H, P, N, G, chunk):
+    B = 2
+    xdt = (jax.random.normal(KEY, (B, S, H, P)) * 0.1).astype(dtype)
+    Adt = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H)))
+    Bm = (jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, G, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, G, N)) * 0.3).astype(dtype)
+    y, final = ops.ssd(xdt, Adt, Bm, Cm, chunk=chunk)
+    from repro.models.ssm import ssd_reference
+    y2, f2 = ssd_reference(xdt, Adt, Bm, Cm)
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), y2.astype(jnp.float32), atol=5e-2, rtol=5e-2)
+    np.testing.assert_allclose(
+        final.astype(jnp.float32), f2.astype(jnp.float32), atol=5e-2, rtol=5e-2)
+
+
+def test_ssd_intra_chunk_vs_oracle():
+    BH, nc, Q, P, N = 3, 4, 32, 16, 8
+    xdt = jax.random.normal(KEY, (BH, nc, Q, P)) * 0.1
+    Adt = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1), (BH, nc, Q)))
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 2), (BH, nc, Q, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 3), (BH, nc, Q, N)) * 0.3
+    from repro.kernels.ssd_scan import ssd_intra_chunk
+    y, st_, cs = ssd_intra_chunk(xdt, Adt, Bm, Cm, interpret=True)
+    y2, st2, cs2 = ref.ssd_intra_chunk(xdt, Adt, Bm, Cm)
+    np.testing.assert_allclose(y, y2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(st_, st2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(cs, cs2, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,block", [
+    ((8, 128), 4), ((4, 37, 128), 256), ((2, 3, 5, 64), 1), ((256, 512), 64),
+])
+def test_rmsnorm_sweep(dtype, shape, block):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 7), (shape[-1],), jnp.float32)
+    out = ops.rmsnorm(x, w, block_rows=block)
+    expect = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **_tol(dtype))
+
+
+@given(st.sampled_from([64, 128, 256]), st.integers(1, 64))
+@settings(max_examples=10, deadline=None)
+def test_rmsnorm_property_unit_scale(D, rows):
+    """RMSNorm with unit weight produces rows with mean-square ≈ 1."""
+    x = jax.random.normal(KEY, (rows, D)) * 3.0 + 1.0
+    out = ops.rmsnorm(x, jnp.ones((D,)))
+    ms = jnp.mean(out.astype(jnp.float32) ** 2, axis=-1)
+    np.testing.assert_allclose(ms, np.ones(rows), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# model integration: pallas impl == xla impl
+# ---------------------------------------------------------------------------
+
+def test_model_forward_pallas_matches_xla():
+    from repro.configs import get_config
+    from repro.models import forward, init_params
+    r = get_config("qwen3-4b").reduced()
+    params = init_params(r, KEY)
+    tokens = jax.random.randint(KEY, (2, 64), 0, r.vocab_size)
+    l_xla, _ = forward(params, r, tokens, impl="xla")
+    l_pal, _ = forward(params, r, tokens, impl="pallas")
+    np.testing.assert_allclose(
+        l_xla.astype(jnp.float32), l_pal.astype(jnp.float32),
+        atol=5e-2, rtol=5e-2)
+
+
+def test_mamba_forward_pallas_matches_xla():
+    from repro.configs import get_config
+    from repro.models import forward, init_params
+    r = get_config("mamba2-2.7b").reduced()
+    params = init_params(r, KEY)
+    tokens = jax.random.randint(KEY, (2, 64), 0, r.vocab_size)
+    l_xla, _ = forward(params, r, tokens, impl="xla")
+    l_pal, _ = forward(params, r, tokens, impl="pallas")
+    np.testing.assert_allclose(
+        l_xla.astype(jnp.float32), l_pal.astype(jnp.float32),
+        atol=5e-2, rtol=5e-2)

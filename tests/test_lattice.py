@@ -1,0 +1,110 @@
+"""LatticeGraph structural invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (LatticeGraph, Torus, bcc_matrix, fcc_matrix,
+                        symmetric_throughput_bound,
+                        mixed_torus_throughput_bound, channel_load,
+                        route_bcc, route_fcc)
+from repro.core import intmat
+
+
+def small_nonsingular(n=3, lo=-4, hi=4, max_det=300):
+    return (
+        st.lists(st.lists(st.integers(lo, hi), min_size=n, max_size=n),
+                 min_size=n, max_size=n)
+        .map(lambda rows: np.array(rows, dtype=np.int64))
+        .filter(lambda M: 0 < abs(intmat.det(M)) <= max_det)
+    )
+
+
+@given(small_nonsingular())
+@settings(max_examples=25, deadline=None)
+def test_order_and_degree(M):
+    g = LatticeGraph(M)
+    assert g.order == abs(intmat.det(M))
+    assert g.neighbor_indices.shape == (g.order, 2 * 3)
+    # adjacency is an involution: +e_i then -e_i returns home
+    nbr = g.neighbor_indices
+    for i in range(3):
+        fwd = nbr[:, 2 * i]
+        back = nbr[fwd, 2 * i + 1]
+        assert np.array_equal(back, np.arange(g.order))
+
+
+@given(small_nonsingular())
+@settings(max_examples=20, deadline=None)
+def test_vertex_transitivity_of_distances(M):
+    """Cayley graph: the multiset of distances from u equals that from 0."""
+    g = LatticeGraph(M)
+    if not g.is_connected():
+        return
+    d0 = np.sort(g.distances_from_origin)
+    rng = np.random.default_rng(0)
+    u = g.labels[rng.integers(0, g.order)]
+    du = np.sort(g.distances_from_origin[g.label_to_index(g.labels - u)])
+    assert np.array_equal(d0, du)
+
+
+@given(small_nonsingular())
+@settings(max_examples=20, deadline=None)
+def test_triangle_inequality_and_symmetry(M):
+    g = LatticeGraph(M)
+    if not g.is_connected():
+        return
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        u, v, w = (g.labels[rng.integers(0, g.order)] for _ in range(3))
+        duv, dvw, duw = g.distance(u, v), g.distance(v, w), g.distance(u, w)
+        assert duw <= duv + dvw
+        assert duv == g.distance(v, u)  # undirected
+
+
+def test_distance_distribution_sums_to_order():
+    g = LatticeGraph(fcc_matrix(3))
+    assert g.distance_distribution().sum() == g.order
+
+
+# ---------------------------------------------------------------------------
+# throughput bounds (§3.4)
+# ---------------------------------------------------------------------------
+
+def test_throughput_gains_fcc_vs_torus():
+    """FCC(a) vs T(2a,a,a): ≈71% gain under uniform traffic (paper §3.4)."""
+    a = 8
+    from repro.core import FCC
+    gain = symmetric_throughput_bound(FCC(a)) / mixed_torus_throughput_bound(2 * a, a, a)
+    assert gain == pytest.approx(1.71, abs=0.06)
+
+
+def test_throughput_gains_bcc_vs_torus():
+    """BCC(a) vs T(2a,2a,a): ≈37% gain (paper §3.4)."""
+    a = 8
+    from repro.core import BCC
+    gain = symmetric_throughput_bound(BCC(a)) / mixed_torus_throughput_bound(2 * a, 2 * a, a)
+    assert gain == pytest.approx(1.37, abs=0.06)
+
+
+def test_channel_load_symmetric_graph_is_balanced():
+    """Edge-symmetric + minimal routing with random sources → near-uniform
+    directional link loads; mixed-radix torus → 2x imbalance across dims."""
+    from repro.core import BCC
+    g = BCC(2)
+    rng = np.random.default_rng(3)
+    pairs = 4000
+    v = g.labels[rng.integers(0, g.order, pairs)] - g.labels[rng.integers(0, g.order, pairs)]
+    rec = route_bcc(2, v, rng=rng)  # Remark 30: randomized tie-breaking
+    load = channel_load(g, rec)
+    per_dim = load.reshape(g.order, 3, 2).mean(axis=(0, 2))
+    assert per_dim.max() / per_dim.min() < 1.25
+
+    t = Torus(4, 2, 2)
+    labels = t.labels
+    v = labels[rng.integers(0, t.order, pairs)] - labels[rng.integers(0, t.order, pairs)]
+    from repro.core import route_torus
+    rec = route_torus((4, 2, 2), v)
+    load = channel_load(t, rec)
+    per_dim = load.reshape(t.order, 3, 2).mean(axis=(0, 2))
+    assert per_dim.max() / per_dim.min() > 1.5  # long dimension dominates

@@ -1,0 +1,145 @@
+"""Routing tests (paper §5): validity + minimality against the BFS oracle.
+
+A routing record r for difference v must satisfy r ≡ v (mod M) (validity)
+and |r|₁ = d_G(0, v) (minimality, Theorem 29)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (BCC, FCC, RTT, HierarchicalRouter, LatticeGraph,
+                        bcc_matrix, boxplus, fcc_matrix, fourd_bcc_matrix,
+                        fourd_fcc_matrix, lip_matrix,
+                        minimal_record_bruteforce, norm1, pc_matrix,
+                        route_bcc, route_fcc, route_ring, route_rtt,
+                        route_torus, rtt_matrix, torus_matrix)
+
+RNG = np.random.default_rng(7)
+
+
+def assert_router_exact(g: LatticeGraph, router, trials=1500):
+    labels = g.labels
+    s = labels[RNG.integers(0, g.order, trials)]
+    d = labels[RNG.integers(0, g.order, trials)]
+    v = d - s
+    r = np.asarray(router(v))
+    assert (g.label_to_index(r) == g.label_to_index(v)).all(), "invalid record"
+    dist = g.distances_from_origin[g.label_to_index(v)]
+    assert (norm1(r) == dist).all(), "non-minimal record"
+
+
+# ---------------------------------------------------------------------------
+# closed-form routers (Algorithms 2, 3, 4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("a", [1, 2, 3, 4, 5, 8])
+def test_algorithm3_rtt(a):
+    assert_router_exact(RTT(a), lambda v: route_rtt(a, v))
+
+
+@pytest.mark.parametrize("a", [2, 3, 4, 5])
+def test_algorithm2_fcc(a):
+    assert_router_exact(FCC(a), lambda v: route_fcc(a, v))
+
+
+@pytest.mark.parametrize("a", [2, 3, 4, 5])
+def test_algorithm4_bcc(a):
+    assert_router_exact(BCC(a), lambda v: route_bcc(a, v))
+
+
+def test_paper_example_32():
+    vs = np.array([1, 3, 3])
+    vd = np.array([6, 0, 1])
+    r = route_fcc(4, vd - vs)
+    assert np.array_equal(r, [1, 1, -2])
+    assert norm1(r) == 4
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (hierarchical) on the whole zoo
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M", [
+    rtt_matrix(4), fcc_matrix(3), bcc_matrix(3), pc_matrix(4),
+    fourd_fcc_matrix(3), fourd_bcc_matrix(2), lip_matrix(2),
+    boxplus(pc_matrix(4), bcc_matrix(2)),
+    boxplus(bcc_matrix(2), fcc_matrix(2)),
+    torus_matrix(6, 4, 2),
+    np.array([[4, 0, 0], [0, 4, 2], [0, 0, 4]]),   # Example 10
+], ids=["RTT4", "FCC3", "BCC3", "PC4", "4DFCC3", "4DBCC2", "Lip2",
+        "PCboxBCC", "BCCboxFCC", "T642", "Ex10"])
+def test_hierarchical_router_minimal(M):
+    g = LatticeGraph(M)
+    assert_router_exact(g, HierarchicalRouter(M), trials=1200)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 10), st.integers(-40, 40))
+@settings(max_examples=80, deadline=None)
+def test_ring_routing_minimal(a, d):
+    r = int(route_ring(a, d))
+    assert (d - r) % a == 0
+    assert abs(r) == min(d % a, a - d % a)
+
+
+@given(st.integers(1, 6),
+       st.integers(-60, 60), st.integers(-60, 60))
+@settings(max_examples=60, deadline=None)
+def test_rtt_routing_valid_any_difference(a, x, y):
+    """Algorithm 3 must return a valid record for ANY integer difference,
+    not only those inside L − L."""
+    v = np.array([x, y])
+    r = route_rtt(a, v)
+    g = RTT(a)
+    assert g.label_to_index(r) == g.label_to_index(v)
+    assert norm1(r) == g.distances_from_origin[g.label_to_index(v)]
+
+
+@given(st.integers(2, 4), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_fcc_bcc_routing_random_pairs(a, seed):
+    rng = np.random.default_rng(seed)
+    for ctor, router in ((FCC, route_fcc), (BCC, route_bcc)):
+        g = ctor(a)
+        s = g.labels[rng.integers(0, g.order)]
+        d = g.labels[rng.integers(0, g.order)]
+        r = router(a, d - s)
+        assert g.label_to_index(r) == g.label_to_index(d - s)
+        assert norm1(r) == g.distance(s, d)
+
+
+@given(st.integers(2, 3), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_hierarchical_equals_bruteforce(a, seed):
+    M = fourd_fcc_matrix(a)
+    g = LatticeGraph(M)
+    router = HierarchicalRouter(M)
+    rng = np.random.default_rng(seed)
+    v = g.labels[rng.integers(0, g.order)] - g.labels[rng.integers(0, g.order)]
+    r = router(v)
+    rb = minimal_record_bruteforce(M, v, box=3)
+    assert norm1(r) == norm1(rb)
+
+
+# ---------------------------------------------------------------------------
+# Remark 33 structure: number of nested calls
+# ---------------------------------------------------------------------------
+
+def test_remark33_cycle_intersections():
+    """ord(e_n)/a = 2 sub-calls for FCC and BCC lifts (paper §5.2)."""
+    for a in (2, 3, 4):
+        hr = HierarchicalRouter(fcc_matrix(a))
+        assert hr.copy_table.shape == (a, 2)
+        hr = HierarchicalRouter(bcc_matrix(a))
+        assert hr.copy_table.shape == (a, 2)
+
+
+def test_torus_routing_separable():
+    sides = (5, 4, 3)
+    g = LatticeGraph(torus_matrix(*sides))
+    v = np.array([[4, -3, 2], [0, 1, -1], [2, 2, 2]])
+    r = route_torus(sides, v)
+    assert (norm1(r) == g.distances_from_origin[g.label_to_index(v)]).all()

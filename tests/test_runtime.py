@@ -1,0 +1,235 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault
+tolerance, gradient compression, topology layer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.checkpointing import (AsyncCheckpointer, latest_step,
+                                            restore_checkpoint,
+                                            save_checkpoint)
+from repro.data.pipeline import DataConfig, SyntheticLMStream, reassign_shards
+from repro.optim import adamw
+from repro.parallel import compression
+from repro.runtime.fault_tolerance import (FailureDetector, RunSupervisor,
+                                           StepTimeMonitor)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = adamw.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = adamw.update(grads, state, params, lr=5e-2,
+                                     weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+    assert int(state.step) == 200
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.ones(4)}
+    state = adamw.init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    new_params, _ = adamw.update(huge, state, params, lr=1e-3, grad_clip=1.0)
+    assert bool(jnp.isfinite(new_params["w"]).all())
+    assert float(jnp.abs(new_params["w"] - params["w"]).max()) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    sched = adamw.cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(10))) == pytest.approx(1e-3, rel=1e-5)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.0, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=8)
+    a = SyntheticLMStream(cfg, num_shards=2, shard=0).batch(7)
+    b = SyntheticLMStream(cfg, num_shards=2, shard=0).batch(7)
+    assert np.array_equal(a["tokens"], b["tokens"])        # reproducible
+    c = SyntheticLMStream(cfg, num_shards=2, shard=1).batch(7)
+    assert not np.array_equal(a["tokens"], c["tokens"])    # shards differ
+    full = SyntheticLMStream(cfg, num_shards=2).global_batch(7)
+    assert full["tokens"].shape == (8, 32)
+    assert np.array_equal(full["tokens"][:4], a["tokens"])
+    # labels are next tokens
+    assert np.array_equal(full["labels"][:, :-1], full["tokens"][:, 1:])
+
+
+@given(st.integers(2, 16), st.sets(st.integers(0, 15), max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_reassign_shards_covers_everything(n, dead):
+    dead = {d for d in dead if d < n}
+    if len(dead) >= n:
+        return
+    plan = reassign_shards(n, dead)
+    covered = sorted(s for lst in plan.values() for s in lst)
+    assert covered == list(range(n))                 # no shard lost
+    assert all(h not in dead for h in plan)          # no dead host works
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    save_checkpoint(tmp_path, 3, tree)
+    save_checkpoint(tmp_path, 7, jax.tree.map(lambda x: x * 2, tree))
+    assert latest_step(tmp_path) == 7
+    restored = restore_checkpoint(tmp_path, 7, tree)
+    assert np.allclose(np.asarray(restored["a"]), np.arange(6).reshape(2, 3) * 2)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    tree = {"a": jnp.ones(3)}
+    save_checkpoint(tmp_path, 1, tree)
+    # simulate crash leftovers: a tmp dir must be ignored
+    (tmp_path / ".tmp_step_00000009").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    tree = {"w": jnp.arange(10).astype(jnp.float32)}
+    for s in (10, 20):
+        ck.save(s, jax.tree.map(lambda x: x + s, tree))
+    ck.close()
+    assert latest_step(tmp_path) == 20
+    out = restore_checkpoint(tmp_path, 20, tree)
+    assert np.allclose(np.asarray(out["w"]), np.arange(10) + 20)
+
+
+def test_restore_is_elastic_shape_checked(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    save_checkpoint(tmp_path, 0, tree)
+    with pytest.raises(AssertionError):
+        restore_checkpoint(tmp_path, 0, {"w": jnp.ones((2, 2))})
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection():
+    mon = StepTimeMonitor(num_hosts=4, warmup_steps=3)
+    for step in range(6):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 3.0)
+    assert mon.stragglers() == [2]
+
+
+def test_failure_detector_with_fake_clock():
+    now = [0.0]
+    det = FailureDetector(num_hosts=3, timeout_s=10.0, clock=lambda: now[0])
+    now[0] = 5.0
+    det.heartbeat(0)
+    det.heartbeat(1)
+    now[0] = 12.0
+    assert det.dead() == {2}
+
+
+def test_supervisor_policy_end_to_end():
+    now = [0.0]
+    sup = RunSupervisor(
+        num_hosts=4,
+        monitor=StepTimeMonitor(4, warmup_steps=2),
+        detector=FailureDetector(4, timeout_s=10.0, clock=lambda: now[0]))
+    for _ in range(4):
+        for h in range(4):
+            sup.monitor.record(h, 4.0 if h == 1 else 1.0)
+    now[0] = 20.0
+    for h in (0, 1, 2):
+        sup.detector.heartbeat(h)
+    events = sup.poll()
+    kinds = {e.kind for e in events}
+    assert "failure" in kinds and "straggler" in kinds
+    fail = next(e for e in events if e.kind == "failure")
+    assert fail.detail["dead"] == [3]
+    covered = sorted(s for v in fail.detail["shard_plan"].values() for s in v)
+    assert covered == [0, 1, 2, 3]
+    ev = sup.propose_rescale(512)
+    assert ev.detail["migration"]["fresh_chips"] == 256
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_quantization_unbiased_over_steps():
+    """Error feedback: the accumulated dequantized sum converges to the true
+    gradient sum (residual carries the error forward)."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    state = compression.init_state({"g": g})
+    total_q = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        qs, scales, state = compression.compress({"g": g}, state)
+        total_q = total_q + compression.decompress(qs, scales)["g"]
+    err = float(jnp.abs(total_q - g * steps).max())
+    assert err < float(jnp.abs(g).max()) * 0.2      # bounded drift
+    # one-step error is bounded by the quantization step
+    qs, scales, _ = compression.compress({"g": g}, compression.init_state({"g": g}))
+    one = compression.decompress(qs, scales)["g"]
+    assert float(jnp.abs(one - g).max()) <= float(scales["g"]) * 0.51
+
+
+# ---------------------------------------------------------------------------
+# topology layer
+# ---------------------------------------------------------------------------
+
+def test_pod_capacity_matches_paper_gains():
+    from repro.core import BCC, FCC, Torus
+    from repro.topology.collective_model import analyze_pod
+    bcc = analyze_pod("bcc", BCC(4))
+    tor = analyze_pod("t", Torus(8, 8, 4), (8, 8, 4))
+    assert bcc.uniform_capacity / tor.uniform_capacity == pytest.approx(1.39, abs=0.05)
+    fcc = analyze_pod("fcc", FCC(8))
+    tor2 = analyze_pod("t2", Torus(16, 8, 8), (16, 8, 8))
+    assert fcc.uniform_capacity / tor2.uniform_capacity == pytest.approx(1.72, abs=0.05)
+
+
+def test_placement_dilation_small():
+    from repro.core import BCC
+    from repro.topology.placement import best_embedding
+    be = best_embedding(BCC(4), (16, 16))
+    assert be["axis0"]["avg"] <= 2.0
+    assert be["axis1"]["avg"] <= 1.5
+
+
+def test_upgrade_boxes_nest_and_cover():
+    from repro.topology.upgrade import migration_stats, upgrade_plan
+    for chips in (64, 128, 256):
+        plan = upgrade_plan(chips)
+        assert plan.new.order == chips * 2
+        assert int(plan.new_is_old.sum()) == chips
+        st = migration_stats(plan)
+        assert st["max_hops"] <= plan.new.diameter
+        assert st["avg_hops"] <= 4.0
+
+
+def test_training_loss_falls_quickly():
+    """Mini end-to-end: 30 steps of the reduced olmo on synthetic data."""
+    from repro.launch.train import main as train_main
+    out = train_main(["--arch", "olmo-1b", "--reduced", "--steps", "30",
+                      "--batch", "8", "--seq", "64", "--log-every", "100"])
+    assert out["last_loss"] < out["first_loss"]

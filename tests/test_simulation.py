@@ -1,0 +1,71 @@
+"""Network-simulator behaviour tests (paper §6.2 reproduction, small sizes)."""
+import numpy as np
+import pytest
+
+from repro.core import BCC, FourD_BCC, Torus
+from repro.core.simulation import (build_tables, pattern_table, simulate)
+
+
+def test_low_load_accepted_equals_offered():
+    g = BCC(2)
+    r = simulate(g, "uniform", 0.1, slots=300, warmup=64, seed=1)
+    assert abs(r.accepted_load - 0.1) < 0.03
+    # latency near zero-load: ~avg distance × 16 cycles + queueing
+    assert r.avg_latency_cycles < 16 * (g.average_distance + 3)
+
+
+def test_no_deadlock_collapse_at_high_load():
+    """Bubble flow control: accepted load must plateau, not collapse."""
+    g = Torus(4, 4, 2)
+    lo = simulate(g, "uniform", 0.4, slots=300, warmup=64, seed=2)
+    hi = simulate(g, "uniform", 1.0, slots=300, warmup=64, seed=2)
+    assert hi.accepted_load > 0.5 * lo.accepted_load
+    assert hi.accepted_load > 0.2
+
+
+def test_crystal_beats_torus_under_uniform():
+    """The paper's headline: same-size crystal sustains more uniform load."""
+    crystal = BCC(2)                       # 32 nodes
+    torus = Torus(4, 4, 2)                 # 32 nodes
+    pc = max(simulate(crystal, "uniform", l, slots=300, warmup=64, seed=3)
+             .accepted_load for l in (0.6, 0.8, 1.0))
+    pt = max(simulate(torus, "uniform", l, slots=300, warmup=64, seed=3)
+             .accepted_load for l in (0.6, 0.8, 1.0))
+    assert pc > pt
+
+
+def test_pattern_tables():
+    g = BCC(2)
+    N = g.order
+    for pattern in ("antipodal", "centralsymmetric", "randompairings"):
+        dst = pattern_table(g, pattern, seed=0)
+        assert dst.shape == (N,)
+        assert (dst >= 0).all() and (dst < N).all()
+    # randompairings is an involution
+    dst = pattern_table(g, "randompairings", seed=0)
+    assert np.array_equal(dst[dst], np.arange(N))
+    # centralsymmetric maps origin to itself
+    dst = pattern_table(g, "centralsymmetric", seed=0)
+    assert dst[0] == 0
+
+
+def test_alternate_records_are_minimal():
+    """records_b = −route(−v) must be valid and minimal too."""
+    g = FourD_BCC(2)
+    t = build_tables(g)
+    dist = g.distances_from_origin
+    assert (np.abs(t.records_a).sum(1) == dist).all()
+    assert (np.abs(t.records_b).sum(1) == dist).all()
+    # validity: both records congruent to their delta
+    idx_a = g.label_to_index(t.records_a)
+    idx_b = g.label_to_index(t.records_b)
+    assert (idx_a == np.arange(g.order)).all()
+    assert (idx_b == np.arange(g.order)).all()
+
+
+def test_deliveries_conserved():
+    """Packets injected ≈ delivered + in flight (no loss, no duplication)."""
+    g = BCC(2)
+    r = simulate(g, "uniform", 0.2, slots=400, warmup=0, seed=5)
+    in_flight_max = g.order * 6 * 4          # buffers upper bound
+    assert 0 <= r.injected - r.delivered <= in_flight_max

@@ -1,0 +1,100 @@
+"""Symmetry tests (paper §3, Theorem 12, Theorem 20, Appendix A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (bcc_lift_is_never_symmetric, bcc_matrix, fcc_matrix,
+                        fourd_bcc_matrix, fourd_fcc_matrix,
+                        is_linear_automorphism, is_linearly_symmetric,
+                        linear_stabilizer, lip_matrix, pc_matrix,
+                        signed_permutation_matrices,
+                        theorem12_matrix_first_family,
+                        theorem12_matrix_second_family, torus_matrix)
+from repro.core import intmat
+
+
+def test_signed_permutation_count():
+    assert sum(1 for _ in signed_permutation_matrices(3)) == 48  # 3!·2³ (Table 4)
+    for P in signed_permutation_matrices(2):
+        assert abs(intmat.det(P)) == 1
+
+
+@pytest.mark.parametrize("a", [2, 3, 4, 5])
+def test_crystals_are_symmetric(a):
+    assert is_linearly_symmetric(pc_matrix(a))
+    assert is_linearly_symmetric(fcc_matrix(a))
+    assert is_linearly_symmetric(bcc_matrix(a))
+
+
+@pytest.mark.parametrize("sides", [(4, 2, 2), (8, 4, 4), (8, 8, 4), (6, 4, 2)])
+def test_mixed_radix_tori_are_not_symmetric(sides):
+    assert not is_linearly_symmetric(torus_matrix(*sides))
+
+
+@pytest.mark.parametrize("a", [2, 3])
+def test_4d_lifts_are_symmetric(a):
+    """Propositions 17, 18, 19."""
+    assert is_linearly_symmetric(fourd_bcc_matrix(a))
+    assert is_linearly_symmetric(fourd_fcc_matrix(a))
+    assert is_linearly_symmetric(lip_matrix(a))
+
+
+@given(st.integers(1, 8), st.integers(-6, 6), st.integers(-6, 6))
+@settings(max_examples=40, deadline=None)
+def test_theorem12_first_family_always_symmetric(a, b, c):
+    M = theorem12_matrix_first_family(a, b, c)
+    if intmat.det(M) == 0:
+        return
+    assert is_linearly_symmetric(M)
+
+
+@given(st.integers(1, 8), st.integers(-6, 6), st.integers(-6, 6))
+@settings(max_examples=40, deadline=None)
+def test_theorem12_second_family_always_symmetric(a, b, c):
+    M = theorem12_matrix_second_family(a, b, c)
+    if intmat.det(M) == 0:
+        return
+    assert is_linearly_symmetric(M)
+
+
+@pytest.mark.parametrize("a", [1, 2])
+def test_theorem20_no_symmetric_bcc_lift(a):
+    assert bcc_lift_is_never_symmetric(a)
+
+
+def test_proposition17_cyclic_shift_is_automorphism_of_4dbcc():
+    """The cyclic shift φ(e_i) = e_{i+1 mod n} is an automorphism of 4D-BCC."""
+    P = np.array([[0, 0, 0, 1],
+                  [1, 0, 0, 0],
+                  [0, 1, 0, 0],
+                  [0, 0, 1, 0]], dtype=np.int64)
+    assert is_linear_automorphism(P, fourd_bcc_matrix(3))
+
+
+def test_theorem11_projections_isomorphic_for_symmetric_graph():
+    """All projections of a symmetric lattice graph are isomorphic: project
+    BCC(a) over each e_i (by row/column swap) and compare Hermite forms of
+    the resulting 2D matrices via graph invariants."""
+    from repro.core import LatticeGraph
+    a = 3
+    M = bcc_matrix(a)
+    base = None
+    for i in range(3):
+        Mi = M.copy()
+        Mi[[i, 2], :] = Mi[[2, i], :]  # move dim i last (automorphic relabel)
+        g = LatticeGraph(Mi).projection()
+        key = (g.order, g.diameter, round(g.average_distance, 9),
+               tuple(g.distance_distribution().tolist()))
+        if base is None:
+            base = key
+        assert key == base
+
+
+def test_stabilizer_is_group_closed():
+    """Sanity: signed-permutation automorphisms are closed under product."""
+    auts = linear_stabilizer(bcc_matrix(2))
+    keys = {P.tobytes() for P in auts}
+    for P in auts[:6]:
+        for Q in auts[:6]:
+            assert (P @ Q).astype(np.int64).tobytes() in keys
