@@ -1,0 +1,25 @@
+# Entry points — no PYTHONPATH=src incantations needed (pytest picks up
+# src/ via pyproject's pythonpath ini + tests/conftest.py; the benchmark
+# driver gets it from this Makefile).
+PY ?= python
+
+.PHONY: test test-fast bench bench-quick
+
+test:
+	$(PY) -m pytest -q
+
+# skip the slow distributed/simulation modules; covers the routing stack
+test-fast:
+	$(PY) -m pytest -q tests/test_intmat.py tests/test_lattice.py \
+	    tests/test_crystals.py tests/test_routing.py \
+	    tests/test_routing_engine.py tests/test_symmetry.py
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-quick:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick
+
+# routing engine throughput only (ISSUE 1 acceptance numbers)
+bench-routing:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only routing

@@ -1,0 +1,64 @@
+"""Records/sec of the batched JAX routing engine vs the numpy oracle.
+
+Sweeps batch sizes 10³–10⁶ over FCC(8), BCC(4) and a random Hermite-normal-
+form G(M), timing three paths:
+
+  * `numpy`   — the reference `HierarchicalRouter` (host, per-copy loop),
+  * `engine`  — `RoutingEngine.__call__` (jitted; all-pairs table + gather
+    for these pod-sized graphs), including host↔device transfers,
+  * `engine_rec` — the unrolled Algorithm-1 recursion on device, i.e. the
+    path taken by graphs too large to tabulate.
+
+The acceptance bar of this repo's ISSUE 1 is engine ≥ 10× numpy at
+batch ≥ 10⁵ on CPU.  Timings exclude jit compilation (same-shape warmup).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HierarchicalRouter, LatticeGraph, bcc_matrix, fcc_matrix
+from repro.core.routing_engine import RoutingEngine
+
+from .util import emit
+
+# a mid-sized non-crystal HNF (det 120): exercises the generic recursion
+RANDOM_HNF = [[6, 3, 1], [0, 5, 2], [0, 0, 4]]
+
+
+def _time(f, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f()
+    return (time.perf_counter() - t0) / reps
+
+
+def main(quick: bool = False) -> None:
+    batches = (10**3, 10**5) if quick else (10**3, 10**4, 10**5, 10**6)
+    graphs = [("FCC(8)", fcc_matrix(8)), ("BCC(4)", bcc_matrix(4)),
+              ("G(randHNF)", RANDOM_HNF)]
+    rng = np.random.default_rng(0)
+    for name, M in graphs:
+        g = LatticeGraph(M)
+        hr = HierarchicalRouter(M)
+        eng = RoutingEngine(M)
+        for B in batches:
+            v = (g.labels[rng.integers(0, g.order, B)]
+                 - g.labels[rng.integers(0, g.order, B)])
+            eng(v)                      # same-shape warmup (compile)
+            eng.route_recursive(v)
+            reps = max(3, int(2e6 // B))
+            t_np = _time(lambda: hr(v), 1 if B >= 10**5 else 3)
+            t_eng = _time(lambda: eng(v), reps)
+            t_rec = _time(lambda: eng.route_recursive(v), max(reps // 4, 2))
+            emit(f"routing/{name}/B={B}", t_eng * 1e6,
+                 f"numpy_Mrec_s={B / t_np / 1e6:.2f};"
+                 f"engine_Mrec_s={B / t_eng / 1e6:.2f};"
+                 f"engine_rec_Mrec_s={B / t_rec / 1e6:.2f};"
+                 f"speedup={t_np / t_eng:.1f}x;"
+                 f"speedup_rec={t_np / t_rec:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,13 +10,15 @@ import argparse
 import sys
 import traceback
 
-from . import (fig5_8_simulation, roofline, table1_distances, table2_lattices,
-               throughput_bounds, topology_collectives)
+from . import (fig5_8_simulation, roofline, routing_throughput,
+               table1_distances, table2_lattices, throughput_bounds,
+               topology_collectives)
 from .util import header
 
 SECTIONS = {
     "table1": table1_distances.main,
     "table2": table2_lattices.main,
+    "routing": routing_throughput.main,
     "throughput": throughput_bounds.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,

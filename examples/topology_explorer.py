@@ -14,10 +14,10 @@ from repro.topology.upgrade import migration_stats, upgrade_plan, upgrade_path_n
 print("== pod topologies (paper §3.4 at TPU scale) ==")
 for name, g, ts in [("BCC(4)/256", BCC(4), None), ("T(8,8,4)", Torus(8, 8, 4), (8, 8, 4)),
                     ("FCC(8)/1024", FCC(8), None), ("T(16,8,8)", Torus(16, 8, 8), (16, 8, 8))]:
-    r = analyze_pod(name, g, ts)
+    r = analyze_pod(name, g, ts, measure_routed=True)
     print(f"  {r.name:12} D={r.diameter:<3} k̄={r.avg_distance:.2f} "
-          f"capacity={r.uniform_capacity:.3f} phits/cyc/node "
-          f"all-to-all(256MB)={r.alltoall_256MB_ms:.1f} ms")
+          f"capacity={r.uniform_capacity:.3f} (routed {r.routed_capacity:.3f}) "
+          f"phits/cyc/node all-to-all(256MB)={r.alltoall_256MB_ms:.1f} ms")
 
 print("\n== logical 16×16 mesh placement into BCC(4) ==")
 be = best_embedding(BCC(4), (16, 16))

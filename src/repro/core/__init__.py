@@ -12,8 +12,13 @@ from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
                         mixed_torus_diameter, pc_average_distance,
                         pc_diameter, summarize, torus_average_distance)
 from .lattice import LatticeGraph
-from .routing import (HierarchicalRouter, minimal_record_bruteforce, norm1,
-                      route_bcc, route_fcc, route_ring, route_rtt, route_torus)
+from .routing import (HierarchicalRouter, make_router,
+                      minimal_record_bruteforce, norm1, route_bcc, route_fcc,
+                      route_ring, route_rtt, route_torus)
+try:
+    from .routing_engine import RoutingEngine
+except ImportError:           # jax absent — the numpy oracle stands alone
+    RoutingEngine = None      # type: ignore[assignment,misc]
 from .symmetry import (bcc_lift_is_never_symmetric, is_linear_automorphism,
                        is_linearly_symmetric, linear_stabilizer,
                        signed_permutation_matrices,
@@ -31,7 +36,8 @@ __all__ = [
     "nd_pc_matrix", "nd_bcc_matrix", "nd_fcc_matrix",
     "boxplus", "direct_sum", "crystal_for_order", "upgrade_path",
     "route_ring", "route_torus", "route_rtt", "route_fcc", "route_bcc",
-    "HierarchicalRouter", "minimal_record_bruteforce", "norm1",
+    "HierarchicalRouter", "RoutingEngine", "make_router",
+    "minimal_record_bruteforce", "norm1",
     "pc_diameter", "fcc_diameter", "bcc_diameter", "mixed_torus_diameter",
     "pc_average_distance", "fcc_average_distance", "bcc_average_distance",
     "torus_average_distance", "summarize", "DistanceSummary",

@@ -228,6 +228,36 @@ def element_order(x, M) -> Int:
     return d // g if g else 1
 
 
+def cycle_copy_tables(H) -> tuple[Int, np.ndarray, np.ndarray]:
+    """Static routing tables of one level of the Algorithm-1 recursion for a
+    non-diagonal Hermite block H (m ≥ 2):
+
+      * ``order``        — ord(e_m) in Z^m / H Z^m,
+      * ``cycle_labels`` — (order, m) canonical labels of k·e_m,
+      * ``copy_table``   — (side, order//side) cycle positions k grouped by
+        the copy (last label component) they intersect (Remark 33).
+
+    Shared by the numpy `HierarchicalRouter` and the JAX `RoutingEngine` so
+    their bitwise-equality contract rests on one table construction."""
+    H = np.asarray(H, dtype=np.int64)
+    m = H.shape[0]
+    side = int(H[m - 1, m - 1])
+    e_m = np.zeros(m, dtype=np.int64)
+    e_m[m - 1] = 1
+    order = element_order(e_m, H)
+    cyc = canonical_label(np.arange(order, dtype=np.int64)[:, None]
+                          * e_m[None, :], H)
+    per_copy = order // side
+    table = np.zeros((side, per_copy), dtype=np.int64)
+    fill = np.zeros(side, dtype=np.int64)
+    for k in range(order):
+        y = int(cyc[k, m - 1])
+        table[y, fill[y]] = k
+        fill[y] += 1
+    assert (fill == per_copy).all(), "cycle does not cover copies evenly"
+    return order, cyc, table
+
+
 def gcd_vec(v) -> Int:
     g = 0
     for c in np.asarray(v).ravel().tolist():

@@ -1,4 +1,4 @@
-"""Minimal routing in lattice graphs (paper §5).
+"""Minimal routing in lattice graphs (paper §5) — numpy reference oracle.
 
 Implements:
   * Algorithm 3 — routing in RTT(a)                (`route_rtt`)
@@ -6,10 +6,27 @@ Implements:
   * Algorithm 4 — routing in BCC(a)                (`route_bcc`)
   * Algorithm 1 — generic hierarchical routing     (`HierarchicalRouter`)
   * a brute-force CVP oracle for tests             (`minimal_record_bruteforce`)
+  * the backend dispatcher                         (`make_router`)
 
 All routers are batched: they take (..., n) integer arrays of differences
 v = v_d − v_s and return minimum-Minkowski-norm routing records r with
 r ≡ v (mod M).  Component r_i is the signed hop count in dimension i.
+
+**Engine architecture.**  This module is the *reference oracle*: plain
+numpy, host-side, written to mirror the paper's pseudocode as closely as
+possible, and exercised against the exact BFS/CVP oracles in
+tests/test_routing.py.  The hot path lives in `repro.core.routing_engine`:
+a `jax.jit` engine that compiles `HierarchicalRouter`'s recursion into
+static device tables (cycle labels + copy tables per level) and routes
+whole `(B, n)` batches in a single XLA computation, tabulating all-pairs
+records for pod-sized graphs.  The contract, enforced by
+tests/test_routing_engine.py, is that the engine's deterministic path is
+**bitwise-equal** to this module (same records, same tie policy: strict
+first-minimum, half-ring ties toward +), and that its keyed path breaks
+exact-norm ties with a fair coin (Remark 30).  Use `make_router` to pick a
+backend; consumers (`simulation.build_tables`, `throughput.channel_load`,
+`distances.routed_distance_profile`, the collective model and benchmarks)
+all route through the engine and only fall back here when JAX is absent.
 
 NOTE on the paper's Algorithm 4: as printed it contains two typos
 (`ŷ := x + a(z<0)` should read `ŷ := y + a(z<0)`, and `y' := x̂ + 2a(ŷ<0)…`
@@ -17,6 +34,8 @@ should read `y' := ŷ + …`).  We implement the corrected version, which is
 validated to be minimal against a BFS oracle in tests/test_routing.py.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -147,24 +166,8 @@ class HierarchicalRouter:
             np.array_equal(self.H, np.diag(self.diag)))
         if not self._is_diagonal and self.n > 1:
             self.sub = HierarchicalRouter(self.H[: self.n - 1, : self.n - 1])
-            a = int(self.diag[self.n - 1])
-            e_n = np.zeros(self.n, dtype=np.int64)
-            e_n[self.n - 1] = 1
-            self.ord_n = intmat.element_order(e_n, self.H)
-            ks = np.arange(self.ord_n, dtype=np.int64)
-            cyc = intmat.canonical_label(
-                ks[:, None] * e_n[None, :], self.H)       # (ord, n)
-            self.cycle_labels = cyc
-            # group cycle positions by which copy (last label component) they hit
-            per_copy = self.ord_n // a
-            table = np.zeros((a, per_copy), dtype=np.int64)
-            fill = np.zeros(a, dtype=np.int64)
-            for k in range(self.ord_n):
-                y = int(cyc[k, self.n - 1])
-                table[y, fill[y]] = k
-                fill[y] += 1
-            assert (fill == per_copy).all()
-            self.copy_table = table
+            self.ord_n, self.cycle_labels, self.copy_table = \
+                intmat.cycle_copy_tables(self.H)
 
     def __call__(self, v) -> np.ndarray:
         """v: (..., n) integer differences → minimal records (..., n)."""
@@ -198,11 +201,17 @@ class HierarchicalRouter:
 # brute-force oracle (exact CVP in the L1 metric)
 # ---------------------------------------------------------------------------
 
-def minimal_record_bruteforce(M, v, box: int | None = None) -> np.ndarray:
+def minimal_record_bruteforce(M, v, box: int | None = None, *,
+                              max_box: int | None = None) -> np.ndarray:
     """argmin_{r ≡ v (mod M)} |r|  by enumerating r = v − M·u over a box of
     lattice coefficients u.  Exact when the box is large enough; the default
     bound is derived from ‖M⁻¹‖ and |v| so that every record with
-    |r| ≤ |v| is covered (u = 0 always gives the candidate r = v)."""
+    |r| ≤ |v| is covered (u = 0 always gives the candidate r = v).
+
+    The derived box grows with |v|, and the enumeration is (2·box+1)ⁿ — for
+    large differences this is expensive but *correct*.  Pass `max_box` to
+    opt into clamping (a warning is emitted when it truncates the search,
+    because a clamped box can return a non-minimal record)."""
     M = intmat.as_np(M)
     n = M.shape[0]
     v = np.asarray(v, dtype=np.int64)
@@ -211,7 +220,12 @@ def minimal_record_bruteforce(M, v, box: int | None = None) -> np.ndarray:
     if box is None:
         inv_norm = np.abs(np.linalg.inv(M.astype(np.float64))).sum(axis=1).max()
         box = int(np.ceil(inv_norm * 2 * np.abs(V).sum(axis=-1).max())) + 1
-        box = min(box, 6)  # diameters of test graphs keep coefficients tiny
+        if max_box is not None and box > max_box:
+            warnings.warn(
+                f"minimal_record_bruteforce: clamping coefficient box "
+                f"{box} → {max_box}; the result may be non-minimal for "
+                f"|v| this large", stacklevel=2)
+            box = max_box
     rng = np.arange(-box, box + 1)
     grids = np.meshgrid(*([rng] * n), indexing="ij")
     U = np.stack([g.ravel() for g in grids], axis=-1)     # (K, n)
@@ -220,3 +234,30 @@ def minimal_record_bruteforce(M, v, box: int | None = None) -> np.ndarray:
     idx = norms.argmin(axis=1)
     out = cand[np.arange(V.shape[0]), idx]
     return out[0] if single else out.reshape(v.shape)
+
+
+# ---------------------------------------------------------------------------
+# backend dispatcher
+# ---------------------------------------------------------------------------
+
+def make_router(M, backend: str = "auto"):
+    """Return a batched minimal-routing callable for G(M).
+
+    backend='jax'   → `repro.core.routing_engine.RoutingEngine` (jitted,
+                      tabulated for pod-sized graphs — the hot path),
+    backend='numpy' → `HierarchicalRouter` (the reference oracle),
+    backend='auto'  → jax when importable, else numpy.
+
+    Both return records identical bitwise on the deterministic path, so
+    callers may treat the choice purely as a performance knob."""
+    if backend not in ("auto", "jax", "numpy"):
+        raise ValueError(f"unknown routing backend {backend!r}")
+    if backend == "numpy":
+        return HierarchicalRouter(M)
+    try:
+        from .routing_engine import RoutingEngine
+    except ImportError:
+        if backend == "jax":
+            raise
+        return HierarchicalRouter(M)
+    return RoutingEngine(M)

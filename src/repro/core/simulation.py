@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .lattice import LatticeGraph
-from .routing import HierarchicalRouter
+from .routing import make_router
+from .routing_engine import canonical_reduce
 
 PACKET_PHITS = 16
 
@@ -49,10 +50,13 @@ class SimTables:
     strides: np.ndarray          # (n,)
 
 
-def build_tables(g: LatticeGraph, seed: int = 0) -> SimTables:
-    router = HierarchicalRouter(g.matrix)
+def build_tables(g: LatticeGraph, seed: int = 0,
+                 backend: str = "auto") -> SimTables:
+    """All-pairs record tables via the batched routing engine (the numpy
+    oracle remains available with backend='numpy')."""
+    router = make_router(g.matrix, backend)
     labels = g.labels
-    rec_a = router(labels)
+    rec_a = np.asarray(router(labels))
     # −route(−v) is also minimal for v and picks the *other* option on every
     # direction tie (half-ring hops, twin cycle intersections) — per-packet
     # coin between the two implements Remark 30's randomized tie-breaking.
@@ -67,11 +71,7 @@ def build_tables(g: LatticeGraph, seed: int = 0) -> SimTables:
 
 def _delta_idx(labels_src, labels_dst, hermite, strides):
     """Vectorised canonical reduction of (dst − src) into a node index."""
-    n = hermite.shape[0]
-    v = labels_dst - labels_src
-    for i in range(n - 1, -1, -1):
-        q = jnp.floor_divide(v[..., i], hermite[i, i])
-        v = v - q[..., None] * hermite[:, i]
+    v = canonical_reduce(labels_dst - labels_src, hermite)
     return (v * strides).sum(axis=-1)
 
 

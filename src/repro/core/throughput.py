@@ -44,7 +44,8 @@ def pc_throughput_bound(a: int) -> float:
     return 6.0 / pc_average_distance(a)
 
 
-def channel_load(g: LatticeGraph, records: np.ndarray) -> np.ndarray:
+def channel_load(g: LatticeGraph, records: np.ndarray,
+                 seed: int = 0) -> np.ndarray:
     """Directional link loads (N, 2n) implied by a set of routing records under
     one-packet-per-node uniform traffic, assuming DOR traversal order.
 
@@ -56,7 +57,7 @@ def channel_load(g: LatticeGraph, records: np.ndarray) -> np.ndarray:
     P = records.shape[0]
     load = np.zeros((N, 2 * n), dtype=np.float64)
     # DOR: dimension 0 hops first, then 1, ...
-    srcs = np.random.default_rng(0).integers(0, N, size=P)
+    srcs = np.random.default_rng(seed).integers(0, N, size=P)
     pos = g.labels[srcs].astype(np.int64).copy()
     for dim in range(n):
         r = records[:, dim]
@@ -68,3 +69,25 @@ def channel_load(g: LatticeGraph, records: np.ndarray) -> np.ndarray:
             np.add.at(load, (idx, 2 * dim + direction[active]), 1.0)
             pos[active, dim] += sgn[active]
     return load * (N / P)
+
+
+def channel_load_uniform(g: LatticeGraph, pairs: int = 20_000, seed: int = 0,
+                         backend: str = "auto") -> np.ndarray:
+    """Monte-Carlo channel loads under uniform traffic: sample `pairs`
+    source→destination pairs, route them through the batched engine, and
+    accumulate DOR link crossings.  The empirical saturation throughput is
+    `1 / channel_load_uniform(g).max()` phits/cycle/node — cross-check it
+    against the analytic Δ/k̄ bound of §3.4."""
+    from .routing import make_router
+    rng = np.random.default_rng(seed)
+    router = make_router(g.matrix, backend)
+    v = (g.labels[rng.integers(0, g.order, pairs)]
+         - g.labels[rng.integers(0, g.order, pairs)])
+    return channel_load(g, np.asarray(router(v)), seed=seed)
+
+
+def measured_saturation_throughput(g: LatticeGraph, pairs: int = 20_000,
+                                   seed: int = 0,
+                                   backend: str = "auto") -> float:
+    """1/max-link-load under engine-routed uniform traffic (phits/cyc/node)."""
+    return float(1.0 / channel_load_uniform(g, pairs, seed, backend).max())

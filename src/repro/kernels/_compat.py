@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU API.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` across JAX
+releases; resolve whichever this environment provides so the kernels import
+on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

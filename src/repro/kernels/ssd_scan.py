@@ -15,7 +15,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ._compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -73,7 +75,7 @@ def ssd_intra_chunk(xdt, Adt, Bm, Cm, *, interpret: bool = True):
             jax.ShapeDtypeStruct((BH, nc, P, N), jnp.float32),
             jax.ShapeDtypeStruct((BH, nc, 1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xdt, Adt, Bm, Cm)

@@ -22,7 +22,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import LatticeGraph, Torus
-from repro.core.throughput import (mixed_torus_throughput_bound,
+from repro.core.throughput import (measured_saturation_throughput,
+                                   mixed_torus_throughput_bound,
                                    symmetric_throughput_bound)
 
 LINK_BW = 50e9          # bytes/s per link per direction (ICI)
@@ -85,13 +86,20 @@ class PodTopologyReport:
     diameter: int
     avg_distance: float
     bisection_links: int
-    uniform_capacity: float          # phits/cycle/node
+    uniform_capacity: float          # phits/cycle/node (analytic Δ/k̄ bound)
     allreduce_256MB_ms: float
     alltoall_256MB_ms: float
+    routed_capacity: float | None = None   # measured 1/max-link-load
 
 
 def analyze_pod(name: str, g: LatticeGraph,
-                torus_sides: tuple[int, ...] | None = None) -> PodTopologyReport:
+                torus_sides: tuple[int, ...] | None = None, *,
+                measure_routed: bool = False,
+                routed_pairs: int = 20_000) -> PodTopologyReport:
+    """Price a pod topology.  With `measure_routed=True` the analytic
+    capacity bound is accompanied by an empirical saturation throughput:
+    `routed_pairs` uniform pairs routed through the batched engine and
+    reduced to 1/max directional-link load."""
     sym = torus_sides is None
     test_bytes = 256 * 2**20
     cap = (symmetric_throughput_bound(g) if sym
@@ -105,7 +113,9 @@ def analyze_pod(name: str, g: LatticeGraph,
         uniform_capacity=cap,
         allreduce_256MB_ms=1e3 * ring_all_reduce_time(test_bytes, g.order),
         alltoall_256MB_ms=1e3 * all_to_all_time(
-            g, test_bytes, edge_symmetric=sym, torus_sides=torus_sides))
+            g, test_bytes, edge_symmetric=sym, torus_sides=torus_sides),
+        routed_capacity=(measured_saturation_throughput(g, routed_pairs)
+                         if measure_routed else None))
 
 
 def bisection_links(g: LatticeGraph) -> int:

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import LatticeGraph
-from repro.core.routing import HierarchicalRouter
+from repro.core.routing import make_router
 
 
 # ---------------------------------------------------------------------------
@@ -42,19 +42,20 @@ class RingSchedule:
 
 def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray) -> RingSchedule:
     """ring_labels: (k, n) lattice labels of the chips of one logical axis,
-    in ring order.  Paths follow DOR over minimal routing records."""
-    router = HierarchicalRouter(g.matrix)
+    in ring order.  Paths follow DOR over minimal routing records (all k
+    logical edges routed in one batched engine call)."""
+    router = make_router(g.matrix)
     k = ring_labels.shape[0]
     order = g.label_to_index(ring_labels)
+    recs = np.asarray(router(np.roll(ring_labels, -1, axis=0) - ring_labels))
     paths: list[list[tuple[int, int]]] = []
     for t in range(k):
         src = ring_labels[t]
-        dst = ring_labels[(t + 1) % k]
-        rec = router(dst - src)
+        rec = recs[t]
         path = []
         pos = src.copy()
         for dim in range(g.n):
-            step = int(rec[dim]) if rec.ndim == 1 else int(rec[0, dim])
+            step = int(rec[dim])
             sgn = 1 if step >= 0 else -1
             for _ in range(abs(step)):
                 port = 2 * dim + (0 if sgn > 0 else 1)

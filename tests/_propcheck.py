@@ -1,0 +1,238 @@
+"""Offline drop-in for the slice of the `hypothesis` API this repo uses.
+
+The test environment may not be able to install `hypothesis` (no network).
+`conftest.py` imports the real package when present; otherwise it installs
+the fake modules built here under the names ``hypothesis`` and
+``hypothesis.strategies`` *before* test collection, so the six
+property-test modules import unchanged.
+
+Semantics of the replacement:
+
+  * each strategy samples **deterministically** from a numpy Generator
+    seeded per-test (crc32 of the test's qualified name), so failures are
+    reproducible run-to-run and machine-to-machine;
+  * ``@given`` runs up to ``DEFAULT_EXAMPLES`` (50) examples per test —
+    ``@settings(max_examples=...)`` is honoured but capped at 50 to keep
+    offline CI fast (real hypothesis, when installed, uses the full count);
+  * ``.filter`` is rejection sampling with a bounded retry budget;
+  * on a failing example the falsifying inputs are printed to stderr and
+    the original exception propagates (no shrinking).
+
+Only the strategies the test-suite actually uses are provided
+(`integers`, `lists`, `sets`, `sampled_from`, `booleans`, `floats`,
+`tuples`, `just`, `one_of`); extend as tests grow.
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 50
+_FILTER_TRIES = 5000
+
+
+class Strategy:
+    """A deterministic sampler: `example(rng)` draws one value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, f) -> "Strategy":
+        return Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred) -> "Strategy":
+        def draw(rng):
+            for _ in range(_FILTER_TRIES):
+                x = self._draw(rng)
+                if pred(x):
+                    return x
+            raise RuntimeError(
+                "propcheck: .filter predicate rejected "
+                f"{_FILTER_TRIES} consecutive samples")
+        return Strategy(draw)
+
+    def flatmap(self, f) -> "Strategy":
+        return Strategy(lambda rng: f(self._draw(rng))._draw(rng))
+
+
+# -- strategies -------------------------------------------------------------
+
+def integers(min_value=None, max_value=None) -> Strategy:
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 - 1 if max_value is None else int(max_value)
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+           allow_infinity=False) -> Strategy:
+    lo = -1e6 if min_value is None else float(min_value)
+    hi = 1e6 if max_value is None else float(max_value)
+    return Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def sampled_from(elements) -> Strategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return Strategy(lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: int | None = None, unique=False) -> Strategy:
+    mx = min_size + 10 if max_size is None else max_size
+
+    def draw(rng):
+        size = int(rng.integers(min_size, mx + 1))
+        if not unique:
+            return [elements._draw(rng) for _ in range(size)]
+        out: list = []
+        for _ in range(_FILTER_TRIES):
+            x = elements._draw(rng)
+            if x not in out:
+                out.append(x)
+            if len(out) == size:
+                break
+        if len(out) < min_size:
+            raise RuntimeError(
+                f"propcheck: could not draw {min_size} unique elements "
+                f"in {_FILTER_TRIES} tries (domain too small?)")
+        return out
+    return Strategy(draw)
+
+
+def sets(elements: Strategy, min_size: int = 0,
+         max_size: int | None = None) -> Strategy:
+    return lists(elements, min_size, max_size, unique=True).map(set)
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s._draw(rng) for s in strategies))
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    return Strategy(
+        lambda rng: strategies[int(rng.integers(0, len(strategies)))]._draw(rng))
+
+
+# -- given / settings / assume ----------------------------------------------
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example, draw another."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Decorator recording per-test options (only max_examples matters)."""
+    def deco(f):
+        opts = dict(getattr(f, "_propcheck_settings", {}))
+        opts["max_examples"] = max_examples
+        f._propcheck_settings = opts
+        return f
+    return deco
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Drop-in @given: runs the test body over deterministic samples."""
+    def deco(f):
+        def runner(*fixture_args, **fixture_kwargs):
+            opts = getattr(runner, "_propcheck_settings", {})
+            n = min(opts.get("max_examples", DEFAULT_EXAMPLES),
+                    DEFAULT_EXAMPLES)
+            seed = zlib.crc32(f.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            done = 0
+            budget = n * 20
+            while done < n and budget > 0:
+                budget -= 1
+                try:
+                    ex = [s.example(rng) for s in arg_strategies]
+                    kwex = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    f(*fixture_args, *ex, **kwex, **fixture_kwargs)
+                except _Unsatisfied:
+                    continue
+                except BaseException:
+                    sys.stderr.write(
+                        f"\npropcheck: falsifying example #{done} of "
+                        f"{f.__qualname__}: args={ex!r} kwargs={kwex!r} "
+                        f"(seed={seed})\n")
+                    raise
+                done += 1
+            if done < n:
+                raise RuntimeError(
+                    f"propcheck: assume() rejected too many examples "
+                    f"in {f.__qualname__} ({done}/{n} ran)")
+
+        runner.__name__ = f.__name__
+        runner.__qualname__ = f.__qualname__
+        runner.__doc__ = f.__doc__
+        runner.__module__ = f.__module__
+        runner._propcheck_settings = dict(
+            getattr(f, "_propcheck_settings", {}))
+        runner.hypothesis = types.SimpleNamespace(inner_test=f)
+        # hide the strategy parameters from pytest's fixture resolution
+        runner.__signature__ = inspect.Signature(parameters=[])
+        return runner
+    return deco
+
+
+# -- fake module assembly ----------------------------------------------------
+
+def build_modules() -> tuple[types.ModuleType, types.ModuleType]:
+    """Create module objects mimicking `hypothesis` and
+    `hypothesis.strategies` (register them in sys.modules yourself)."""
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "sampled_from", "lists",
+                 "sets", "tuples", "just", "one_of"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = Strategy
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st_mod
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    hyp.__version__ = "0.propcheck"
+    hyp.__propcheck__ = True
+    return hyp, st_mod
+
+
+def install() -> bool:
+    """Register the fakes in sys.modules if hypothesis is absent.
+    Returns True when the shim was installed."""
+    try:
+        import hypothesis  # noqa: F401 — real package wins
+        return False
+    except ImportError:
+        pass
+    hyp, st_mod = build_modules()
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    return True

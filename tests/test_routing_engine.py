@@ -1,0 +1,244 @@
+"""Batched JAX routing engine: cross-validation against the numpy oracle,
+the exact CVP bruteforce, BFS distances, and the Remark-30 tie policy.
+
+Contract under test (see repro/core/routing_engine.py):
+  * deterministic path is bitwise-equal to the numpy HierarchicalRouter
+    (both the tabulated and the unrolled-recursion code paths),
+  * every record satisfies r ≡ v (mod M) and |r|₁ = d_G(0, v),
+  * keyed path stays norm-minimal and splits exact ties ~50/50,
+  * key=None / rng=None paths are deterministic.
+"""
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (BCC, FCC, RTT, HierarchicalRouter, LatticeGraph,
+                        RoutingEngine, bcc_matrix, fcc_matrix, make_router,
+                        minimal_record_bruteforce, norm1, rtt_matrix)
+from repro.core import routing_engine as eng_mod
+from repro.core import routing as routing_np
+
+RNG = np.random.default_rng(11)
+
+
+def random_pairs(g: LatticeGraph, trials: int):
+    s = g.labels[RNG.integers(0, g.order, trials)]
+    d = g.labels[RNG.integers(0, g.order, trials)]
+    return d - s
+
+
+def assert_engine_exact(g: LatticeGraph, eng: RoutingEngine, trials=1500):
+    v = random_pairs(g, trials)
+    r = eng(v)
+    assert (g.label_to_index(r) == g.label_to_index(v)).all(), "invalid record"
+    dist = g.distances_from_origin[g.label_to_index(v)]
+    assert (norm1(r) == dist).all(), "non-minimal record"
+
+
+# ---------------------------------------------------------------------------
+# named graphs: engine ≡ numpy router ≡ BFS, both engine code paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M", [
+    rtt_matrix(4), rtt_matrix(5), fcc_matrix(2), fcc_matrix(3),
+    bcc_matrix(2), bcc_matrix(3),
+    np.array([[4, 0, 0], [0, 4, 2], [0, 0, 4]]),     # Example 10
+    np.array([[6, 3, 1], [0, 5, 2], [0, 0, 4]]),     # generic HNF
+], ids=["RTT4", "RTT5", "FCC2", "FCC3", "BCC2", "BCC3", "Ex10", "HNF654"])
+def test_engine_bitwise_equals_numpy_router(M):
+    g = LatticeGraph(M)
+    hr = HierarchicalRouter(M)
+    eng = RoutingEngine(M)
+    v = random_pairs(g, 1200)
+    r_np = hr(v)
+    assert np.array_equal(eng(v), r_np), "tabulated path diverged"
+    assert np.array_equal(eng.route_recursive(v), r_np), "recursion diverged"
+    assert_engine_exact(g, eng)
+
+
+def test_closed_form_jnp_ports_match_numpy():
+    v3 = RNG.integers(-30, 30, size=(400, 3))
+    for a in (2, 3, 4):
+        assert np.array_equal(routing_np.route_fcc(a, v3),
+                              np.asarray(eng_mod.route_fcc(a, v3)))
+        assert np.array_equal(routing_np.route_bcc(a, v3),
+                              np.asarray(eng_mod.route_bcc(a, v3)))
+        assert np.array_equal(routing_np.route_rtt(a, v3[:, :2]),
+                              np.asarray(eng_mod.route_rtt(a, v3[:, :2])))
+        assert np.array_equal(
+            routing_np.route_torus((2 * a, a, 3), v3),
+            np.asarray(eng_mod.route_torus((2 * a, a, 3), v3)))
+
+
+def test_make_router_dispatch():
+    assert isinstance(make_router(fcc_matrix(2), "numpy"), HierarchicalRouter)
+    assert isinstance(make_router(fcc_matrix(2), "jax"), RoutingEngine)
+    assert isinstance(make_router(fcc_matrix(2)), RoutingEngine)
+    with pytest.raises(ValueError):
+        make_router(fcc_matrix(2), "tpu-pod")
+
+
+# ---------------------------------------------------------------------------
+# property tests: ≥10 random Hermite-normal-form matrices
+# ---------------------------------------------------------------------------
+
+def hnf_matrices(n: int, max_side: int = 5):
+    """Random upper-triangular HNF matrices: positive diagonal d_i ≤ max_side
+    and 0 ≤ H[i, j] < H[i, i] for j > i (Definition 8)."""
+    def build(flat):
+        H = np.zeros((n, n), dtype=np.int64)
+        it = iter(flat)
+        for i in range(n):
+            H[i, i] = 1 + next(it) % max_side
+            for j in range(i + 1, n):
+                H[i, j] = next(it) % H[i, i]
+        return H
+    return st.lists(st.integers(0, 10 * max_side),
+                    min_size=n * n, max_size=n * n).map(build)
+
+
+@given(hnf_matrices(3))
+@settings(max_examples=25, deadline=None)
+def test_engine_on_random_hnf_matches_oracles(H):
+    g = LatticeGraph(H)
+    eng = RoutingEngine(H)
+    hr = HierarchicalRouter(H)
+    v = random_pairs(g, 300)
+    r = eng(v)
+    # bitwise vs numpy reference
+    assert np.array_equal(r, hr(v))
+    # r ≡ v (mod M) congruence
+    assert (g.label_to_index(r) == g.label_to_index(v)).all()
+    # norm-minimality vs the exact CVP bruteforce (box from diameter bound)
+    sub = v[:40]
+    rb = minimal_record_bruteforce(H, sub, box=int(np.abs(sub).max()) + 1)
+    assert np.array_equal(norm1(eng(sub)), norm1(rb))
+
+
+@given(hnf_matrices(2, max_side=7))
+@settings(max_examples=25, deadline=None)
+def test_engine_on_random_2d_hnf(H):
+    g = LatticeGraph(H)
+    eng = RoutingEngine(H)
+    assert_engine_exact(g, eng, trials=300)
+
+
+# ---------------------------------------------------------------------------
+# Remark 30: randomized tie-breaking balance
+# ---------------------------------------------------------------------------
+
+def test_remark30_tie_balance_fcc_antipodal():
+    """Over antipodal pairs of FCC(a) with two equal-norm records, the keyed
+    router must pick each minimal record ~50% of the time (45–55% over 10k
+    samples), and the key-free path must stay deterministic."""
+    a = 2
+    g = FCC(a)
+    dist = g.distances_from_origin
+    far = g.labels[dist == dist.max()]
+    # keep the pairs whose two closed-form candidates genuinely tie
+    v = far
+    det = np.asarray(routing_np.route_fcc(a, v))
+    samples = 10_000
+    vv = np.broadcast_to(v, (samples,) + v.shape).reshape(-1, 3)
+    out = np.asarray(eng_mod.route_fcc(a, vv, key=jax.random.PRNGKey(3)))
+    out = out.reshape(samples, -1, 3)
+    picked_det = (out == det[None]).all(axis=-1)          # (samples, P)
+    frac = picked_det.mean(axis=0)
+    tied = ~np.isclose(frac, 1.0)                         # pairs with a real tie
+    assert tied.any(), "expected at least one antipodal tie in FCC(2)"
+    assert (frac[tied] > 0.45).all() and (frac[tied] < 0.55).all(), frac
+    # all samples remain minimal records for their difference
+    nrm = np.abs(out).sum(-1)
+    want = dist[g.label_to_index(v)]
+    assert (nrm == want[None, :]).all()
+
+
+def test_remark30_engine_keyed_hierarchical():
+    """The generic engine's keyed path: minimal, congruent, and balanced on
+    half-ring ties of a torus block."""
+    M = bcc_matrix(2)
+    g = LatticeGraph(M)
+    eng = RoutingEngine(M)
+    v = random_pairs(g, 500)
+    dist = g.distances_from_origin[g.label_to_index(v)]
+    r = eng(v, key=jax.random.PRNGKey(0))
+    assert (norm1(r) == dist).all()
+    assert (g.label_to_index(r) == g.label_to_index(v)).all()
+    # a half-ring difference in the base torus T(4,4) of BCC(2): both signs
+    # minimal; over many keys each direction should appear ~half the time
+    v_half = np.tile([2, 0, 0], (10_000, 1))
+    rr = eng(v_half, key=jax.random.PRNGKey(7))
+    frac = (rr[:, 0] > 0).mean()
+    assert 0.45 < frac < 0.55, frac
+
+
+def test_keyfree_paths_are_deterministic():
+    g = FCC(3)
+    eng = RoutingEngine(fcc_matrix(3))
+    v = random_pairs(g, 400)
+    assert np.array_equal(eng(v), eng(v))
+    assert np.array_equal(eng.route_recursive(v), eng.route_recursive(v))
+    assert np.array_equal(routing_np.route_fcc(3, v),
+                          routing_np.route_fcc(3, v))
+    # same key → same coins; different key → (almost surely) some difference
+    k = jax.random.PRNGKey(5)
+    assert np.array_equal(eng(v, key=k), eng(v, key=k))
+
+
+# ---------------------------------------------------------------------------
+# bruteforce clamp regression (ISSUE 1 satellite)
+# ---------------------------------------------------------------------------
+
+def test_bruteforce_unclamped_is_exact_for_large_v():
+    """Regression: the old silent `box = min(box, 6)` clamp made the oracle
+    return 95 − 6·10 = 35 for the ring Z_10 at v = 95; the true minimal
+    record has norm 5 (u ∈ {9, 10} lies outside the clamped box)."""
+    M = [[10]]
+    r = minimal_record_bruteforce(M, np.array([95]))
+    assert np.abs(r).sum() == 5
+    # 2-D: v = (80, 80) in Z_9 × Z_9 needs u = (9, 9), norm 2 instead of 52
+    M2 = [[9, 0], [0, 9]]
+    r2 = minimal_record_bruteforce(M2, np.array([80, 80]))
+    assert np.abs(r2).sum() == 2
+
+
+def test_bruteforce_optin_clamp_warns():
+    with pytest.warns(UserWarning, match="clamping"):
+        r = minimal_record_bruteforce([[10]], np.array([95]), max_box=6)
+    assert r.tolist() == [35]          # documented wrong-under-clamp result
+
+
+def test_bruteforce_agrees_with_engine_inside_box():
+    M = fcc_matrix(3)
+    g = LatticeGraph(M)
+    eng = RoutingEngine(M)
+    v = random_pairs(g, 60)
+    rb = minimal_record_bruteforce(M, v, box=4)
+    assert np.array_equal(norm1(eng(v)), norm1(rb))
+
+
+# ---------------------------------------------------------------------------
+# consumers: build_tables through the engine
+# ---------------------------------------------------------------------------
+
+def test_build_tables_engine_matches_numpy_backend():
+    from repro.core.simulation import build_tables
+    g = BCC(2)
+    t_jax = build_tables(g)
+    t_np = build_tables(g, backend="numpy")
+    assert np.array_equal(t_jax.records_a, t_np.records_a)
+    assert np.array_equal(t_jax.records_b, t_np.records_b)
+
+
+def test_routed_distance_profile_matches_bfs():
+    from repro.core.distances import (routed_average_distance,
+                                      routed_diameter,
+                                      routed_distance_profile)
+    for g in (FCC(4), BCC(3), RTT(6)):
+        assert np.array_equal(routed_distance_profile(g),
+                              g.distance_distribution())
+        assert routed_diameter(g) == g.diameter
+        assert routed_average_distance(g) == pytest.approx(
+            g.average_distance, rel=1e-12)
