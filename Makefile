@@ -1,9 +1,19 @@
 # Entry points — no PYTHONPATH=src incantations needed (pytest picks up
 # src/ via pyproject's pythonpath ini + tests/conftest.py; the benchmark
 # driver gets it from this Makefile).
+#
+# CI (.github/workflows/ci.yml) runs: `make test` + `make bench-smoke` on
+# the test matrix, `make bench-check` as the perf-regression gate, and
+# `make lint` in the lint job.  Policy details: docs/ci.md.
 PY ?= python
+BENCH_JSON ?= /tmp/bench_current.json
+BENCH_TOLERANCE ?= 0.30
+# sections whose numbers the regression gate tracks (routing Mrec/s +
+# simulator slots/s); keep in sync with BENCH_baseline.json
+BENCH_GATE_SECTIONS = routing,sim
 
-.PHONY: test test-fast bench bench-quick
+.PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
+        bench-check bench-baseline lint
 
 test:
 	$(PY) -m pytest -q
@@ -23,3 +33,34 @@ bench-quick:
 # routing engine throughput only (ISSUE 1 acceptance numbers)
 bench-routing:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only routing
+
+# fast sanity pass CI runs on every matrix entry: cheap analytic sections
+# + the quick simulator benchmark; exercises the whole bench plumbing
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
+	    --only table1,table2,throughput,sim
+
+# perf-regression gate: measure the gated sections twice (quick mode,
+# JSON; per-metric best-of — a load spike slows one run, a regression
+# slows both) and compare against the committed baseline; >30% fails
+bench-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
+	    --only $(BENCH_GATE_SECTIONS) --json $(BENCH_JSON)
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
+	    --only $(BENCH_GATE_SECTIONS) --json $(BENCH_JSON).2
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+	    --baseline BENCH_baseline.json \
+	    --current $(BENCH_JSON) $(BENCH_JSON).2 \
+	    --tolerance $(BENCH_TOLERANCE)
+
+# refresh the committed baseline (run on the CI machine class, then commit)
+bench-baseline:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
+	    --only $(BENCH_GATE_SECTIONS) --json BENCH_baseline.json
+
+# ruff config lives in pyproject.toml [tool.ruff]; skips politely when
+# ruff isn't installed (offline containers)
+lint:
+	@command -v ruff >/dev/null 2>&1 \
+	    && ruff check src benchmarks tests \
+	    || echo "ruff not installed; skipping lint (CI installs it)"

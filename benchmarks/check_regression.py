@@ -1,0 +1,117 @@
+"""Bench-regression gate: compare a fresh --json run against the committed
+baseline and fail on >tolerance slowdowns of the gated throughput metrics.
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_baseline.json --current /tmp/bench.json \
+        [--tolerance 0.30]
+
+Gated metrics are the higher-is-better throughput numbers (routing
+Mrec/s, simulator slots/s, sweep points/s) — `GATED_SUFFIXES` below; all
+are measured best-of-reps, the robust estimator on shared runners.
+Speedup ratios are deliberately NOT gated: they are quotients of two
+noisy timings (the slow host-oracle side runs few reps), so they double
+the variance instead of cancelling it.  Rows only present on one side
+are reported but never fail the gate (sections and sizes may evolve); a
+gated metric regressing by more than `tolerance` (default 30%) fails
+with exit code 1.  Policy: docs/ci.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# derived-metric keys that are gated (higher is better)
+GATED_SUFFIXES = ("_Mrec_s", "slots_per_s", "loadpoints_per_s")
+# dispatch-overhead-dominated micro-rows: reported, never gated (they are
+# not the protected quantity and are the noisiest numbers on shared CPUs)
+UNGATED_ROW_MARKERS = ("/B=1000",)
+
+
+def _gated(name: str, row: dict) -> dict:
+    if any(m in name for m in UNGATED_ROW_MARKERS):
+        return {}
+    return {k: v for k, v in row.get("derived", {}).items()
+            if isinstance(v, (int, float))
+            and any(k.endswith(s) for s in GATED_SUFFIXES)}
+
+
+def merge_best(docs: list[dict]) -> dict:
+    """Per-metric max over repeated measurement runs: a load spike slows
+    one run, a real regression slows them all."""
+    out = json.loads(json.dumps(docs[0]))
+    by_name = {r["name"]: r for r in out["rows"]}
+    for doc in docs[1:]:
+        for row in doc["rows"]:
+            tgt = by_name.get(row["name"])
+            if tgt is None:
+                out["rows"].append(row)
+                by_name[row["name"]] = row
+                continue
+            for k, v in row.get("derived", {}).items():
+                cur = tgt["derived"].get(k)
+                if isinstance(v, (int, float)) and isinstance(
+                        cur, (int, float)):
+                    tgt["derived"][k] = max(cur, v)
+    return out
+
+
+def compare(baseline: dict, current: dict, tolerance: float):
+    base_rows = {r["name"]: r for r in baseline["rows"]}
+    cur_rows = {r["name"]: r for r in current["rows"]}
+    failures, notes = [], []
+    for name, brow in sorted(base_rows.items()):
+        crow = cur_rows.get(name)
+        if crow is None:
+            notes.append(f"row missing from current run: {name}")
+            continue
+        cder = crow.get("derived", {})
+        for metric, bval in _gated(name, brow).items():
+            cval = cder.get(metric)
+            if not isinstance(cval, (int, float)):
+                notes.append(f"metric missing: {name}:{metric}")
+                continue
+            if bval <= 0:
+                continue
+            ratio = cval / bval
+            line = (f"{name}:{metric} baseline={bval:.2f} "
+                    f"current={cval:.2f} ratio={ratio:.2f}")
+            if ratio < 1.0 - tolerance:
+                failures.append(line)
+            else:
+                notes.append("ok " + line)
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        notes.append(f"new row (not in baseline): {name}")
+    return failures, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True, nargs="+",
+                    help="one or more measurement runs; per-metric best "
+                         "is compared (re-measuring beats a load spike)")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed fractional slowdown (default 0.30)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    docs = []
+    for path in args.current:
+        with open(path) as f:
+            docs.append(json.load(f))
+    current = merge_best(docs)
+    failures, notes = compare(baseline, current, args.tolerance)
+    for n in notes:
+        print(n)
+    if failures:
+        print(f"\nBENCH REGRESSION (> {args.tolerance:.0%} slowdown):",
+              file=sys.stderr)
+        for f_ in failures:
+            print("  " + f_, file=sys.stderr)
+        sys.exit(1)
+    print(f"\nbench-check passed ({args.tolerance:.0%} tolerance)")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,10 +28,14 @@ RANDOM_HNF = [[6, 3, 1], [0, 5, 2], [0, 0, 4]]
 
 
 def _time(f, reps: int) -> float:
-    t0 = time.perf_counter()
+    """Best-of-reps: min is the robust throughput estimator on shared
+    runners (load spikes only ever make a rep slower)."""
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         f()
-    return (time.perf_counter() - t0) / reps
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def main(quick: bool = False) -> None:
@@ -48,8 +52,8 @@ def main(quick: bool = False) -> None:
                  - g.labels[rng.integers(0, g.order, B)])
             eng(v)                      # same-shape warmup (compile)
             eng.route_recursive(v)
-            reps = max(3, int(2e6 // B))
-            t_np = _time(lambda: hr(v), 1 if B >= 10**5 else 3)
+            reps = min(max(3, int(2e6 // B)), 50)
+            t_np = _time(lambda: hr(v), 2 if B >= 10**5 else 3)
             t_eng = _time(lambda: eng(v), reps)
             t_rec = _time(lambda: eng.route_recursive(v), max(reps // 4, 2))
             emit(f"routing/{name}/B={B}", t_eng * 1e6,

@@ -1,18 +1,24 @@
 """Benchmark driver: one section per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+                                            [--json out.json]
 
-Prints `name,us_per_call,derived` CSV rows (benchmarks.util contract).
+Prints `name,us_per_call,derived` CSV rows (benchmarks.util contract);
+with --json the same rows are also written machine-readable (the schema
+consumed by `benchmarks.check_regression` and committed as
+BENCH_baseline.json — see docs/ci.md for the regression-gate policy).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
 
 from . import (fig5_8_simulation, roofline, routing_throughput,
-               table1_distances, table2_lattices, throughput_bounds,
-               topology_collectives)
+               sim_throughput, table1_distances, table2_lattices,
+               throughput_bounds, topology_collectives, util)
 from .util import header
 
 SECTIONS = {
@@ -20,6 +26,7 @@ SECTIONS = {
     "table2": table2_lattices.main,
     "routing": routing_throughput.main,
     "throughput": throughput_bounds.main,
+    "sim": sim_throughput.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,
@@ -32,6 +39,8 @@ def main() -> None:
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of sections")
+    ap.add_argument("--json", default="", metavar="OUT",
+                    help="also write rows as JSON (bench-regression gate)")
     args = ap.parse_args()
     names = [s for s in args.only.split(",") if s] or list(SECTIONS)
     header()
@@ -42,6 +51,19 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — finish remaining sections
             failed.append((name, e))
             traceback.print_exc()
+    if args.json:
+        doc = util.rows_as_json()
+        doc["meta"] = {
+            "quick": args.quick,
+            "sections": names,
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(doc['rows'])} rows to {args.json}",
+              file=sys.stderr)
     if failed:
         sys.exit(f"benchmark sections failed: {[n for n, _ in failed]}")
 

@@ -43,13 +43,21 @@ def main(quick: bool = False) -> None:
              f"per_dim={np.round(per_dim, 3).tolist()};"
              f"imbalance={per_dim.max() / per_dim.min():.2f}")
 
-    # engine-routed saturation throughput vs the analytic Δ/k̄ bound
+    # engine-routed saturation throughput vs the analytic Δ/k̄ bound; the
+    # DOR crossing walk runs on device (channel_load_device) — numpy-walk
+    # cross-check emitted alongside (identical loads, host timing)
     for name, g in [("BCC(4)", BCC(4)), ("FCC(8)", FCC(8))]:
+        pairs = 5000 if quick else 50000
         t0 = time.perf_counter()
-        sat = measured_saturation_throughput(g, pairs=5000 if quick else 50000)
+        sat = measured_saturation_throughput(g, pairs=pairs)
         us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        sat_np = measured_saturation_throughput(g, pairs=pairs,
+                                                backend="numpy")
+        us_np = (time.perf_counter() - t0) * 1e6
         emit(f"saturation/{name}", us,
-             f"routed={sat:.3f};bound={symmetric_throughput_bound(g):.3f}")
+             f"routed={sat:.3f};bound={symmetric_throughput_bound(g):.3f};"
+             f"numpy_walk={sat_np:.3f};numpy_walk_us={us_np:.0f}")
 
 
 if __name__ == "__main__":

@@ -25,8 +25,10 @@ from .symmetry import (bcc_lift_is_never_symmetric, is_linear_automorphism,
                        theorem12_matrix_first_family,
                        theorem12_matrix_second_family)
 from .throughput import (bcc_throughput_bound, channel_load,
-                         fcc_throughput_bound, mixed_torus_throughput_bound,
-                         pc_throughput_bound, symmetric_throughput_bound)
+                         channel_load_device, channel_load_uniform,
+                         fcc_throughput_bound, measured_saturation_throughput,
+                         mixed_torus_throughput_bound, pc_throughput_bound,
+                         symmetric_throughput_bound)
 
 __all__ = [
     "intmat", "LatticeGraph",
@@ -47,5 +49,6 @@ __all__ = [
     "bcc_lift_is_never_symmetric",
     "symmetric_throughput_bound", "mixed_torus_throughput_bound",
     "pc_throughput_bound", "fcc_throughput_bound", "bcc_throughput_bound",
-    "channel_load",
+    "channel_load", "channel_load_device", "channel_load_uniform",
+    "measured_saturation_throughput",
 ]

@@ -14,8 +14,34 @@ Router model (simplifications vs INSEE noted in DESIGN.md §10):
   * bubble flow control: entering a dimension ring (injection or turn)
     requires 2 free slots in the target queue, continuing in-dimension
     requires 1 — the paper's deadlock-avoidance rule,
-  * random arbitration per output link; in-transit traffic beats injection
-    (the BlueGene congestion-control behaviour noted in §6.2).
+  * output-link arbitration with a per-slot rotating queue-slot priority;
+    in-transit traffic beats injection (the BlueGene congestion-control
+    behaviour noted in §6.2).
+
+Two implementations of the slot update share the state layout:
+
+  * ``impl="batched"`` (default) — all per-link quantities (winners,
+    records-after-hop, delivery flags, bubble requirements) are computed
+    in one vectorised pass over all 2n ports, with no Python loop over
+    ports and no scatters; only the same-slot space-reuse fixed point (a
+    packet moving into a slot vacated in this very slot) runs as a cheap
+    `lax.scan` over the 2n port levels on an (N, 2n) carry, reproducing
+    the reference sweep's acceptance exactly.  A whole run is one
+    `lax.scan` over slots, and a whole load curve is one vmapped device
+    program (`simulate_sweep`).
+  * ``impl="reference"`` — the pre-batching per-port Python loop, kept as
+    the semantic oracle: tests validate the batched implementation
+    statistically against it (same load curves within stochastic
+    tolerance), and `benchmarks/sim_throughput.py` measures the speedup.
+
+Arbitration detail: the reference breaks queue-slot contention for an
+output link with i.i.d. uniform scores drawn inside the slot update; the
+batched pass pre-draws 8-bit seeded priorities for the whole run in one
+bulk threefry call and resolves priority collisions with a per-slot
+rotating (hence unbiased) tie-break — statistically equivalent, one
+min-reduction per slot.  Both keep every *semantic* randomness source —
+Bernoulli injection, uniform destinations, and the Remark-30 record
+coin.
 
 Throughput is reported in phits/cycle/node = packets/slot/node.
 """
@@ -119,59 +145,286 @@ class SimResult:
 _RUNNER_CACHE: dict = {}
 
 
-def simulate(g: LatticeGraph, pattern: str, load: float, *,
-             slots: int = 512, warmup: int = 128, queue: int = 4,
-             seed: int = 0, tables: SimTables | None = None) -> SimResult:
-    """Run `slots` packet-slots (16 cycles each) at offered load `load`
-    (phits/cycle/node) and measure accepted throughput + latency."""
-    t = tables or build_tables(g, seed)
-    n, N = t.n, t.N
-    P = 2 * n
-    Q = queue
+def _next_port(rec):
+    """DOR: first nonzero dimension of the record → output port."""
+    nz = jnp.abs(rec) > 0
+    dim = jnp.argmax(nz, axis=-1)
+    sgn = jnp.take_along_axis(rec, dim[..., None], -1)[..., 0]
+    return 2 * dim + (sgn < 0), dim, sgn
 
-    nbr = jnp.asarray(t.neighbors)
-    rec_a = jnp.asarray(t.records_a)
-    rec_b = jnp.asarray(t.records_b)
-    labels = jnp.asarray(t.labels)
-    hermite = jnp.asarray(t.hermite)
-    strides = jnp.asarray(t.strides)
-    dst_np = pattern_table(g, pattern, seed)
-    fixed_dst = dst_np is not None
-    dst_table = jnp.asarray(dst_np if fixed_dst else np.zeros(N, np.int32))
+
+def _inject(state, key, new_dst, new_rec, new_birth, ctx):
+    """Reference injection stage (per-slot PRNG draws + scatter writes,
+    bitwise-stable vs the pre-batching simulator).  Runs after transit so
+    in-flight traffic has priority; entering a ring costs 2 free slots
+    (bubble rule)."""
+    N = ctx["N"]
+    fixed_dst = ctx["fixed_dst"]
+    labels, hermite, strides = ctx["labels"], ctx["hermite"], ctx["strides"]
+    rec_a, rec_b = ctx["rec_a"], ctx["rec_b"]
+    slot = state["slot"]
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
+    want_new = jax.random.uniform(k1, (N,)) < state["load"]
+    want = want_new | (state["backlog"] > 0)
+    if fixed_dst:
+        d = state["dst_table"]
+    else:
+        d = jax.random.randint(k2, (N,), 0, N - 1)
+        d = jnp.where(d >= jnp.arange(N), d + 1, d)
+    di = _delta_idx(labels, labels[d], hermite, strides)
+    coin = jax.random.uniform(k3, (N,)) < 0.5
+    r = jnp.where(coin[:, None], rec_a[di], rec_b[di])
+    inj_port, _, _ = _next_port(r[:, None, :])
+    inj_port = inj_port[:, 0]
+    freeq = jnp.take_along_axis(
+        (new_dst < 0).sum(axis=2), inj_port[:, None], axis=1)[:, 0]
+    can = want & (freeq >= 2) & (jnp.abs(r).sum(-1) > 0)
+    r_ = jnp.arange(N)
+    r = r.astype(new_rec.dtype)
+    slot_idx = jnp.argmax(new_dst[r_, inj_port] < 0, axis=1)
+    new_dst = new_dst.at[r_, inj_port, slot_idx].set(
+        jnp.where(can, d, new_dst[r_, inj_port, slot_idx]))
+    new_rec = new_rec.at[r_, inj_port, slot_idx].set(
+        jnp.where(can[:, None], r, new_rec[r_, inj_port, slot_idx]))
+    new_birth = new_birth.at[r_, inj_port, slot_idx].set(
+        jnp.where(can, slot, new_birth[r_, inj_port, slot_idx]))
+    backlog = jnp.clip(state["backlog"] + want_new - can, 0, 1 << 30)
+    return new_dst, new_rec, new_birth, backlog, can
+
+
+def _make_traffic(ctx, state, key, slots: int):
+    """Pre-draw the whole run's injection randomness in a handful of large
+    batched PRNG calls (per-slot threefry + routing-table lookups inside
+    the scan cost ~45% of a run): per (slot, node) a uniform injection
+    draw and the Remark-30 record coin, plus — for uniform traffic — the
+    destination as a *delta index* drawn directly (dst uniform over the
+    N−1 other nodes ⟺ delta uniform over the nonzero canonical labels),
+    reduced to the record and its first DOR port via the `rec_ab` /
+    `port_ab` tables."""
+    N, P, Q = ctx["N"], ctx["P"], ctx["Q"]
+    ku, kd, kc, kp = jax.random.split(jax.random.fold_in(key, 2), 4)
+    u = jax.random.uniform(ku, (slots, N))
+    coin = (jax.random.uniform(kc, (slots, N)) < 0.5).astype(jnp.int32)
+    if ctx["fixed_dst"]:
+        # read from the state so one compiled runner serves every fixed
+        # pattern on this topology (the cache key only carries fixed-ness)
+        di = state["di_fixed"][None, :]                    # (1, N), broadcast
+    else:
+        di = jax.random.randint(kd, (slots, N), 1, N)
+    return dict(
+        u=u,
+        r=ctx["rec_ab"][di, coin],                         # (slots, N, n)
+        p=ctx["port_ab"][di, coin],
+        v=jnp.broadcast_to(di != 0, (slots, N)),
+        # arbitration priorities for every queue slot of every slot time,
+        # one bulk threefry draw (~5× cheaper than hashing in the scan)
+        prio=jax.random.bits(kp, (slots, N, P * Q), jnp.uint8))
+
+
+def _finish_slot(state, counted_from, delivered, lat_sum, can, **updates):
+    slot = state["slot"]
+    counted = slot >= counted_from
+    return dict(
+        state, **updates, slot=slot + 1,
+        delivered=state["delivered"] + jnp.where(counted, delivered, 0),
+        lat_sum=state["lat_sum"] + jnp.where(counted, lat_sum, 0),
+        injected=state["injected"] + jnp.where(counted, can.sum(), 0))
+
+
+def _make_slot_step_batched(ctx, warmup: int):
+    """One simulated slot with NO Python loop over ports and NO scatters
+    (XLA CPU serializes scatter updates; everything here is gathers,
+    one-hot masks and small reductions):
+
+      * winner per (node, out-port): min-reduce of priority keys over a
+        (N, 2nQ, 2n) one-hot candidate tensor — 8-bit seeded threefry
+        priorities pre-drawn for the whole run (`_make_traffic`) plus a
+        per-slot rotating tie-break, standing in for the reference's
+        i.i.d. uniform arbitration scores,
+      * link acceptance for all 2n ports at once; the same-slot space
+        reuse fixed point runs as a `lax.scan` over port levels on a tiny
+        (N, 2n) carry (exactly the reference sweep's acceptance),
+      * queue updates through one-hot write masks (each in-queue receives
+        at most one packet per slot, so masks never collide),
+      * each packet's DOR output port is carried in the state and updated
+        only when the packet moves, so no per-slot argmax over the full
+        (N, 2n, Q, n) record tensor."""
+    n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
+    nbr = ctx["nbr"]
+    rec_dtype = ctx["rec_dtype"]
+    PQ = P * Q
+    # arbitration key = prio(8 bit)·PQ + rot(<PQ): int16 fits exactly up
+    # to PQ=127 (256·PQ − 1 < 0x7FFF); wider queues fall back to int32
+    key_dtype = jnp.int16 if PQ <= 127 else jnp.int32
+    BIG = key_dtype(np.iinfo(np.dtype(key_dtype)).max)
+    ports = jnp.arange(P)
+    opp = jnp.arange(P) ^ 1                        # paired ±e_i ports
+    sender = nbr[:, opp]                           # (N, P): src of in-port p
+    receiver = nbr                                 # (N, P): dst of out-port p
+    dim_p = ports // 2
+    sgn_p = 1 - 2 * (ports % 2)
+    # hop of out-port p subtracted from the record: sgn_p · e_{dim_p}
+    hop = np.zeros((P, n), np.int64)
+    hop[np.arange(P), np.asarray(dim_p)] = np.asarray(sgn_p)
+    hop = jnp.asarray(hop, rec_dtype)
+    pq32 = jnp.arange(PQ, dtype=jnp.int32)
+    ports8 = jnp.arange(P, dtype=jnp.int8)
+    NO_PORT = jnp.int8(P)
+
+    def gather_port(per_port, fill, port_flat):
+        """(N, P) per-out-port values → (N, PQ) per-slot values through each
+        queue slot's requested port (sentinel port P reads `fill`)."""
+        padded = jnp.concatenate(
+            [per_port, jnp.full((N, 1), fill, per_port.dtype)], axis=1)
+        return jnp.take_along_axis(padded, port_flat.astype(jnp.int32),
+                                   axis=1)
+
+    def slot_step(state, tr):
+        # birth doubles as the occupancy marker (−1 = free slot): the
+        # destination index itself is never consulted in transit — delivery
+        # is decided by the record reaching zero — so the batched state
+        # carries no dst array at all.
+        rec, birth, port = state["rec"], state["birth"], state["port"]
+        slot = state["slot"]
+        occ = birth >= 0                                   # (N, P, Q)
+        port = jnp.where(occ, port, NO_PORT)
+        port_flat = port.reshape(N, PQ)
+
+        # ---- winner per (node, out-port): one-hot min-reduce ----
+        # pre-drawn 8-bit threefry priorities (tr["prio"]) + a per-slot
+        # rotating tie-break keep the key narrow; priority collisions land
+        # on the rotating tie-break, so they carry no systematic
+        # queue-slot bias.
+        rot = (pq32[None, :] + jnp.int32(slot)) % PQ       # tie-break perm
+        enc = tr["prio"].astype(key_dtype) * key_dtype(PQ) \
+            + rot.astype(key_dtype)                        # (N, PQ) < BIG
+        cand = jnp.where(port_flat[:, :, None] == ports8[None, None, :],
+                         enc[:, :, None], BIG)             # (N, PQ, P)
+        w_enc = cand.min(axis=1)                           # (N, P)
+        whas = w_enc < BIG
+        widx = jnp.where(
+            whas, (w_enc.astype(jnp.int32) % PQ - jnp.int32(slot)) % PQ, 0)
+        w_srcq = widx // Q                                 # queue it occupies
+        # a queue slot departs iff it IS its port's winner and the link moves
+        is_winner = gather_port(w_enc, BIG, port_flat) == enc  # (N, PQ)
+
+        flat_rec = rec.reshape(N, PQ, n)
+        flat_birth = birth.reshape(N, PQ)
+
+        # ---- per-link view at the receiver of in-port p ----
+        # (gathers composed: winner fields are read once, directly through
+        # the sender's winner index)
+        in_has = whas[sender, ports]                       # (N, P)
+        in_widx = widx[sender, ports]
+        in_rec = flat_rec[sender, in_widx]                 # (N, P, n)
+        in_birth = flat_birth[sender, in_widx]
+        in_srcq = in_widx // Q
+        rec_after = in_rec - hop[None]
+        done = jnp.abs(rec_after.astype(jnp.int32)).sum(-1) == 0
+        deliver = in_has & done
+        turning = in_srcq != ports[None]                   # entering this ring
+        need = jnp.where(turning, 2, 1)                    # bubble rule
+        free0 = Q - occ.sum(axis=2)                        # (N, P) per queue
+
+        # ---- acceptance: exact sequential-sweep fixed point ----
+        # The reference resolves same-slot space reuse by sweeping ports in
+        # index order: in-port p sees slots vacated by winners that left
+        # through ports p' < p.  That recurrence needs only an (N, P)
+        # carry — per-queue vacancy counts and acceptance flags — so the
+        # heavy per-link quantities above stay one batched pass and the
+        # fixed point itself is a cheap `lax.scan` over the 2n port levels
+        # (bitwise-equal acceptance to the reference sweep given the same
+        # winners).
+        lvl_xs = dict(h=in_has.T, dn=done.T, f=free0.T, nd=need.T,
+                      dl=deliver.T, rx=receiver.T, wq=w_srcq.T, wh=whas.T,
+                      p=ports)
+
+        def level(vac, x):
+            acc_p = x["h"] & ~x["dn"] & (
+                x["f"] + jnp.take(vac, x["p"], axis=1) >= x["nd"])
+            # my port-p winner departs iff the packet moved at its receiver
+            dep_w = (x["dl"] | acc_p)[x["rx"]] & x["wh"]
+            vac = vac + jnp.where(
+                dep_w[:, None] & (x["wq"][:, None] == ports[None, :]), 1, 0)
+            return vac, acc_p
+
+        _, accT = jax.lax.scan(level, jnp.zeros((N, P), jnp.int32), lvl_xs)
+        acc = accT.T                                       # (N, P)
+        moved = deliver | acc
+
+        delivered = deliver.sum()
+        lat_sum = jnp.where(deliver, slot + 1 - in_birth, 0).sum()
+
+        # ---- apply: clear departed slots + fused transit/injection write --
+        # Transit fills the FIRST free slot of the in-queue, injection the
+        # LAST free slot of its ring's queue; when both fire on the same
+        # queue the bubble rule guarantees ≥3 free post-clear slots, so
+        # the two one-hot masks never collide and every state array takes
+        # a single fused where-chain.
+        dep_port = moved[receiver, ports] & whas
+        dep_slot = is_winner & gather_port(dep_port, False, port_flat)
+        birth_cleared = jnp.where(dep_slot, -1, flat_birth).reshape(N, P, Q)
+        free_mask = birth_cleared < 0
+        qi = jnp.arange(Q)[None, None, :]
+        slot_f = jnp.argmax(free_mask, axis=2)             # (N, P) first free
+        slot_l = (Q - 1) - jnp.argmax(free_mask[:, :, ::-1], axis=2)
+        wmask = acc[:, :, None] & (qi == slot_f[:, :, None])
+        port_in, _, _ = _next_port(rec_after)              # (N, P) next hop
+
+        # injection from pre-drawn traffic (after transit: in-flight
+        # traffic has priority; entering a ring costs 2 free slots)
+        want_new = tr["u"] < state["load"]
+        want = want_new | (state["backlog"] > 0)
+        depcnt = dep_slot.reshape(N, P, Q).sum(axis=2)
+        freeq_post = free0 + depcnt - acc                  # after transit
+        inj_port = tr["p"].astype(jnp.int32)
+        can = want & (jnp.take_along_axis(
+            freeq_post, inj_port[:, None], axis=1)[:, 0] >= 2) & tr["v"]
+        imask = (can[:, None, None]
+                 & (ports8[None, :, None] == tr["p"][:, None, None])
+                 & (qi == slot_l[:, :, None]))
+        backlog = jnp.clip(state["backlog"] + want_new - can, 0, 1 << 30)
+
+        new_rec = jnp.where(
+            imask[..., None], tr["r"][:, None, None, :],
+            jnp.where(wmask[..., None], rec_after[:, :, None, :], rec))
+        new_birth = jnp.where(
+            imask, slot.astype(birth.dtype),
+            jnp.where(wmask, in_birth[:, :, None], birth_cleared))
+        new_port = jnp.where(
+            imask, tr["p"][:, None, None],
+            jnp.where(wmask, port_in[:, :, None].astype(jnp.int8), port))
+
+        return _finish_slot(state, warmup, delivered, lat_sum, can,
+                            rec=new_rec, birth=new_birth, port=new_port,
+                            backlog=backlog), None
+
+    return slot_step
+
+
+def _make_slot_step_reference(ctx, warmup: int):
+    """The pre-batching per-port sweep (semantic oracle for the batched
+    implementation; random output-link arbitration, sequential same-slot
+    space reuse in port order)."""
+    n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
+    nbr = ctx["nbr"]
     opp = [p ^ 1 for p in range(P)]
-
-    def next_port(rec):
-        """DOR: first nonzero dimension of the record → output port."""
-        nz = jnp.abs(rec) > 0
-        dim = jnp.argmax(nz, axis=-1)
-        sgn = jnp.take_along_axis(rec, dim[..., None], -1)[..., 0]
-        return 2 * dim + (sgn < 0), dim, sgn
 
     def slot_step(state, key):
         dst, rec, birth = state["dst"], state["rec"], state["birth"]
         slot = state["slot"]
         occ = dst >= 0                                     # (N, P, Q)
-        port, dim, sgn = next_port(rec)                    # (N, P, Q)
+        port, _, _ = _next_port(rec)                       # (N, P, Q)
         port = jnp.where(occ, port, -1)
 
         # ---- arbitration: one winner packet per (node, out-port) ----
         rand = jax.random.uniform(jax.random.fold_in(key, 1), (N, P, Q))
-        flatscore = jnp.where(port[..., None] == jnp.arange(P), rand[..., None], -1.0)
+        flatscore = jnp.where(port[..., None] == jnp.arange(P),
+                              rand[..., None], -1.0)
         flat = flatscore.reshape(N, P * Q, P)
         widx = jnp.argmax(flat, axis=1)                    # (N, P) flat pq index
         whas = jnp.take_along_axis(flat, widx[:, None, :], axis=1)[:, 0, :] >= 0.0
 
-        def pick(arr):
-            """Gather winner-packet fields per (node, out-port)."""
-            flat_arr = arr.reshape(N, P * Q, *arr.shape[3:])
-            idx = widx
-            if arr.ndim > 3:
-                idx = widx[..., None]
-            take = jnp.take_along_axis(
-                flat_arr, idx[:, :, None] if arr.ndim == 3 else idx[:, :, None, :] if False else idx[:, :, None], axis=1)
-            return take
-
-        # simpler explicit gathers
         flat_dst = dst.reshape(N, P * Q)
         flat_rec = rec.reshape(N, P * Q, n)
         flat_birth = birth.reshape(N, P * Q)
@@ -179,10 +432,6 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
         w_dst = flat_dst[rows, widx]                       # (N, P)
         w_rec = flat_rec[rows, widx]                       # (N, P, n)
         w_birth = flat_birth[rows, widx]
-        w_dim = widx  # placeholder; recompute below
-        w_port_dim = (jnp.arange(P) // 2)[None, :].repeat(N, 0)
-
-        # the queue (= dimension ring) each winner currently occupies
         w_src_port = widx // Q                             # (N, P)
 
         # ---- per-link acceptance (each in-queue receives ≤ 1 packet) ----
@@ -199,7 +448,7 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
             pk_birth = w_birth[u, p]
             pk_src_port = w_src_port[u, p]
             rec_after = pk_rec.at[:, d_p].add(-s_p)
-            done = jnp.abs(rec_after).sum(-1) == 0
+            done = jnp.abs(rec_after.astype(jnp.int32)).sum(-1) == 0
             will_deliver = has & done
             turning = pk_src_port != p                     # entering this ring
             freeq = (new_dst[:, p] < 0).sum(axis=1)
@@ -209,7 +458,6 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
             delivered += will_deliver.sum()
             lat_sum += jnp.where(will_deliver, slot + 1 - pk_birth, 0).sum()
             # clear winner slot at sender
-            clr = jnp.where(moved, -1, flat_dst[jnp.arange(N), widx[:, p]])
             sel = widx[:, p]
             fd = new_dst.reshape(N, P * Q)
             fd = fd.at[u, sel[u]].set(jnp.where(moved, -1, fd[u, sel[u]]))
@@ -224,60 +472,115 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
             new_birth = new_birth.at[r_, p, slot_idx].set(
                 jnp.where(ok, pk_birth, new_birth[r_, p, slot_idx]))
 
-        # ---- injection (after transit: in-flight traffic has priority) ----
-        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
-        want_new = jax.random.uniform(k1, (N,)) < state["load"]
-        want = want_new | (state["backlog"] > 0)
-        if fixed_dst:
-            d = state["dst_table"]
-        else:
-            d = jax.random.randint(k2, (N,), 0, N - 1)
-            d = jnp.where(d >= jnp.arange(N), d + 1, d)
-        di = _delta_idx(labels[jnp.arange(N)], labels[d], hermite, strides)
-        coin = jax.random.uniform(k3, (N,)) < 0.5
-        r = jnp.where(coin[:, None], rec_a[di], rec_b[di])
-        inj_port, _, _ = next_port(r[:, None, :])
-        inj_port = inj_port[:, 0]
-        freeq = jnp.take_along_axis(
-            (new_dst < 0).sum(axis=2), inj_port[:, None], axis=1)[:, 0]
-        can = want & (freeq >= 2) & (jnp.abs(r).sum(-1) > 0)
-        r_ = jnp.arange(N)
-        slot_idx = jnp.argmax(new_dst[r_, inj_port] < 0, axis=1)
-        new_dst = new_dst.at[r_, inj_port, slot_idx].set(
-            jnp.where(can, d, new_dst[r_, inj_port, slot_idx]))
-        new_rec = new_rec.at[r_, inj_port, slot_idx].set(
-            jnp.where(can[:, None], r, new_rec[r_, inj_port, slot_idx]))
-        new_birth = new_birth.at[r_, inj_port, slot_idx].set(
-            jnp.where(can, slot, new_birth[r_, inj_port, slot_idx]))
-        backlog = jnp.clip(state["backlog"] + want_new - can, 0, 1 << 30)
+        new_dst, new_rec, new_birth, backlog, can = _inject(
+            state, key, new_dst, new_rec, new_birth, ctx)
+        return _finish_slot(state, warmup, delivered, lat_sum, can,
+                            dst=new_dst, rec=new_rec, birth=new_birth,
+                            backlog=backlog), None
 
-        counted = slot >= warmup
-        new_state = dict(
-            state, dst=new_dst, rec=new_rec, birth=new_birth,
-            backlog=backlog, slot=slot + 1,
-            delivered=state["delivered"] + jnp.where(counted, delivered, 0),
-            lat_sum=state["lat_sum"] + jnp.where(counted, lat_sum, 0),
-            injected=state["injected"] + jnp.where(counted, can.sum(), 0))
-        return new_state, None
+    return slot_step
 
+
+def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
+              queue: int):
+    dst_np = pattern_table(g, pattern, seed)
+    fixed_dst = dst_np is not None
+    # records are tiny for every pod-sized lattice — int8 state quarters the
+    # memory traffic of the biggest per-slot tensors (int32 kept as a
+    # fallback for enormous single-dimension graphs)
+    rec_max = max(int(np.abs(t.records_a).max(initial=0)),
+                  int(np.abs(t.records_b).max(initial=0)))
+    rec_dtype = jnp.int8 if rec_max <= 120 else jnp.int32
+    # per-delta-index injection tables: record (Remark-30 pair) + its first
+    # DOR port, so traffic generation is two gathers instead of routing work
+    rec_ab = np.stack([t.records_a, t.records_b], axis=1)  # (N, 2, n)
+    nz = np.abs(rec_ab) > 0
+    dim = np.argmax(nz, axis=-1)
+    sgn = np.take_along_axis(rec_ab, dim[..., None], axis=-1)[..., 0]
+    port_ab = 2 * dim + (sgn < 0)                          # (N, 2)
+    if fixed_dst:
+        g_strides = t.strides.astype(np.int64)
+        lab = t.labels.astype(np.int64)
+        delta = lab[dst_np] - lab
+        # reduce into the Hermite box on host (exact integer arithmetic)
+        from . import intmat
+        di_fixed = (intmat.canonical_label(delta, t.hermite)
+                    * g_strides).sum(axis=-1).astype(np.int32)
+    else:
+        di_fixed = np.zeros(t.N, np.int32)
+    return dict(
+        n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype,
+        nbr=jnp.asarray(t.neighbors),
+        rec_a=jnp.asarray(t.records_a),
+        rec_b=jnp.asarray(t.records_b),
+        rec_ab=jnp.asarray(rec_ab.astype(np.int64), rec_dtype),
+        port_ab=jnp.asarray(port_ab, jnp.int8),
+        di_fixed=jnp.asarray(di_fixed),
+        labels=jnp.asarray(t.labels),
+        hermite=jnp.asarray(t.hermite),
+        strides=jnp.asarray(t.strides),
+        fixed_dst=fixed_dst,
+        dst_table=jnp.asarray(
+            dst_np if fixed_dst else np.zeros(t.N, np.int32)))
+
+
+def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
+    n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
+    birth_dtype = jnp.int16 if slots < (1 << 15) - 1 else jnp.int32
     state = dict(
         load=jnp.float32(load),
-        dst_table=dst_table,
-        dst=jnp.full((N, P, Q), -1, dtype=jnp.int32),
-        rec=jnp.zeros((N, P, Q, n), dtype=jnp.int32),
-        birth=jnp.zeros((N, P, Q), dtype=jnp.int32),
+        dst_table=ctx["dst_table"],
+        rec=jnp.zeros((N, P, Q, n), dtype=ctx["rec_dtype"]),
+        birth=jnp.full((N, P, Q), -1, dtype=birth_dtype),
         backlog=jnp.zeros((N,), dtype=jnp.int32),
         slot=jnp.int32(0),
         delivered=jnp.int32(0),
         lat_sum=jnp.int32(0),
         injected=jnp.int32(0))
+    if impl == "batched":
+        # birth < 0 marks free slots; each packet carries its next DOR port
+        state["port"] = jnp.zeros((N, P, Q), dtype=jnp.int8)
+        state["di_fixed"] = ctx["di_fixed"]
+        del state["dst_table"]
+    else:
+        # the reference keeps the original dst-as-occupancy layout
+        state["dst"] = jnp.full((N, P, Q), -1, dtype=jnp.int32)
+        state["birth"] = jnp.zeros((N, P, Q), dtype=jnp.int32)
+    return state
 
-    cache_key = (t.neighbors.tobytes(), fixed_dst, slots, warmup, Q)
-    if cache_key not in _RUNNER_CACHE:
-        _RUNNER_CACHE[cache_key] = jax.jit(
-            lambda st, ks: jax.lax.scan(slot_step, st, ks)[0])
-    keys = jax.random.split(jax.random.PRNGKey(seed + 17), slots)
-    out = _RUNNER_CACHE[cache_key](state, keys)
+
+def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
+                n_loads: int):
+    """One compiled `lax.scan` per (topology, pattern kind, run shape);
+    sweeps vmap the same program over the load axis.  The batched runner
+    takes the base PRNG key and pre-draws all traffic (`_make_traffic`);
+    the reference runner takes per-slot keys and draws inside the scan."""
+    key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
+           ctx["Q"], impl, n_loads)
+    if key not in _RUNNER_CACHE:
+        if impl == "batched":
+            step = _make_slot_step_batched(ctx, warmup)
+
+            def runner(st, key):
+                tr = _make_traffic(ctx, st, key, slots)
+                return jax.lax.scan(step, st, tr)[0]
+        else:
+            step = _make_slot_step_reference(ctx, warmup)
+
+            def runner(st, key):
+                ks = jax.random.split(key, slots)
+                return jax.lax.scan(step, st, ks)[0]
+        if n_loads > 1:
+            # dst_table and the PRNG key are shared across the load axis, so
+            # fixed-pattern traffic is drawn once, not once per load point
+            axes = {k: (None if k in ("dst_table", "di_fixed") else 0)
+                    for k in _init_state(ctx, 0.0, impl)}
+            runner = jax.vmap(runner, in_axes=(axes, None), out_axes=axes)
+        _RUNNER_CACHE[key] = jax.jit(runner)
+    return _RUNNER_CACHE[key]
+
+
+def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
     measured = slots - warmup
     delivered = int(out["delivered"])
     return SimResult(
@@ -288,16 +591,74 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
         slots=slots)
 
 
-def throughput_curve(g: LatticeGraph, pattern: str, loads, **kw):
-    """Accepted-vs-offered load curve (one build of the static tables)."""
+def simulate(g: LatticeGraph, pattern: str, load: float, *,
+             slots: int = 512, warmup: int = 128, queue: int = 4,
+             seed: int = 0, tables: SimTables | None = None,
+             impl: str = "batched") -> SimResult:
+    """Run `slots` packet-slots (16 cycles each) at offered load `load`
+    (phits/cycle/node) and measure accepted throughput + latency.
+
+    impl="batched" is the port-batched single-pass simulator;
+    impl="reference" is the per-port-sweep oracle it is validated against.
+    """
+    if impl not in ("batched", "reference"):
+        raise ValueError(f"unknown simulator impl {impl!r}")
+    t = tables or build_tables(g, seed)
+    ctx = _make_ctx(t, g, pattern, seed, queue)
+    runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
+                         n_loads=1)
+    out = runner(_init_state(ctx, load, impl, slots),
+                 jax.random.PRNGKey(seed + 17))
+    return _result(out, slots=slots, warmup=warmup, N=t.N)
+
+
+def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
+                   slots: int = 512, warmup: int = 128, queue: int = 4,
+                   seed: int = 0, tables: SimTables | None = None,
+                   impl: str = "batched") -> list[SimResult]:
+    """An entire offered-load curve (Figs. 5–8) as ONE device program: the
+    per-slot update is vmapped over the load axis, so the whole sweep JITs
+    once and runs without host round-trips between load points.  Each load
+    point uses the same key sequence as `simulate(..., seed=seed)`."""
+    loads = [float(l) for l in np.asarray(loads).ravel()]
+    t = tables or build_tables(g, seed)
+    if len(loads) == 1:
+        return [simulate(g, pattern, loads[0], slots=slots, warmup=warmup,
+                         queue=queue, seed=seed, tables=t, impl=impl)]
+    ctx = _make_ctx(t, g, pattern, seed, queue)
+    runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
+                         n_loads=len(loads))
+    state = _init_state(ctx, 0.0, impl, slots)
+    state = {
+        k: (v if k in ("dst_table", "di_fixed")
+            else jnp.broadcast_to(v, (len(loads),) + v.shape))
+        for k, v in state.items()}
+    state = dict(state, load=jnp.asarray(loads, jnp.float32))
+    out = runner(state, jax.random.PRNGKey(seed + 17))
+    out_np = {k: np.asarray(v) for k, v in out.items()
+              if k in ("delivered", "lat_sum", "injected")}
+    return [
+        _result({k: v[i] for k, v in out_np.items()},
+                slots=slots, warmup=warmup, N=t.N)
+        for i in range(len(loads))]
+
+
+def simulate_load_sweep(g: LatticeGraph, pattern: str, loads, **kw):
+    """Accepted-vs-offered load curve (one build of the static tables, one
+    compiled+vmapped device program for the whole sweep)."""
+    # when tables are supplied a `seed` kwarg stays in kw for the sweep
     t = kw.pop("tables", None) or build_tables(g, kw.pop("seed", 0))
-    return [simulate(g, pattern, float(l), tables=t, **kw) for l in loads]
+    return simulate_sweep(g, pattern, loads, tables=t, **kw)
+
+
+# backwards-compatible name (pre-sweep API)
+throughput_curve = simulate_load_sweep
 
 
 def peak_throughput(g: LatticeGraph, pattern: str, loads=None, **kw):
     """Max accepted load over an offered-load sweep (the paper's
     'throughput peak')."""
     loads = loads if loads is not None else np.linspace(0.1, 1.0, 10)
-    res = throughput_curve(g, pattern, loads, **kw)
+    res = simulate_load_sweep(g, pattern, loads, **kw)
     best = max(res, key=lambda r: r.accepted_load)
     return best, res

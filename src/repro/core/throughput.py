@@ -71,19 +71,87 @@ def channel_load(g: LatticeGraph, records: np.ndarray,
     return load * (N / P)
 
 
+_DEVICE_WALK_CACHE: dict = {}
+
+
+def channel_load_device(g: LatticeGraph, records: np.ndarray,
+                        srcs: np.ndarray | None = None,
+                        seed: int = 0) -> np.ndarray:
+    """`channel_load` with the DOR link-crossing walk on device: positions
+    advance dimension by dimension under `lax.fori_loop`s bounded by the
+    per-dimension record maxima, with canonical reduction + scatter-adds
+    into the (N, 2n) load table — one jitted program per (graph, bounds)
+    shape.  Semantically identical to the numpy walk (same loads for the
+    same records/sources); the numpy path remains as `channel_load`."""
+    import jax
+    import jax.numpy as jnp
+
+    from .routing_engine import canonical_reduce
+
+    n, N = g.n, g.order
+    records = np.asarray(records)
+    P = records.shape[0]
+    if srcs is None:
+        srcs = np.random.default_rng(seed).integers(0, N, size=P)
+    bounds = tuple(int(np.abs(records[:, d]).max(initial=0))
+                   for d in range(n))
+    hermite = g.hermite.astype(np.int32)
+    key = (n, N, P, bounds, hermite.tobytes())
+    if key not in _DEVICE_WALK_CACHE:
+        H = jnp.asarray(hermite)
+        strides = jnp.asarray(g.strides.astype(np.int32))
+        diag = tuple(int(hermite[i, i]) for i in range(n))
+
+        def walk(pos, rec):
+            load = jnp.zeros((N, 2 * n), jnp.float32)
+            for dim in range(n):            # static, tiny
+                r = rec[:, dim]
+                sgn = jnp.sign(r)
+                chan = 2 * dim + (r < 0)
+
+                def body(s, carry, dim=dim, r=r, sgn=sgn, chan=chan):
+                    load, pos = carry
+                    active = jnp.abs(r) > s
+                    w = canonical_reduce(pos, H, diag)
+                    idx = (w * strides).sum(axis=-1)
+                    load = load.at[idx, chan].add(
+                        active.astype(jnp.float32))
+                    pos = pos.at[:, dim].add(jnp.where(active, sgn, 0))
+                    return load, pos
+
+                load, pos = jax.lax.fori_loop(0, bounds[dim], body,
+                                              (load, pos))
+            return load * (N / P)
+
+        _DEVICE_WALK_CACHE[key] = jax.jit(walk)
+    out = _DEVICE_WALK_CACHE[key](
+        jnp.asarray(g.labels[srcs].astype(np.int32)),
+        jnp.asarray(records.astype(np.int32)))
+    return np.asarray(out, dtype=np.float64)
+
+
 def channel_load_uniform(g: LatticeGraph, pairs: int = 20_000, seed: int = 0,
                          backend: str = "auto") -> np.ndarray:
     """Monte-Carlo channel loads under uniform traffic: sample `pairs`
     source→destination pairs, route them through the batched engine, and
-    accumulate DOR link crossings.  The empirical saturation throughput is
-    `1 / channel_load_uniform(g).max()` phits/cycle/node — cross-check it
-    against the analytic Δ/k̄ bound of §3.4."""
+    accumulate DOR link crossings — routing AND the crossing walk run on
+    device unless `backend='numpy'`.  The empirical saturation throughput
+    is `1 / channel_load_uniform(g).max()` phits/cycle/node — cross-check
+    it against the analytic Δ/k̄ bound of §3.4."""
     from .routing import make_router
     rng = np.random.default_rng(seed)
     router = make_router(g.matrix, backend)
-    v = (g.labels[rng.integers(0, g.order, pairs)]
-         - g.labels[rng.integers(0, g.order, pairs)])
-    return channel_load(g, np.asarray(router(v)), seed=seed)
+    srcs = rng.integers(0, g.order, pairs)
+    v = g.labels[srcs] - g.labels[rng.integers(0, g.order, pairs)]
+    records = np.asarray(router(v))
+    if backend != "numpy":
+        try:
+            # channel_load re-draws `srcs` from the same seed (first draw
+            # of the generator), so the device walk sees identical sources
+            return channel_load_device(g, records, srcs=srcs)
+        except ImportError:       # jax absent — numpy walk stands alone
+            pass
+    return channel_load(g, records, seed=seed)
 
 
 def measured_saturation_throughput(g: LatticeGraph, pairs: int = 20_000,

@@ -1,0 +1,111 @@
+"""Version compatibility for the shard_map / mesh API surface.
+
+This container's jax (0.4.37) predates three pieces of API this repo (and
+its tests) use, the same flavour of skew `kernels/_compat.py` fixed for
+`pltpu.CompilerParams`:
+
+  * ``jax.shard_map`` — still lives at ``jax.experimental.shard_map`` and
+    spells the replication-check kwarg ``check_rep`` instead of
+    ``check_vma``,
+  * ``jax.sharding.AxisType`` — does not exist yet (all mesh axes behave
+    as ``Auto``),
+  * ``jax.make_mesh(..., axis_types=...)`` — the kwarg does not exist yet,
+  * ``Compiled.cost_analysis()`` — returns a one-element list of dicts
+    instead of the modern plain dict.
+
+`shard_map`, `AxisType` and `make_mesh` below resolve to the native
+objects on new jax and to adapters on old jax.  `install()` additionally
+publishes the adapters at their modern locations (``jax.shard_map``,
+``jax.sharding.AxisType``, patched ``jax.make_mesh``) so code and tests
+written against the modern surface run unchanged — mirroring how
+`tests/_propcheck.py` stands in for `hypothesis`.  On a modern jax both
+the names here and `install()` are no-ops that use the native API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+import jax.stages
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for `jax.sharding.AxisType` (pre-explicit-sharding jax
+    treats every mesh axis as what is now called Auto)."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _adapt_shard_map():
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        return native
+    from jax.experimental.shard_map import shard_map as legacy
+
+    @functools.wraps(legacy)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  **kwargs):
+        kwargs.setdefault("check_rep", check_vma)
+        return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+    return shard_map
+
+
+def _adapt_make_mesh():
+    native = jax.make_mesh
+    if "axis_types" in inspect.signature(native).parameters:
+        return native
+
+    @functools.wraps(native)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        for t in (axis_types or ()):
+            if t not in (AxisType.Auto, None):
+                raise NotImplementedError(
+                    f"axis type {t} needs jax >= 0.5 (this jax treats all "
+                    "mesh axes as Auto)")
+        return native(axis_shapes, axis_names, **kwargs)
+
+    return make_mesh
+
+
+shard_map = _adapt_shard_map()
+AxisType = getattr(jax.sharding, "AxisType", _AxisType)
+make_mesh = _adapt_make_mesh()
+
+
+def install() -> bool:
+    """Publish the adapters at their modern jax locations when absent.
+    Returns True when anything was patched (old jax), False on modern jax.
+    Idempotent; never overwrites a native attribute."""
+    patched = False
+    if getattr(jax, "shard_map", None) is None:
+        jax.shard_map = shard_map
+        patched = True
+    if getattr(jax.sharding, "AxisType", None) is None:
+        jax.sharding.AxisType = AxisType
+        patched = True
+    if jax.make_mesh is not make_mesh \
+            and "axis_types" not in inspect.signature(
+                jax.make_mesh).parameters:
+        jax.make_mesh = make_mesh
+        patched = True
+    compiled = jax.stages.Compiled
+    if not getattr(compiled.cost_analysis, "_repro_compat", False):
+        legacy_ca = compiled.cost_analysis
+
+        @functools.wraps(legacy_ca)
+        def cost_analysis(self):
+            out = legacy_ca(self)
+            if isinstance(out, (list, tuple)):   # pre-0.5 per-device list
+                return out[0] if out else {}
+            return out
+
+        cost_analysis._repro_compat = True
+        compiled.cost_analysis = cost_analysis
+        patched = True
+    return patched

@@ -95,11 +95,14 @@ class PodTopologyReport:
 def analyze_pod(name: str, g: LatticeGraph,
                 torus_sides: tuple[int, ...] | None = None, *,
                 measure_routed: bool = False,
-                routed_pairs: int = 20_000) -> PodTopologyReport:
+                routed_pairs: int = 20_000,
+                routed_backend: str = "auto") -> PodTopologyReport:
     """Price a pod topology.  With `measure_routed=True` the analytic
     capacity bound is accompanied by an empirical saturation throughput:
     `routed_pairs` uniform pairs routed through the batched engine and
-    reduced to 1/max directional-link load."""
+    reduced to 1/max directional-link load, with both the routing and the
+    DOR link-crossing walk on device (`routed_backend="numpy"` forces the
+    host oracle end-to-end)."""
     sym = torus_sides is None
     test_bytes = 256 * 2**20
     cap = (symmetric_throughput_bound(g) if sym
@@ -114,8 +117,9 @@ def analyze_pod(name: str, g: LatticeGraph,
         allreduce_256MB_ms=1e3 * ring_all_reduce_time(test_bytes, g.order),
         alltoall_256MB_ms=1e3 * all_to_all_time(
             g, test_bytes, edge_symmetric=sym, torus_sides=torus_sides),
-        routed_capacity=(measured_saturation_throughput(g, routed_pairs)
-                         if measure_routed else None))
+        routed_capacity=(measured_saturation_throughput(
+            g, routed_pairs, backend=routed_backend)
+            if measure_routed else None))
 
 
 def bisection_links(g: LatticeGraph) -> int:

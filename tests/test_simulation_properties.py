@@ -1,0 +1,145 @@
+"""Property tests for the port-batched simulator (ISSUE 2).
+
+All strategies stay inside the `tests/_propcheck.py` shim subset
+(`integers`, `sampled_from`, `@given`, `@settings`), so this module runs
+offline in CI exactly as with real hypothesis.
+
+Invariants checked on seeded small lattices:
+  * packet conservation — injected = delivered + in-flight, bounded by
+    the total buffer capacity, for BOTH implementations,
+  * accepted throughput never exceeds offered load (up to Bernoulli
+    noise) nor the paper's Δ/k̄ capacity bound for edge-symmetric graphs,
+  * the batched implementation statistically agrees with the per-port
+    reference sweep (same seeds, independent arbitration streams),
+  * `simulate_sweep` (one vmapped device program) reproduces per-load
+    `simulate` calls exactly,
+  * the device DOR link-crossing walk matches the numpy walk bitwise-ish
+    (float32 accumulation) for engine-routed traffic.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BCC, PC, Torus
+from repro.core.simulation import build_tables, simulate, simulate_sweep
+from repro.core.throughput import (channel_load, channel_load_device,
+                                   symmetric_throughput_bound)
+
+# shared run shape → one compile per (graph, impl) across all examples
+SLOTS, WARMUP = 160, 40
+
+_GRAPHS = {
+    "BCC2": BCC(2),          # 32 nodes, edge-symmetric
+    "PC2": PC(2),            # 8 nodes, edge-symmetric
+    "T442": Torus(4, 4, 2),  # 32 nodes, mixed-radix
+}
+_TABLES = {k: build_tables(g) for k, g in _GRAPHS.items()}
+
+
+def _run(name, load, seed, impl="batched", pattern="uniform"):
+    g = _GRAPHS[name]
+    return simulate(g, pattern, load, slots=SLOTS, warmup=WARMUP,
+                    seed=seed, tables=_TABLES[name], impl=impl)
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)),
+       load=st.sampled_from([0.1, 0.3, 0.7, 1.0]),
+       seed=st.integers(0, 5),
+       impl=st.sampled_from(["batched", "reference"]))
+def test_packet_conservation(name, load, seed, impl):
+    """No loss, no duplication: injected − delivered = in-flight ∈
+    [0, total buffer slots]."""
+    g = _GRAPHS[name]
+    r = simulate(g, "uniform", load, slots=SLOTS, warmup=0, seed=seed,
+                 tables=_TABLES[name], impl=impl)
+    in_flight = r.injected - r.delivered
+    assert 0 <= in_flight <= g.order * g.degree * 4, (impl, in_flight)
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)),
+       load=st.sampled_from([0.1, 0.3, 0.6]),
+       seed=st.integers(0, 5))
+def test_accepted_at_most_offered(name, load, seed):
+    """Accepted throughput ≤ offered load up to Bernoulli sampling noise
+    (≈4σ for the smallest graph/run)."""
+    r = _run(name, load, seed)
+    N = _GRAPHS[name].order
+    sigma = np.sqrt(load * N * (SLOTS - WARMUP)) / (N * (SLOTS - WARMUP))
+    assert r.accepted_load <= load + 4 * sigma + 1e-9, (r.accepted_load, load)
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(["BCC2", "PC2"]),
+       load=st.sampled_from([0.6, 1.0]),
+       seed=st.integers(0, 5),
+       impl=st.sampled_from(["batched", "reference"]))
+def test_accepted_at_most_capacity_bound(name, load, seed, impl):
+    """Accepted throughput of edge-symmetric graphs never beats the §3.4
+    Δ/k̄ bound (with a small stochastic margin)."""
+    r = _run(name, load, seed, impl=impl)
+    bound = symmetric_throughput_bound(_GRAPHS[name])
+    assert r.accepted_load <= bound * 1.05 + 0.02, (r.accepted_load, bound)
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)),
+       load=st.sampled_from([0.1, 0.2, 0.3]),
+       seed=st.integers(0, 4))
+def test_batched_matches_reference_below_saturation(name, load, seed):
+    """Below saturation both implementations accept ≈ the offered load;
+    their difference is pure arbitration-stream noise."""
+    rb = _run(name, load, seed, impl="batched")
+    rr = _run(name, load, seed, impl="reference")
+    N = _GRAPHS[name].order
+    tol = 4 * np.sqrt(load * N * (SLOTS - WARMUP)) / (N * (SLOTS - WARMUP))
+    assert abs(rb.accepted_load - rr.accepted_load) <= 2 * tol + 0.01, \
+        (rb.accepted_load, rr.accepted_load)
+
+
+@settings(max_examples=4)
+@given(name=st.sampled_from(sorted(_GRAPHS)), seed=st.integers(0, 3),
+       pattern=st.sampled_from(["uniform", "centralsymmetric"]))
+def test_batched_peak_matches_reference(name, seed, pattern):
+    """Saturated (peak) throughput of the two implementations agrees
+    within stochastic tolerance on small lattices."""
+    loads = (0.5, 0.75, 1.0)
+    pk = {}
+    for impl in ("batched", "reference"):
+        pk[impl] = max(
+            _run(name, l, seed, impl=impl, pattern=pattern).accepted_load
+            for l in loads)
+    rel = abs(pk["batched"] - pk["reference"]) / max(pk["reference"], 1e-9)
+    assert rel <= 0.15, pk
+
+
+@settings(max_examples=4)
+@given(name=st.sampled_from(sorted(_GRAPHS)), seed=st.integers(0, 3))
+def test_sweep_equals_individual_runs(name, seed):
+    """One vmapped sweep program == per-load simulate() calls (same keys)."""
+    g = _GRAPHS[name]
+    loads = [0.2, 0.5, 0.9]
+    res = simulate_sweep(g, "uniform", loads, slots=SLOTS, warmup=WARMUP,
+                         seed=seed, tables=_TABLES[name])
+    for load, r in zip(loads, res):
+        single = _run(name, load, seed)
+        assert r.delivered == single.delivered, (load, r, single)
+        assert r.injected == single.injected
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)), seed=st.integers(0, 5),
+       pairs=st.integers(500, 3000))
+def test_channel_load_device_matches_numpy(name, seed, pairs):
+    """Device DOR walk ≡ numpy walk for identical records and sources."""
+    from repro.core.routing import make_router
+    g = _GRAPHS[name]
+    rng = np.random.default_rng(seed)
+    router = make_router(g.matrix)
+    srcs = rng.integers(0, g.order, pairs)
+    v = g.labels[srcs] - g.labels[rng.integers(0, g.order, pairs)]
+    rec = np.asarray(router(v))
+    l_np = channel_load(g, rec, seed=seed)
+    l_dev = channel_load_device(g, rec, srcs=srcs)
+    assert np.abs(l_np - l_dev).max() < 1e-5 * max(1.0, l_np.max())
