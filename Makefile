@@ -9,14 +9,16 @@ PY ?= python
 BENCH_JSON ?= /tmp/bench_current.json
 BENCH_TOLERANCE ?= 0.30
 # sections whose numbers the regression gate tracks (routing Mrec/s +
-# simulator slots/s); keep in sync with BENCH_baseline.json
-BENCH_GATE_SECTIONS = routing,sim
+# simulator & scenario-engine slots/s); keep in sync with BENCH_baseline.json
+BENCH_GATE_SECTIONS = routing,sim,scenarios
 
 .PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
         bench-check bench-baseline lint
 
+# --durations surfaces the slowest tests so suite-time regressions are
+# visible in every CI log
 test:
-	$(PY) -m pytest -q
+	$(PY) -m pytest -q --durations=15
 
 # skip the slow distributed/simulation modules; covers the routing stack
 test-fast:

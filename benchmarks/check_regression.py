@@ -24,12 +24,14 @@ import sys
 # derived-metric keys that are gated (higher is better)
 GATED_SUFFIXES = ("_Mrec_s", "slots_per_s", "loadpoints_per_s")
 # dispatch-overhead-dominated micro-rows: reported, never gated (they are
-# not the protected quantity and are the noisiest numbers on shared CPUs)
-UNGATED_ROW_MARKERS = ("/B=1000",)
+# not the protected quantity and are the noisiest numbers on shared CPUs).
+# Matched as a name SUFFIX: a substring test would also swallow the
+# /B=100000 rows — the exact metrics the gate exists to protect.
+UNGATED_ROW_SUFFIXES = ("/B=1000",)
 
 
 def _gated(name: str, row: dict) -> dict:
-    if any(m in name for m in UNGATED_ROW_MARKERS):
+    if name.endswith(UNGATED_ROW_SUFFIXES):
         return {}
     return {k: v for k, v in row.get("derived", {}).items()
             if isinstance(v, (int, float))
@@ -85,6 +87,30 @@ def compare(baseline: dict, current: dict, tolerance: float):
     return failures, notes
 
 
+def _die(msg: str) -> None:
+    """Infrastructure failure: clean one-line error, exit code 2 — distinct
+    from exit code 1, which means a genuine bench regression."""
+    print(msg, file=sys.stderr)
+    sys.exit(2)
+
+
+def _load(path: str) -> dict:
+    """Read one measurement document, failing with a clean one-line error
+    (exit code 2) on unreadable files or malformed/shapeless JSON instead
+    of a traceback — the gate's own failures must be unambiguous."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        _die(f"check_regression: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        _die(f"check_regression: invalid JSON in {path}: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("rows"), list):
+        _die(f"check_regression: {path} has no 'rows' list "
+             "(not a benchmarks.run --json document?)")
+    return doc
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
@@ -94,13 +120,8 @@ def main() -> None:
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="max allowed fractional slowdown (default 0.30)")
     args = ap.parse_args()
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    docs = []
-    for path in args.current:
-        with open(path) as f:
-            docs.append(json.load(f))
-    current = merge_best(docs)
+    baseline = _load(args.baseline)
+    current = merge_best([_load(path) for path in args.current])
     failures, notes = compare(baseline, current, args.tolerance)
     for n in notes:
         print(n)

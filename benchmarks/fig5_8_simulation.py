@@ -30,25 +30,38 @@ PAPER_GAINS = {
 }
 
 
-def peak(g, tables, pattern, loads, slots, warmup, seed=3):
-    res = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
-                         tables=tables, seed=seed)
-    best = max(res, key=lambda r: r.accepted_load)
-    return best.accepted_load, best.avg_latency_cycles
+def peak(g, tables, pattern, loads, slots, warmup, seed=3, seeds=None):
+    """Throughput peak over the load sweep.  With `seeds` the sweep gains
+    the multi-seed axis (one device program) and the peak comes back as
+    mean ± CI half-width over the seed axis — the Figs 5–8 error bars."""
+    if seeds is None:
+        res = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
+                             tables=tables, seed=seed)
+        best = max(res, key=lambda r: r.accepted_load)
+        return best.accepted_load, 0.0, best.avg_latency_cycles
+    st = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
+                        tables=tables, seed=seed, seeds=seeds)
+    mean = st.accepted_mean()
+    i = int(np.argmax(mean))
+    return float(mean[i]), float(st.accepted_ci()[i]), \
+        float(st.latency_mean()[i])
 
 
-def run_pair(tag: str, torus, crystal, loads, slots, warmup):
+def run_pair(tag: str, torus, crystal, loads, slots, warmup, seeds=None):
     t_tab = build_tables(torus)
     c_tab = build_tables(crystal)
     for pattern in PATTERNS:
         t0 = time.perf_counter()
-        pt, lt = peak(torus, t_tab, pattern, loads, slots, warmup)
-        pc_, lc = peak(crystal, c_tab, pattern, loads, slots, warmup)
+        pt, et, lt = peak(torus, t_tab, pattern, loads, slots, warmup,
+                          seeds=seeds)
+        pc_, ec, lc = peak(crystal, c_tab, pattern, loads, slots, warmup,
+                           seeds=seeds)
         us = (time.perf_counter() - t0) * 1e6
         gain = pc_ / max(pt, 1e-9)
         emit(f"fig5_8/{tag}/{pattern}", us,
              f"torus_peak={pt:.3f};crystal_peak={pc_:.3f};gain={gain:.2f};"
              f"paper_gain={PAPER_GAINS[(tag, pattern)]};"
+             f"torus_ci={et:.3f};crystal_ci={ec:.3f};"
              f"torus_lat={lt:.0f};crystal_lat={lc:.0f}")
 
 
@@ -57,10 +70,13 @@ def main(quick: bool = False) -> None:
         np.array([0.2, 0.4, 0.6, 0.8, 1.0])
     slots = 192 if quick else 288
     warmup = 48 if quick else 64
-    run_pair("small", Torus(8, 8, 8, 4), FourD_BCC(4), loads, slots, warmup)
+    # full mode: 2-seed error bars (quick CI smoke stays single-seed)
+    seeds = None if quick else 2
+    run_pair("small", Torus(8, 8, 8, 4), FourD_BCC(4), loads, slots, warmup,
+             seeds=seeds)
     if not quick:
         run_pair("large", Torus(16, 8, 8, 8), FourD_FCC(8), loads, slots,
-                 warmup)
+                 warmup, seeds=seeds)
 
 
 if __name__ == "__main__":

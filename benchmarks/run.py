@@ -16,7 +16,7 @@ import platform
 import sys
 import traceback
 
-from . import (fig5_8_simulation, roofline, routing_throughput,
+from . import (fig5_8_simulation, roofline, routing_throughput, scenario_sim,
                sim_throughput, table1_distances, table2_lattices,
                throughput_bounds, topology_collectives, util)
 from .util import header
@@ -27,6 +27,7 @@ SECTIONS = {
     "routing": routing_throughput.main,
     "throughput": throughput_bounds.main,
     "sim": sim_throughput.main,
+    "scenarios": scenario_sim.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,

@@ -1,0 +1,67 @@
+"""Scenario-engine throughput: faulted/adaptive simulation vs the
+fault-free batched baseline, plus the multi-seed sweep cost.
+
+The acceptance bar (ISSUE 3): at N=4096 a faulted adaptive-routing run
+must stay within 2× of the fault-free batched path — faults and policies
+enter the compiled slot update as masks/tables only, so the overhead is
+a handful of extra fused elementwise ops, not a different program shape.
+Quick mode shrinks to N=512 for CI smoke; emitted `slots_per_s` /
+`loadpoints_per_s` metrics are gated by `make bench-check`.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Scenario, Torus
+from repro.core.simulation import build_tables, simulate, simulate_sweep
+
+from .util import emit
+
+REPS = 3
+
+
+def main(quick: bool = False) -> None:
+    g = Torus(8, 8, 4, 2) if quick else Torus(8, 8, 8, 8)
+    slots = 192 if quick else 512
+    warmup = 48 if quick else 128
+    t = build_tables(g)
+    scen = Scenario.random_link_faults(g, 8, seed=5, policy="adaptive")
+
+    def run(scenario):
+        return simulate(g, "uniform", 0.6, slots=slots, warmup=warmup,
+                        seed=1, tables=t, scenario=scenario)
+
+    # compile both, then alternate (fair under machine noise)
+    run(None)
+    run(scen)
+    best = {"fault_free": float("inf"), "faulted_adaptive": float("inf")}
+    for _ in range(REPS):
+        for name, s in (("fault_free", None), ("faulted_adaptive", scen)):
+            t0 = time.perf_counter()
+            run(s)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    for name in best:
+        emit(f"scenarios/{name}/N={g.order}", best[name] * 1e6,
+             f"slots_per_s={slots / best[name]:.1f};slots={slots}")
+    emit(f"scenarios/overhead/N={g.order}", 0.0,
+         f"overhead={best['faulted_adaptive'] / best['fault_free']:.2f}x")
+
+    # multi-seed sweep: (loads × seeds) error-bar program, cost per run
+    loads, seeds = (0.3, 0.6, 1.0), 2
+    kw = dict(slots=slots, warmup=warmup, seed=1, seeds=seeds, tables=t,
+              scenario=scen)
+    simulate_sweep(g, "uniform", loads, **kw)          # compile
+    best_sweep = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        simulate_sweep(g, "uniform", loads, **kw)
+        best_sweep = min(best_sweep, time.perf_counter() - t0)
+    runs = len(loads) * seeds
+    emit(f"scenarios/sweep{len(loads)}x{seeds}/N={g.order}",
+         best_sweep * 1e6,
+         f"scenario_loadpoints_per_s={runs / best_sweep:.2f};"
+         f"per_run_s={best_sweep / runs:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,13 +8,16 @@ from .crystals import (BCC, FCC, PC, RTT, FourD_BCC, FourD_FCC, Lip, Torus,
                        lip_matrix, nd_bcc_matrix, nd_fcc_matrix, nd_pc_matrix,
                        pc_matrix, rtt_matrix, torus_matrix, upgrade_path)
 from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
+                        faulted_average_distance, faulted_diameter,
+                        faulted_distance_matrix, faulted_distance_profile,
                         fcc_average_distance, fcc_diameter,
                         mixed_torus_diameter, pc_average_distance,
                         pc_diameter, summarize, torus_average_distance)
 from .lattice import LatticeGraph
-from .routing import (HierarchicalRouter, make_router,
+from .routing import (HierarchicalRouter, fault_aware_next_hop, make_router,
                       minimal_record_bruteforce, norm1, route_bcc, route_fcc,
                       route_ring, route_rtt, route_torus)
+from .scenario import Scenario, scenario_connected
 try:
     from .routing_engine import RoutingEngine
 except ImportError:           # jax absent — the numpy oracle stands alone
@@ -26,6 +29,8 @@ from .symmetry import (bcc_lift_is_never_symmetric, is_linear_automorphism,
                        theorem12_matrix_second_family)
 from .throughput import (bcc_throughput_bound, channel_load,
                          channel_load_device, channel_load_uniform,
+                         fault_aware_channel_load,
+                         fault_aware_saturation_throughput,
                          fcc_throughput_bound, measured_saturation_throughput,
                          mixed_torus_throughput_bound, pc_throughput_bound,
                          symmetric_throughput_bound)
@@ -51,4 +56,8 @@ __all__ = [
     "pc_throughput_bound", "fcc_throughput_bound", "bcc_throughput_bound",
     "channel_load", "channel_load_device", "channel_load_uniform",
     "measured_saturation_throughput",
+    "Scenario", "scenario_connected", "fault_aware_next_hop",
+    "fault_aware_channel_load", "fault_aware_saturation_throughput",
+    "faulted_distance_matrix", "faulted_distance_profile",
+    "faulted_average_distance", "faulted_diameter",
 ]

@@ -106,6 +106,53 @@ def routed_average_distance(g: LatticeGraph, backend: str = "auto",
     return float((hist * ks).sum()) / (g.order - 1)
 
 
+# ---------------------------------------------------------------------------
+# degraded-graph (scenario) distance profiles: fault-aware table rebuild
+# ---------------------------------------------------------------------------
+
+def faulted_distance_matrix(g: LatticeGraph, scenario) -> np.ndarray:
+    """(N, N) live-path distances of the degraded graph (BFS rebuild via
+    `routing.fault_aware_next_hop`; −1 = unreachable or dead endpoint).
+    Faults break vertex transitivity, so unlike the pristine case a single
+    origin profile is not enough — the whole matrix is rebuilt."""
+    from .routing import fault_aware_next_hop
+    dist, _ = fault_aware_next_hop(g, scenario.link_ok(g),
+                                   scenario.node_ok(g))
+    return dist
+
+
+def faulted_distance_profile(g: LatticeGraph, scenario,
+                             dist: np.ndarray | None = None) -> np.ndarray:
+    """hist[k] = #ordered live reachable pairs at distance k ≥ 1 in the
+    degraded graph (cf. `routed_distance_profile`, which counts from one
+    origin of the vertex-transitive pristine graph)."""
+    if dist is None:
+        dist = faulted_distance_matrix(g, scenario)
+    d = dist[dist > 0]
+    return np.bincount(d) if d.size else np.zeros(1, dtype=np.int64)
+
+
+def faulted_average_distance(g: LatticeGraph, scenario,
+                             dist: np.ndarray | None = None) -> float:
+    """Mean distance over ordered live reachable pairs of the degraded
+    graph — the k̄ entering the Δ/k̄-style saturation intuition once links
+    or nodes die."""
+    if dist is None:
+        dist = faulted_distance_matrix(g, scenario)
+    d = dist[dist > 0]
+    if d.size == 0:
+        raise ValueError("no reachable pairs under this scenario")
+    return float(d.mean())
+
+
+def faulted_diameter(g: LatticeGraph, scenario,
+                     dist: np.ndarray | None = None) -> int:
+    """Max live-pair distance of the degraded graph."""
+    if dist is None:
+        dist = faulted_distance_matrix(g, scenario)
+    return int(dist.max())
+
+
 @dataclass(frozen=True)
 class DistanceSummary:
     name: str

@@ -261,3 +261,59 @@ def make_router(M, backend: str = "auto"):
             raise
         return HierarchicalRouter(M)
     return RoutingEngine(M)
+
+
+# ---------------------------------------------------------------------------
+# fault-aware table rebuild (scenario engine)
+# ---------------------------------------------------------------------------
+
+def fault_aware_next_hop(g: LatticeGraph, link_ok: np.ndarray,
+                         node_ok: np.ndarray | None = None
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """All-pairs routing tables for a *degraded* graph.
+
+    Faults break the vertex transitivity the per-delta record tables rely
+    on, so the rebuild is a BFS per destination over the masked adjacency
+    (host, exact integers):
+
+      * ``dist``     — (N, N) int32, dist[u, d] = length of the shortest
+        live path u → d (−1 when unreachable or an endpoint is dead),
+      * ``next_hop`` — (N, N) int8, the first (lowest-index) live port
+        that steps onto such a shortest path (−1 when there is none).
+
+    `link_ok` is the (N, 2n) channel-liveness mask of
+    `Scenario.link_ok` — symmetric by construction, so BFS layers expand
+    over undirected live edges.  Consumers: `distances.faulted_*` and
+    `throughput.fault_aware_channel_load` rebuild degraded distance
+    profiles and saturation bounds from these tables.
+    """
+    N, P = g.order, 2 * g.n
+    nbr = g.neighbor_indices
+    link_ok = np.asarray(link_ok, dtype=bool)
+    node_ok = (np.ones(N, dtype=bool) if node_ok is None
+               else np.asarray(node_ok, dtype=bool))
+    dist = np.full((N, N), -1, dtype=np.int32)
+    next_hop = np.full((N, N), -1, dtype=np.int8)
+    for d in np.flatnonzero(node_ok):
+        dd = np.full(N, -1, dtype=np.int32)
+        dd[d] = 0
+        frontier = np.array([d], dtype=np.int64)
+        level = 0
+        while frontier.size:
+            level += 1
+            nxt = []
+            for p in range(P):
+                v = nbr[frontier, p]
+                ok = link_ok[frontier, p] & node_ok[v] & (dd[v] < 0)
+                nxt.append(v[ok])
+            frontier = np.unique(np.concatenate(nxt))
+            frontier = frontier[dd[frontier] < 0]
+            dd[frontier] = level
+        dist[:, d] = dd
+        # first live port one step closer to d
+        dn = dd[nbr]                                       # (N, P)
+        cand = link_ok & (dn == (dd - 1)[:, None]) & (dn >= 0)
+        cand &= (dd > 0)[:, None]
+        has = cand.any(axis=1)
+        next_hop[:, d] = np.where(has, cand.argmax(axis=1), -1)
+    return dist, next_hop

@@ -1,0 +1,165 @@
+"""Fault-injection & adaptive-routing scenarios for lattice-graph fabrics.
+
+A `Scenario` describes the *degraded* regime the paper's §6.2 evaluation
+does not cover: dead links, dead nodes, and non-DOR escape routing — the
+operating points where a symmetric crystal fabric must still beat a
+mixed-radix torus to justify itself as a practical interconnect.
+
+The spec is deliberately declarative: a scenario is nothing but
+
+  * ``dead_links`` — undirected faults, given as (node, port) pairs
+    (killing (u, p) also kills the reverse channel (v, p XOR 1) of the
+    neighbour v behind port p),
+  * ``dead_nodes`` — every incident channel of the node dies, the node
+    never injects, and it is excluded as a traffic destination,
+  * ``policy`` — the routing policy packets follow:
+
+      - ``"dor"``       dimension-order over the minimal record (the
+                        baseline; packets whose required channel is dead
+                        block in place),
+      - ``"adaptive"``  minimal-adaptive: at every hop the packet takes
+                        the first *live* productive port (any dimension
+                        whose record component is nonzero), i.e. it picks
+                        among the equal-norm minimal ports,
+      - ``"escape"``    adaptive with a non-minimal escape hop: when every
+                        productive port is dead, the packet takes the
+                        first live port of any dimension (its record grows
+                        by the misroute and shrinks again later).
+
+Downstream consumers turn the spec into **masks and tables** (never
+Python branching in a hot loop): the simulator threads ``link_ok`` /
+``inj_ok`` / ``dst_ok`` through both slot-update implementations
+(`repro.core.simulation`), and the analytic layers rebuild fault-aware
+BFS routing tables (`repro.core.routing.fault_aware_next_hop`,
+`repro.core.distances.faulted_*`, `repro.core.throughput.fault_aware_*`)
+so saturation bounds and load curves reflect the degraded graph.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from .lattice import LatticeGraph
+
+POLICIES = ("dor", "adaptive", "escape")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """Declarative fault + routing-policy spec (see module docstring)."""
+
+    dead_links: tuple[tuple[int, int], ...] = ()   # (node, port), undirected
+    dead_nodes: tuple[int, ...] = ()
+    policy: str = "dor"
+    name: str = "baseline"
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; expected one of {POLICIES}")
+        object.__setattr__(self, "dead_links",
+                           tuple((int(u), int(p)) for u, p in self.dead_links))
+        object.__setattr__(self, "dead_nodes",
+                           tuple(int(u) for u in self.dead_nodes))
+
+    # -- triviality ---------------------------------------------------------
+    @property
+    def is_trivial(self) -> bool:
+        """True iff the scenario is the pristine DOR baseline: downstream
+        code paths then stay bitwise-identical to the scenario-less ones."""
+        return (not self.dead_links and not self.dead_nodes
+                and self.policy == "dor")
+
+    def with_policy(self, policy: str) -> "Scenario":
+        return replace(self, policy=policy,
+                       name=f"{self.name}/{policy}")
+
+    # -- masks --------------------------------------------------------------
+    def link_ok(self, g: LatticeGraph) -> np.ndarray:
+        """(N, 2n) bool: channel (u, p) is alive.  Symmetric by
+        construction: killing (u, p) kills (v, p^1) too, and a dead node
+        takes every incident channel (both directions) down with it."""
+        nbr = g.neighbor_indices
+        ok = np.ones((g.order, 2 * g.n), dtype=bool)
+        for u, p in self.dead_links:
+            v = int(nbr[u, p])
+            ok[u, p] = False
+            ok[v, p ^ 1] = False
+        for u in self.dead_nodes:
+            ok[u, :] = False
+            for p in range(2 * g.n):
+                ok[int(nbr[u, p]), p ^ 1] = False
+        return ok
+
+    def node_ok(self, g: LatticeGraph) -> np.ndarray:
+        """(N,) bool: node is alive (injects traffic, valid destination)."""
+        ok = np.ones(g.order, dtype=bool)
+        ok[list(self.dead_nodes)] = False
+        return ok
+
+    def fingerprint(self, g: LatticeGraph) -> tuple:
+        """Hashable identity for compiled-runner caches."""
+        if self.is_trivial:
+            return ("trivial",)
+        return (self.policy, self.link_ok(g).tobytes(),
+                self.node_ok(g).tobytes())
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def random_link_faults(cls, g: LatticeGraph, k: int, seed: int = 0,
+                           policy: str = "adaptive") -> "Scenario":
+        """k distinct undirected link faults sampled uniformly."""
+        max_links = g.order * g.n          # N·2n directed / 2
+        if k > max_links:
+            raise ValueError(
+                f"k={k} exceeds the {max_links} distinct undirected links "
+                f"of this graph")
+        rng = np.random.default_rng(seed)
+        seen: set[tuple[int, int]] = set()
+        links: list[tuple[int, int]] = []
+        nbr = g.neighbor_indices
+        while len(links) < k:
+            u = int(rng.integers(0, g.order))
+            p = int(rng.integers(0, 2 * g.n))
+            v = int(nbr[u, p])
+            key = min((u, p), (v, p ^ 1))
+            if key in seen:
+                continue
+            seen.add(key)
+            links.append((u, p))
+        return cls(dead_links=tuple(links), policy=policy,
+                   name=f"links{k}@{seed}")
+
+    @classmethod
+    def random_node_faults(cls, g: LatticeGraph, k: int, seed: int = 0,
+                           policy: str = "adaptive") -> "Scenario":
+        """k distinct dead nodes sampled uniformly (origin kept alive so
+        fixed patterns anchored at 0 stay meaningful)."""
+        rng = np.random.default_rng(seed)
+        nodes = rng.choice(np.arange(1, g.order), size=k, replace=False)
+        return cls(dead_nodes=tuple(int(x) for x in nodes), policy=policy,
+                   name=f"nodes{k}@{seed}")
+
+
+def scenario_connected(g: LatticeGraph, scenario: Scenario) -> bool:
+    """True iff the live nodes form one connected component under the live
+    links — the sanity check tests use before asserting delivery."""
+    link_ok = scenario.link_ok(g)
+    node_ok = scenario.node_ok(g)
+    live = np.flatnonzero(node_ok)
+    if live.size == 0:
+        return False
+    seen = np.zeros(g.order, dtype=bool)
+    seen[live[0]] = True
+    frontier = np.array([live[0]])
+    nbr = g.neighbor_indices
+    while frontier.size:
+        nxt = []
+        for p in range(2 * g.n):
+            dst = nbr[frontier, p]
+            ok = link_ok[frontier, p] & ~seen[dst]
+            nxt.append(dst[ok])
+        frontier = np.unique(np.concatenate(nxt)) if nxt else np.array([], int)
+        seen[frontier] = True
+    return bool(seen[live].all())

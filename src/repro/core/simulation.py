@@ -44,10 +44,27 @@ Bernoulli injection, uniform destinations, and the Remark-30 record
 coin.
 
 Throughput is reported in phits/cycle/node = packets/slot/node.
+
+**Scenario engine.**  Both implementations accept a `repro.core.scenario.
+Scenario` (dead links, dead nodes, routing policy ∈ {dor, adaptive,
+escape}).  Faults and policies enter the compiled slot update purely as
+masks and tables — a `link_ok` (N, 2n) mask excludes dead channels from
+arbitration, dead nodes are masked out of injection and destination
+sampling, and the per-packet output port comes from
+`routing_engine.policy_ports` — so a scenario run is still ONE device
+program and `simulate_sweep` can vmap it over loads AND seeds.  The
+trivial scenario (no faults, DOR) takes the exact pre-scenario code
+paths, so baseline results stay bitwise-identical.  Invariants (enforced
+by tests/test_scenarios.py): no packet ever crosses a dead channel
+(`SimResult.link_use` audits every crossing), and — with warmup=0, so
+every slot is counted — `delivered + in_flight + dropped == injected`
+exactly (a packet is *dropped* only at injection, when a fixed pattern
+targets a dead node; with a warmup, packets injected before measurement
+starts are excluded from the counters but still occupy queue slots).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +72,8 @@ import numpy as np
 
 from .lattice import LatticeGraph
 from .routing import make_router
-from .routing_engine import canonical_reduce
+from .routing_engine import canonical_reduce, policy_ports
+from .scenario import Scenario
 
 PACKET_PHITS = 16
 
@@ -140,6 +158,11 @@ class SimResult:
     delivered: int
     injected: int
     slots: int
+    dropped: int = 0          # refused at injection (dead destination)
+    in_flight: int = 0        # occupied queue slots at run end
+    # (N, 2n) per-channel packet crossings, counted over ALL slots; only
+    # tracked for non-trivial scenarios (the dead-link audit)
+    link_use: np.ndarray | None = field(default=None, compare=False)
 
 
 _RUNNER_CACHE: dict = {}
@@ -155,41 +178,63 @@ def _next_port(rec):
 
 def _inject(state, key, new_dst, new_rec, new_birth, ctx):
     """Reference injection stage (per-slot PRNG draws + scatter writes,
-    bitwise-stable vs the pre-batching simulator).  Runs after transit so
-    in-flight traffic has priority; entering a ring costs 2 free slots
-    (bubble rule)."""
-    N = ctx["N"]
+    bitwise-stable vs the pre-batching simulator for trivial scenarios).
+    Runs after transit so in-flight traffic has priority; entering a ring
+    costs 2 free slots (bubble rule).  Under a non-trivial scenario dead
+    sources never want, destinations are sampled over live nodes, packets
+    of fixed patterns aimed at a dead node are *dropped*, and the
+    injection port follows the scenario policy."""
+    N, P = ctx["N"], ctx["P"]
     fixed_dst = ctx["fixed_dst"]
+    trivial = ctx["trivial"]
     labels, hermite, strides = ctx["labels"], ctx["hermite"], ctx["strides"]
     rec_a, rec_b = ctx["rec_a"], ctx["rec_b"]
     slot = state["slot"]
     k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
     want_new = jax.random.uniform(k1, (N,)) < state["load"]
+    if not trivial:
+        want_new = want_new & ctx["inj_ok"]
     want = want_new | (state["backlog"] > 0)
     if fixed_dst:
         d = state["dst_table"]
+    elif not trivial and ctx["has_dead_nodes"]:
+        # uniform over *live* destinations (self-draws carry di == 0 and
+        # simply back-log, exactly like a fixed self-pattern)
+        d = ctx["live_tbl"][jax.random.randint(k2, (N,), 0, ctx["n_live"])]
     else:
         d = jax.random.randint(k2, (N,), 0, N - 1)
         d = jnp.where(d >= jnp.arange(N), d + 1, d)
     di = _delta_idx(labels, labels[d], hermite, strides)
     coin = jax.random.uniform(k3, (N,)) < 0.5
     r = jnp.where(coin[:, None], rec_a[di], rec_b[di])
-    inj_port, _, _ = _next_port(r[:, None, :])
-    inj_port = inj_port[:, 0]
+    if trivial:
+        inj_port, _, _ = _next_port(r[:, None, :])
+        inj_port = inj_port[:, 0]
+        drop = None
+        ipc = inj_port
+    else:
+        inj_port = policy_ports(r, ctx["link_ok"], ctx["policy"])
+        drop = want & ~ctx["dst_ok"][d]
+        ipc = jnp.minimum(inj_port, P - 1)        # clamp the P sentinel
     freeq = jnp.take_along_axis(
-        (new_dst < 0).sum(axis=2), inj_port[:, None], axis=1)[:, 0]
+        (new_dst < 0).sum(axis=2), ipc[:, None], axis=1)[:, 0]
     can = want & (freeq >= 2) & (jnp.abs(r).sum(-1) > 0)
+    if not trivial:
+        can = can & ~drop & (inj_port < P)
     r_ = jnp.arange(N)
     r = r.astype(new_rec.dtype)
-    slot_idx = jnp.argmax(new_dst[r_, inj_port] < 0, axis=1)
-    new_dst = new_dst.at[r_, inj_port, slot_idx].set(
-        jnp.where(can, d, new_dst[r_, inj_port, slot_idx]))
-    new_rec = new_rec.at[r_, inj_port, slot_idx].set(
-        jnp.where(can[:, None], r, new_rec[r_, inj_port, slot_idx]))
-    new_birth = new_birth.at[r_, inj_port, slot_idx].set(
-        jnp.where(can, slot, new_birth[r_, inj_port, slot_idx]))
-    backlog = jnp.clip(state["backlog"] + want_new - can, 0, 1 << 30)
-    return new_dst, new_rec, new_birth, backlog, can
+    slot_idx = jnp.argmax(new_dst[r_, ipc] < 0, axis=1)
+    new_dst = new_dst.at[r_, ipc, slot_idx].set(
+        jnp.where(can, d, new_dst[r_, ipc, slot_idx]))
+    new_rec = new_rec.at[r_, ipc, slot_idx].set(
+        jnp.where(can[:, None], r, new_rec[r_, ipc, slot_idx]))
+    new_birth = new_birth.at[r_, ipc, slot_idx].set(
+        jnp.where(can, slot, new_birth[r_, ipc, slot_idx]))
+    backlog = state["backlog"] + want_new - can
+    if drop is not None:
+        backlog = backlog - drop
+    backlog = jnp.clip(backlog, 0, 1 << 30)
+    return new_dst, new_rec, new_birth, backlog, can, drop
 
 
 def _make_traffic(ctx, state, key, slots: int):
@@ -209,26 +254,47 @@ def _make_traffic(ctx, state, key, slots: int):
         # read from the state so one compiled runner serves every fixed
         # pattern on this topology (the cache key only carries fixed-ness)
         di = state["di_fixed"][None, :]                    # (1, N), broadcast
+    elif not ctx["trivial"] and ctx["has_dead_nodes"]:
+        # uniform over *live* destinations: draw the node, reduce the
+        # delta on device (self-draws carry di == 0 and back-log)
+        dstn = ctx["live_tbl"][
+            jax.random.randint(kd, (slots, N), 0, ctx["n_live"])]
+        di = _delta_idx(ctx["labels"][None, :, :], ctx["labels"][dstn],
+                        ctx["hermite"], ctx["strides"])
     else:
         di = jax.random.randint(kd, (slots, N), 1, N)
+    r = ctx["rec_ab"][di, coin]                            # (slots, N, n)
+    if ctx["trivial"] or ctx["policy"] == "dor":
+        # DOR ignores liveness, so the precomputed port table stays valid
+        p = ctx["port_ab"][di, coin]
+    else:
+        p = policy_ports(r, ctx["link_ok"][None, :, :],
+                         ctx["policy"]).astype(jnp.int8)
     return dict(
         u=u,
-        r=ctx["rec_ab"][di, coin],                         # (slots, N, n)
-        p=ctx["port_ab"][di, coin],
+        r=r,
+        p=p,
         v=jnp.broadcast_to(di != 0, (slots, N)),
         # arbitration priorities for every queue slot of every slot time,
         # one bulk threefry draw (~5× cheaper than hashing in the scan)
         prio=jax.random.bits(kp, (slots, N, P * Q), jnp.uint8))
 
 
-def _finish_slot(state, counted_from, delivered, lat_sum, can, **updates):
+def _finish_slot(state, counted_from, delivered, lat_sum, can, drop=None,
+                 **updates):
     slot = state["slot"]
     counted = slot >= counted_from
-    return dict(
+    # dropped packets count as injected so that conservation stays exact:
+    # injected == delivered + in_flight + dropped
+    inj = can.sum() if drop is None else can.sum() + drop.sum()
+    out = dict(
         state, **updates, slot=slot + 1,
         delivered=state["delivered"] + jnp.where(counted, delivered, 0),
         lat_sum=state["lat_sum"] + jnp.where(counted, lat_sum, 0),
-        injected=state["injected"] + jnp.where(counted, can.sum(), 0))
+        injected=state["injected"] + jnp.where(counted, inj, 0))
+    if drop is not None:
+        out["dropped"] = state["dropped"] + jnp.where(counted, drop.sum(), 0)
+    return out
 
 
 def _make_slot_step_batched(ctx, warmup: int):
@@ -248,10 +314,18 @@ def _make_slot_step_batched(ctx, warmup: int):
         at most one packet per slot, so masks never collide),
       * each packet's DOR output port is carried in the state and updated
         only when the packet moves, so no per-slot argmax over the full
-        (N, 2n, Q, n) record tensor."""
+        (N, 2n, Q, n) record tensor.
+
+    Scenario faults and policies enter as masks/tables only: dead channels
+    are excluded from the winner min-reduce (`link_ok` where-mask), the
+    carried port comes from `policy_ports`, and dropped/audit counters are
+    extra fused reductions — the trivial scenario compiles to the exact
+    pre-scenario program."""
     n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
     nbr = ctx["nbr"]
     rec_dtype = ctx["rec_dtype"]
+    trivial = ctx["trivial"]
+    link_ok = None if trivial else ctx["link_ok"]
     PQ = P * Q
     # arbitration key = prio(8 bit)·PQ + rot(<PQ): int16 fits exactly up
     # to PQ=127 (256·PQ − 1 < 0x7FFF); wider queues fall back to int32
@@ -301,6 +375,10 @@ def _make_slot_step_batched(ctx, warmup: int):
         cand = jnp.where(port_flat[:, :, None] == ports8[None, None, :],
                          enc[:, :, None], BIG)             # (N, PQ, P)
         w_enc = cand.min(axis=1)                           # (N, P)
+        if not trivial:
+            # a dead channel moves nothing: mask its winner away (packets
+            # requesting it — DOR through a fault — block in place)
+            w_enc = jnp.where(link_ok, w_enc, BIG)
         whas = w_enc < BIG
         widx = jnp.where(
             whas, (w_enc.astype(jnp.int32) % PQ - jnp.int32(slot)) % PQ, 0)
@@ -369,21 +447,41 @@ def _make_slot_step_batched(ctx, warmup: int):
         slot_f = jnp.argmax(free_mask, axis=2)             # (N, P) first free
         slot_l = (Q - 1) - jnp.argmax(free_mask[:, :, ::-1], axis=2)
         wmask = acc[:, :, None] & (qi == slot_f[:, :, None])
-        port_in, _, _ = _next_port(rec_after)              # (N, P) next hop
+        if trivial:
+            port_in, _, _ = _next_port(rec_after)          # (N, P) next hop
+        else:
+            port_in = policy_ports(rec_after, link_ok[:, None, :],
+                                   ctx["policy"])
 
         # injection from pre-drawn traffic (after transit: in-flight
         # traffic has priority; entering a ring costs 2 free slots)
         want_new = tr["u"] < state["load"]
+        if not trivial:
+            want_new = want_new & ctx["inj_ok"]
         want = want_new | (state["backlog"] > 0)
         depcnt = dep_slot.reshape(N, P, Q).sum(axis=2)
         freeq_post = free0 + depcnt - acc                  # after transit
         inj_port = tr["p"].astype(jnp.int32)
-        can = want & (jnp.take_along_axis(
-            freeq_post, inj_port[:, None], axis=1)[:, 0] >= 2) & tr["v"]
+        if trivial:
+            drop = None
+            can = want & (jnp.take_along_axis(
+                freeq_post, inj_port[:, None], axis=1)[:, 0] >= 2) & tr["v"]
+        else:
+            # the drop mask is pattern-specific, so — like di_fixed — it
+            # lives in the STATE: the compiled runner stays shared across
+            # fixed patterns (the cache key only carries fixed-ness)
+            drop = want & ~state["dst_live_fixed"]
+            ipc = jnp.minimum(inj_port, P - 1)             # clamp P sentinel
+            can = (want & ~drop & (jnp.take_along_axis(
+                freeq_post, ipc[:, None], axis=1)[:, 0] >= 2)
+                & tr["v"] & (inj_port < P))
         imask = (can[:, None, None]
                  & (ports8[None, :, None] == tr["p"][:, None, None])
                  & (qi == slot_l[:, :, None]))
-        backlog = jnp.clip(state["backlog"] + want_new - can, 0, 1 << 30)
+        backlog = state["backlog"] + want_new - can
+        if drop is not None:
+            backlog = backlog - drop
+        backlog = jnp.clip(backlog, 0, 1 << 30)
 
         new_rec = jnp.where(
             imask[..., None], tr["r"][:, None, None, :],
@@ -395,9 +493,14 @@ def _make_slot_step_batched(ctx, warmup: int):
             imask, tr["p"][:, None, None],
             jnp.where(wmask, port_in[:, :, None].astype(jnp.int8), port))
 
-        return _finish_slot(state, warmup, delivered, lat_sum, can,
-                            rec=new_rec, birth=new_birth, port=new_port,
-                            backlog=backlog), None
+        updates = dict(rec=new_rec, birth=new_birth, port=new_port,
+                       backlog=backlog)
+        if not trivial:
+            # dead-channel audit: count every crossing (all slots, not just
+            # measured ones — "never" means never)
+            updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
+        return _finish_slot(state, warmup, delivered, lat_sum, can, drop,
+                            **updates), None
 
     return slot_step
 
@@ -409,18 +512,26 @@ def _make_slot_step_reference(ctx, warmup: int):
     n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
     nbr = ctx["nbr"]
     opp = [p ^ 1 for p in range(P)]
+    trivial = ctx["trivial"]
 
     def slot_step(state, key):
         dst, rec, birth = state["dst"], state["rec"], state["birth"]
         slot = state["slot"]
         occ = dst >= 0                                     # (N, P, Q)
-        port, _, _ = _next_port(rec)                       # (N, P, Q)
+        if trivial:
+            port, _, _ = _next_port(rec)                   # (N, P, Q)
+        else:
+            port = policy_ports(rec, ctx["link_ok"][:, None, None, :],
+                                ctx["policy"])
         port = jnp.where(occ, port, -1)
 
         # ---- arbitration: one winner packet per (node, out-port) ----
         rand = jax.random.uniform(jax.random.fold_in(key, 1), (N, P, Q))
-        flatscore = jnp.where(port[..., None] == jnp.arange(P),
-                              rand[..., None], -1.0)
+        requested = port[..., None] == jnp.arange(P)
+        if not trivial:
+            # dead channels never arbitrate: packets aimed at them block
+            requested = requested & ctx["link_ok"][:, None, None, :]
+        flatscore = jnp.where(requested, rand[..., None], -1.0)
         flat = flatscore.reshape(N, P * Q, P)
         widx = jnp.argmax(flat, axis=1)                    # (N, P) flat pq index
         whas = jnp.take_along_axis(flat, widx[:, None, :], axis=1)[:, 0, :] >= 0.0
@@ -438,6 +549,7 @@ def _make_slot_step_reference(ctx, warmup: int):
         delivered = jnp.int32(0)
         lat_sum = jnp.int32(0)
         new_dst, new_rec, new_birth = dst, rec, birth
+        link_use = None if trivial else state["link_use"]
         for p in range(P):
             d_p = p // 2
             s_p = 1 - 2 * (p % 2)                          # +1 / −1
@@ -457,6 +569,10 @@ def _make_slot_step_reference(ctx, warmup: int):
             # stats
             delivered += will_deliver.sum()
             lat_sum += jnp.where(will_deliver, slot + 1 - pk_birth, 0).sum()
+            if link_use is not None:
+                # crossing of channel (u, p); u ↔ receiver is a bijection,
+                # so the scatter-add never collides
+                link_use = link_use.at[u, p].add(moved.astype(jnp.int32))
             # clear winner slot at sender
             sel = widx[:, p]
             fd = new_dst.reshape(N, P * Q)
@@ -472,25 +588,32 @@ def _make_slot_step_reference(ctx, warmup: int):
             new_birth = new_birth.at[r_, p, slot_idx].set(
                 jnp.where(ok, pk_birth, new_birth[r_, p, slot_idx]))
 
-        new_dst, new_rec, new_birth, backlog, can = _inject(
+        new_dst, new_rec, new_birth, backlog, can, drop = _inject(
             state, key, new_dst, new_rec, new_birth, ctx)
-        return _finish_slot(state, warmup, delivered, lat_sum, can,
-                            dst=new_dst, rec=new_rec, birth=new_birth,
-                            backlog=backlog), None
+        updates = dict(dst=new_dst, rec=new_rec, birth=new_birth,
+                       backlog=backlog)
+        if link_use is not None:
+            updates["link_use"] = link_use
+        return _finish_slot(state, warmup, delivered, lat_sum, can, drop,
+                            **updates), None
 
     return slot_step
 
 
 def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
-              queue: int):
+              queue: int, scenario: Scenario | None = None):
+    scenario = scenario or Scenario()
+    trivial = scenario.is_trivial
     dst_np = pattern_table(g, pattern, seed)
     fixed_dst = dst_np is not None
     # records are tiny for every pod-sized lattice — int8 state quarters the
     # memory traffic of the biggest per-slot tensors (int32 kept as a
-    # fallback for enormous single-dimension graphs)
+    # fallback for enormous single-dimension graphs; escape misrouting can
+    # grow records past the minimal bound, so it gets the wide dtype)
     rec_max = max(int(np.abs(t.records_a).max(initial=0)),
                   int(np.abs(t.records_b).max(initial=0)))
-    rec_dtype = jnp.int8 if rec_max <= 120 else jnp.int32
+    rec_dtype = (jnp.int32 if scenario.policy == "escape" or rec_max > 120
+                 else jnp.int8)
     # per-delta-index injection tables: record (Remark-30 pair) + its first
     # DOR port, so traffic generation is two gathers instead of routing work
     rec_ab = np.stack([t.records_a, t.records_b], axis=1)  # (N, 2, n)
@@ -508,8 +631,27 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
                     * g_strides).sum(axis=-1).astype(np.int32)
     else:
         di_fixed = np.zeros(t.N, np.int32)
+    scen: dict = dict(trivial=trivial, policy=scenario.policy,
+                      scen_fp=scenario.fingerprint(g))
+    if not trivial:
+        link_ok = scenario.link_ok(g)
+        node_ok = scenario.node_ok(g)
+        live = np.flatnonzero(node_ok).astype(np.int32)
+        if live.size == 0:
+            raise ValueError("scenario kills every node")
+        scen.update(
+            link_ok=jnp.asarray(link_ok),
+            inj_ok=jnp.asarray(node_ok),
+            dst_ok=jnp.asarray(node_ok),
+            has_dead_nodes=bool(scenario.dead_nodes),
+            live_tbl=jnp.asarray(live),
+            n_live=int(live.size),
+            # fixed-pattern packets aimed at a dead node are dropped at
+            # injection (uniform traffic samples live nodes, never drops)
+            dst_live_fixed=jnp.asarray(
+                node_ok[dst_np] if fixed_dst else np.ones(t.N, bool)))
     return dict(
-        n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype,
+        n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype, **scen,
         nbr=jnp.asarray(t.neighbors),
         rec_a=jnp.asarray(t.records_a),
         rec_b=jnp.asarray(t.records_b),
@@ -536,11 +678,16 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
         slot=jnp.int32(0),
         delivered=jnp.int32(0),
         lat_sum=jnp.int32(0),
-        injected=jnp.int32(0))
+        injected=jnp.int32(0),
+        dropped=jnp.int32(0))
+    if not ctx["trivial"]:
+        state["link_use"] = jnp.zeros((N, P), dtype=jnp.int32)
     if impl == "batched":
         # birth < 0 marks free slots; each packet carries its next DOR port
         state["port"] = jnp.zeros((N, P, Q), dtype=jnp.int8)
         state["di_fixed"] = ctx["di_fixed"]
+        if not ctx["trivial"]:
+            state["dst_live_fixed"] = ctx["dst_live_fixed"]
         del state["dst_table"]
     else:
         # the reference keeps the original dst-as-occupancy layout
@@ -550,13 +697,14 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
 
 
 def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
-                n_loads: int):
-    """One compiled `lax.scan` per (topology, pattern kind, run shape);
-    sweeps vmap the same program over the load axis.  The batched runner
-    takes the base PRNG key and pre-draws all traffic (`_make_traffic`);
-    the reference runner takes per-slot keys and draws inside the scan."""
+                n_loads: int, n_seeds: int = 1):
+    """One compiled `lax.scan` per (topology, pattern kind, scenario, run
+    shape); sweeps vmap the same program over the load axis and, nested
+    inside it, the seed axis.  The batched runner takes per-run PRNG keys
+    and pre-draws all traffic (`_make_traffic`); the reference runner
+    splits its key into per-slot keys and draws inside the scan."""
     key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
-           ctx["Q"], impl, n_loads)
+           ctx["Q"], impl, n_loads, n_seeds, ctx["scen_fp"])
     if key not in _RUNNER_CACHE:
         if impl == "batched":
             step = _make_slot_step_batched(ctx, warmup)
@@ -570,12 +718,18 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
             def runner(st, key):
                 ks = jax.random.split(key, slots)
                 return jax.lax.scan(step, st, ks)[0]
+        # dst_table / di_fixed are shared across both sweep axes, so
+        # fixed-pattern traffic is derived once, not once per run
+        axes = {k: (None if k in ("dst_table", "di_fixed",
+                                  "dst_live_fixed") else 0)
+                for k in _init_state(ctx, 0.0, impl)}
+        if n_seeds > 1:
+            # seed axis: same initial state, one key per seed
+            runner = jax.vmap(runner, in_axes=(None, 0), out_axes=axes)
         if n_loads > 1:
-            # dst_table and the PRNG key are shared across the load axis, so
-            # fixed-pattern traffic is drawn once, not once per load point
-            axes = {k: (None if k in ("dst_table", "di_fixed") else 0)
-                    for k in _init_state(ctx, 0.0, impl)}
-            runner = jax.vmap(runner, in_axes=(axes, None), out_axes=axes)
+            # load axis: per-load state (the offered load lives in it) and
+            # per-load fold of the key (decorrelates sweep points)
+            runner = jax.vmap(runner, in_axes=(axes, 0), out_axes=axes)
         _RUNNER_CACHE[key] = jax.jit(runner)
     return _RUNNER_CACHE[key]
 
@@ -583,64 +737,179 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
 def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
     measured = slots - warmup
     delivered = int(out["delivered"])
+    # occupancy at run end: the reference keeps dst-as-occupancy, the
+    # batched state marks free slots with birth < 0
+    occ = out.get("dst", out.get("birth"))
+    lu = out.get("link_use")
     return SimResult(
         accepted_load=delivered / max(measured * N, 1),
         avg_latency_cycles=PACKET_PHITS * float(out["lat_sum"]) / max(delivered, 1),
         delivered=delivered,
         injected=int(out["injected"]),
-        slots=slots)
+        slots=slots,
+        dropped=int(out.get("dropped", 0)),
+        in_flight=0 if occ is None else int((np.asarray(occ) >= 0).sum()),
+        link_use=None if lu is None else np.asarray(lu))
+
+
+@dataclass(frozen=True)
+class SweepStats:
+    """Multi-seed sweep: `results[load][seed]` plus the mean ± CI reducers
+    the Figs 5–8 error bars are drawn from."""
+    loads: tuple[float, ...]
+    seeds: tuple[int, ...]
+    results: tuple[tuple[SimResult, ...], ...]
+
+    def field(self, name: str) -> np.ndarray:
+        """(L, S) array of one SimResult field."""
+        return np.array([[getattr(r, name) for r in row]
+                         for row in self.results], dtype=np.float64)
+
+    def accepted(self) -> np.ndarray:
+        return self.field("accepted_load")
+
+    def accepted_mean(self) -> np.ndarray:
+        return self.accepted().mean(axis=1)
+
+    def accepted_ci(self, z: float = 1.96) -> np.ndarray:
+        """Per-load CI half-width z·s/√k over the seed axis (0 for k=1)."""
+        a = self.accepted()
+        k = a.shape[1]
+        if k < 2:
+            return np.zeros(a.shape[0])
+        return z * a.std(axis=1, ddof=1) / np.sqrt(k)
+
+    def latency_mean(self) -> np.ndarray:
+        return self.field("avg_latency_cycles").mean(axis=1)
+
+
+def _seed_list(seed: int, seeds) -> list[int] | None:
+    if seeds is None:
+        return None
+    if isinstance(seeds, (int, np.integer)):
+        return [seed + i for i in range(int(seeds))]
+    return [int(s) for s in seeds]
+
+
+def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
+                queue, seed, seed_list, tables, impl, scenario):
+    """Build (runner, broadcast initial state, (L[, S]) key grid) for one
+    sweep device program.  Key derivation: run (ℓ, s) of a multi-load
+    sweep uses `fold_in(PRNGKey(seeds[s] + 17), ℓ)` — every load point
+    gets its own fold (pre-PR-3 all points of a sweep shared one key and
+    were perfectly correlated), and every seed its own base key.  A
+    single-load sweep uses the unfolded base keys, so its seed-axis
+    slices stay bitwise-equal to plain `simulate(..., seed=seeds[s])`."""
+    t = tables or build_tables(g, seed)
+    ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
+    sl = seed_list if seed_list is not None else [seed]
+    L, S = len(loads), len(sl)
+    runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
+                         n_loads=L, n_seeds=S)
+    state = _init_state(ctx, 0.0, impl, slots)
+    if L > 1:
+        state = {
+            k: (v if k in ("dst_table", "di_fixed", "dst_live_fixed")
+                else jnp.broadcast_to(v, (L,) + v.shape))
+            for k, v in state.items()}
+    state = dict(state, load=jnp.asarray(loads, jnp.float32) if L > 1
+                 else jnp.float32(loads[0]))
+    def run_key(s, li):
+        base = jax.random.PRNGKey(s + 17)
+        return np.asarray(jax.random.fold_in(base, li) if L > 1 else base)
+
+    keys = np.stack([
+        np.stack([run_key(s, li) for s in sl])
+        for li in range(L)])                               # (L, S, 2)
+    if S == 1:
+        keys = keys[:, 0]
+    if L == 1:
+        keys = keys[0]
+    return runner, state, jnp.asarray(keys), t, ctx
 
 
 def simulate(g: LatticeGraph, pattern: str, load: float, *,
              slots: int = 512, warmup: int = 128, queue: int = 4,
              seed: int = 0, tables: SimTables | None = None,
-             impl: str = "batched") -> SimResult:
+             impl: str = "batched", scenario: Scenario | None = None,
+             fold: int | None = None) -> SimResult:
     """Run `slots` packet-slots (16 cycles each) at offered load `load`
     (phits/cycle/node) and measure accepted throughput + latency.
 
     impl="batched" is the port-batched single-pass simulator;
     impl="reference" is the per-port-sweep oracle it is validated against.
-    """
+    `scenario` injects faults / selects the routing policy (see
+    `repro.core.scenario.Scenario`); None is the pristine DOR baseline and
+    compiles to the exact pre-scenario program.  `fold` reproduces one
+    point of a multi-load sweep: `simulate_sweep(loads)[i]` equals
+    `simulate(loads[i], fold=i)`."""
     if impl not in ("batched", "reference"):
         raise ValueError(f"unknown simulator impl {impl!r}")
     t = tables or build_tables(g, seed)
-    ctx = _make_ctx(t, g, pattern, seed, queue)
+    ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
     runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
                          n_loads=1)
-    out = runner(_init_state(ctx, load, impl, slots),
-                 jax.random.PRNGKey(seed + 17))
+    key = jax.random.PRNGKey(seed + 17)
+    if fold is not None:
+        key = jax.random.fold_in(key, fold)
+    out = runner(_init_state(ctx, load, impl, slots), key)
     return _result(out, slots=slots, warmup=warmup, N=t.N)
 
 
 def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
                    slots: int = 512, warmup: int = 128, queue: int = 4,
-                   seed: int = 0, tables: SimTables | None = None,
-                   impl: str = "batched") -> list[SimResult]:
+                   seed: int = 0, seeds=None,
+                   tables: SimTables | None = None,
+                   impl: str = "batched", scenario: Scenario | None = None):
     """An entire offered-load curve (Figs. 5–8) as ONE device program: the
-    per-slot update is vmapped over the load axis, so the whole sweep JITs
-    once and runs without host round-trips between load points.  Each load
-    point uses the same key sequence as `simulate(..., seed=seed)`."""
+    per-slot update is vmapped over the load axis and — when `seeds` is
+    given — over a nested seed axis, so the whole sweep JITs once and runs
+    without host round-trips between runs.
+
+    seeds=None returns list[SimResult] (one per load; run ℓ uses
+    `fold_in(PRNGKey(seed+17), ℓ)`, so distinct sweep points are
+    decorrelated).  seeds=k (int) uses base seeds [seed, …, seed+k−1],
+    seeds=[…] uses them verbatim; both return a `SweepStats` whose
+    seed-axis slice s is bitwise-identical to the single-seed sweep with
+    seed=seeds[s].  A single-load, single-seed sweep delegates to
+    `simulate` (same key, pre-PR-3 compatible)."""
     loads = [float(l) for l in np.asarray(loads).ravel()]
-    t = tables or build_tables(g, seed)
-    if len(loads) == 1:
+    sl = _seed_list(seed, seeds)
+    if sl is None and len(loads) == 1:
         return [simulate(g, pattern, loads[0], slots=slots, warmup=warmup,
-                         queue=queue, seed=seed, tables=t, impl=impl)]
-    ctx = _make_ctx(t, g, pattern, seed, queue)
-    runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
-                         n_loads=len(loads))
-    state = _init_state(ctx, 0.0, impl, slots)
-    state = {
-        k: (v if k in ("dst_table", "di_fixed")
-            else jnp.broadcast_to(v, (len(loads),) + v.shape))
-        for k, v in state.items()}
-    state = dict(state, load=jnp.asarray(loads, jnp.float32))
-    out = runner(state, jax.random.PRNGKey(seed + 17))
-    out_np = {k: np.asarray(v) for k, v in out.items()
-              if k in ("delivered", "lat_sum", "injected")}
-    return [
-        _result({k: v[i] for k, v in out_np.items()},
-                slots=slots, warmup=warmup, N=t.N)
-        for i in range(len(loads))]
+                         queue=queue, seed=seed, tables=tables, impl=impl,
+                         scenario=scenario)]
+    runner, state, keys, t, _ = _sweep_plan(
+        g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
+        seed=seed, seed_list=sl, tables=tables, impl=impl,
+        scenario=scenario)
+    out = runner(state, keys)
+    L, S = len(loads), len(sl or [seed])
+    occ_key = "dst" if impl == "reference" else "birth"
+    keep = ("delivered", "lat_sum", "injected", "dropped", "link_use",
+            occ_key)
+    out_np = {k: np.asarray(v) for k, v in out.items() if k in keep}
+
+    def grid(v):
+        """Normalize a leading (L?, S?) batch to exactly (L, S, ...)."""
+        if L > 1 and S > 1:
+            return v
+        if L > 1:
+            return v[:, None]
+        if S > 1:
+            return v[None]
+        return v[None, None]
+
+    out_np = {k: grid(v) for k, v in out_np.items()}
+    res = [
+        [_result({k: v[li, si] for k, v in out_np.items()},
+                 slots=slots, warmup=warmup, N=t.N)
+         for si in range(S)]
+        for li in range(L)]
+    if sl is None:
+        return [row[0] for row in res]
+    return SweepStats(loads=tuple(loads), seeds=tuple(sl),
+                      results=tuple(tuple(row) for row in res))
 
 
 def simulate_load_sweep(g: LatticeGraph, pattern: str, loads, **kw):

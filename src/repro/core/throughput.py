@@ -77,12 +77,16 @@ _DEVICE_WALK_CACHE: dict = {}
 def channel_load_device(g: LatticeGraph, records: np.ndarray,
                         srcs: np.ndarray | None = None,
                         seed: int = 0) -> np.ndarray:
-    """`channel_load` with the DOR link-crossing walk on device: positions
-    advance dimension by dimension under `lax.fori_loop`s bounded by the
-    per-dimension record maxima, with canonical reduction + scatter-adds
-    into the (N, 2n) load table — one jitted program per (graph, bounds)
-    shape.  Semantically identical to the numpy walk (same loads for the
-    same records/sources); the numpy path remains as `channel_load`."""
+    """`channel_load` with the DOR link-crossing walk on device, as ONE
+    segment-sum.  DOR positions are closed-form — after finishing
+    dimensions d' < d the packet sits at src + Σ_{d'<d} r_{d'}·e_{d'} —
+    so every crossing event (pair, dim, step) is enumerated by
+    broadcasting, canonically reduced, flattened to a directional-link id
+    and accumulated with a single `jax.ops.segment_sum` over N·2n
+    segments.  No per-step scatter and no fori_loop (this closes the
+    ROADMAP "device walk is scatter-serialized on CPU" frontier); same
+    loads as the numpy walk for the same records/sources, which remains
+    as `channel_load`."""
     import jax
     import jax.numpy as jnp
 
@@ -101,27 +105,33 @@ def channel_load_device(g: LatticeGraph, records: np.ndarray,
         H = jnp.asarray(hermite)
         strides = jnp.asarray(g.strides.astype(np.int32))
         diag = tuple(int(hermite[i, i]) for i in range(n))
+        eye = np.eye(n, dtype=np.int32)
+        # completed-dimension mask: prefix_d = src + rec ⊙ lower[d]
+        lower = np.tril(np.ones((n, n), np.int32), -1)
 
         def walk(pos, rec):
-            load = jnp.zeros((N, 2 * n), jnp.float32)
+            ids, weights = [], []
             for dim in range(n):            # static, tiny
-                r = rec[:, dim]
+                b = bounds[dim]
+                if b == 0:
+                    continue
+                r = rec[:, dim]                             # (P,)
                 sgn = jnp.sign(r)
                 chan = 2 * dim + (r < 0)
-
-                def body(s, carry, dim=dim, r=r, sgn=sgn, chan=chan):
-                    load, pos = carry
-                    active = jnp.abs(r) > s
-                    w = canonical_reduce(pos, H, diag)
-                    idx = (w * strides).sum(axis=-1)
-                    load = load.at[idx, chan].add(
-                        active.astype(jnp.float32))
-                    pos = pos.at[:, dim].add(jnp.where(active, sgn, 0))
-                    return load, pos
-
-                load, pos = jax.lax.fori_loop(0, bounds[dim], body,
-                                              (load, pos))
-            return load * (N / P)
+                prefix = pos + rec * lower[dim]             # (P, n)
+                t = jnp.arange(b, dtype=jnp.int32)
+                steps = (prefix[:, None, :]
+                         + t[None, :, None] * sgn[:, None, None]
+                         * eye[dim][None, None, :])         # (P, b, n)
+                w = canonical_reduce(steps, H, diag)
+                idx = (w * strides).sum(axis=-1)            # (P, b)
+                ids.append((idx * (2 * n) + chan[:, None]).ravel())
+                weights.append(
+                    (t[None, :] < jnp.abs(r)[:, None]).ravel())
+            load = jax.ops.segment_sum(
+                jnp.concatenate(weights).astype(jnp.float32),
+                jnp.concatenate(ids), num_segments=N * 2 * n)
+            return load.reshape(N, 2 * n) * (N / P)
 
         _DEVICE_WALK_CACHE[key] = jax.jit(walk)
     out = _DEVICE_WALK_CACHE[key](
@@ -159,3 +169,54 @@ def measured_saturation_throughput(g: LatticeGraph, pairs: int = 20_000,
                                    backend: str = "auto") -> float:
     """1/max-link-load under engine-routed uniform traffic (phits/cyc/node)."""
     return float(1.0 / channel_load_uniform(g, pairs, seed, backend).max())
+
+
+# ---------------------------------------------------------------------------
+# degraded-graph (scenario) loads: fault-aware table rebuild
+# ---------------------------------------------------------------------------
+
+def fault_aware_channel_load(g: LatticeGraph, scenario,
+                             pairs: int = 20_000, seed: int = 0,
+                             tables=None) -> np.ndarray:
+    """Monte-Carlo channel loads on a *degraded* graph: `pairs` uniform
+    live-src → live-dst pairs are walked along the fault-aware BFS
+    next-hop tables (`routing.fault_aware_next_hop`), so the load
+    distribution — and the saturation bound 1/max derived from it —
+    reflects the faulted topology instead of the pristine minimal records.
+    Unreachable/self pairs are redrawn out of the sample; by construction
+    no dead channel is ever crossed (asserted).  Scaled to one packet per
+    live node, matching the `channel_load` convention."""
+    from .routing import fault_aware_next_hop
+    link_ok = scenario.link_ok(g)
+    node_ok = scenario.node_ok(g)
+    dist, next_hop = (fault_aware_next_hop(g, link_ok, node_ok)
+                      if tables is None else tables)
+    live = np.flatnonzero(node_ok)
+    if live.size < 2:
+        raise ValueError("scenario leaves fewer than 2 live nodes")
+    rng = np.random.default_rng(seed)
+    srcs = live[rng.integers(0, live.size, pairs)]
+    dsts = live[rng.integers(0, live.size, pairs)]
+    use = dist[srcs, dsts] > 0                   # reachable, not self
+    pos, dst = srcs[use].copy(), dsts[use]
+    n_used = pos.size
+    load = np.zeros((g.order, 2 * g.n), dtype=np.float64)
+    nbr = g.neighbor_indices
+    while pos.size:
+        p = next_hop[pos, dst]
+        assert (p >= 0).all() and link_ok[pos, p].all(), \
+            "fault-aware walk stepped onto a dead channel"
+        np.add.at(load, (pos, p), 1.0)
+        pos = nbr[pos, p]
+        alive = pos != dst
+        pos, dst = pos[alive], dst[alive]
+    return load * (live.size / max(n_used, 1))
+
+
+def fault_aware_saturation_throughput(g: LatticeGraph, scenario,
+                                      pairs: int = 20_000,
+                                      seed: int = 0) -> float:
+    """1/max-link-load of the degraded graph under uniform live-pair
+    traffic routed around the faults (phits/cycle/node)."""
+    return float(
+        1.0 / fault_aware_channel_load(g, scenario, pairs, seed).max())

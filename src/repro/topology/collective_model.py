@@ -90,23 +90,35 @@ class PodTopologyReport:
     allreduce_256MB_ms: float
     alltoall_256MB_ms: float
     routed_capacity: float | None = None   # measured 1/max-link-load
+    # degraded-graph capacity under a fault scenario (1/max-link-load with
+    # traffic rerouted around the faults) — None when no scenario given
+    faulted_capacity: float | None = None
 
 
 def analyze_pod(name: str, g: LatticeGraph,
                 torus_sides: tuple[int, ...] | None = None, *,
                 measure_routed: bool = False,
                 routed_pairs: int = 20_000,
-                routed_backend: str = "auto") -> PodTopologyReport:
+                routed_backend: str = "auto",
+                scenario=None) -> PodTopologyReport:
     """Price a pod topology.  With `measure_routed=True` the analytic
     capacity bound is accompanied by an empirical saturation throughput:
     `routed_pairs` uniform pairs routed through the batched engine and
     reduced to 1/max directional-link load, with both the routing and the
     DOR link-crossing walk on device (`routed_backend="numpy"` forces the
-    host oracle end-to-end)."""
+    host oracle end-to-end).  With a `repro.core.scenario.Scenario` the
+    report also carries the degraded capacity: uniform live-pair traffic
+    walked over fault-aware rebuilt routing tables — how much all-to-all
+    headroom the pod keeps after losing links or chips."""
     sym = torus_sides is None
     test_bytes = 256 * 2**20
     cap = (symmetric_throughput_bound(g) if sym
            else mixed_torus_throughput_bound(*torus_sides))
+    faulted = None
+    if scenario is not None and not scenario.is_trivial:
+        from repro.core.throughput import fault_aware_saturation_throughput
+        faulted = fault_aware_saturation_throughput(g, scenario,
+                                                    pairs=routed_pairs)
     return PodTopologyReport(
         name=name,
         chips=g.order,
@@ -119,7 +131,8 @@ def analyze_pod(name: str, g: LatticeGraph,
             g, test_bytes, edge_symmetric=sym, torus_sides=torus_sides),
         routed_capacity=(measured_saturation_throughput(
             g, routed_pairs, backend=routed_backend)
-            if measure_routed else None))
+            if measure_routed else None),
+        faulted_capacity=faulted)
 
 
 def bisection_links(g: LatticeGraph) -> int:

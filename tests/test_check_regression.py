@@ -1,0 +1,146 @@
+"""Tests for the bench-regression gate (`benchmarks.check_regression`) —
+the gate that guards the committed perf numbers is itself gated: an
+injected regression must fail, a one-off load spike must be tolerated by
+the best-of-runs merge, and malformed inputs must error cleanly.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from benchmarks.check_regression import _load, compare, main, merge_best  # noqa: E402
+
+
+def doc(**metrics_by_row):
+    """{'routing/x': {'engine_Mrec_s': 50}, ...} → a --json document."""
+    return {"rows": [
+        {"name": name, "us_per_call": 1.0, "derived": dict(derived)}
+        for name, derived in metrics_by_row.items()]}
+
+
+BASE = doc(**{
+    "routing/FCC(8)/B=100000": {"engine_Mrec_s": 50.0, "speedup": 60.0},
+    "sim/batched/N=512": {"slots_per_s": 100.0},
+    "sim/sweep3/N=512": {"sweep_loadpoints_per_s": 2.0},
+    "routing/FCC(8)/B=1000": {"engine_Mrec_s": 3.0},
+})
+
+
+def test_injected_regression_fails():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][1]["derived"]["slots_per_s"] = 40.0      # 2.5× slowdown
+    failures, _ = compare(BASE, cur, tolerance=0.30)
+    assert len(failures) == 1 and "slots_per_s" in failures[0]
+
+
+def test_within_tolerance_passes():
+    cur = json.loads(json.dumps(BASE))
+    for row in cur["rows"]:
+        for k in row["derived"]:
+            row["derived"][k] *= 0.75                    # 25% < 30%
+    failures, notes = compare(BASE, cur, tolerance=0.30)
+    assert failures == []
+    assert any(n.startswith("ok ") for n in notes)
+
+
+def test_speedup_ratios_and_micro_rows_not_gated():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["derived"]["speedup"] = 1.0           # ratio: ungated
+    cur["rows"][3]["derived"]["engine_Mrec_s"] = 0.1     # B=1000: ungated
+    failures, _ = compare(BASE, cur, tolerance=0.30)
+    assert failures == []
+
+
+def test_one_off_spike_tolerated_by_merge_best():
+    """A load spike slows ONE run; per-metric best-of-runs recovers."""
+    spiked = json.loads(json.dumps(BASE))
+    spiked["rows"][1]["derived"]["slots_per_s"] = 30.0
+    clean = json.loads(json.dumps(BASE))
+    merged = merge_best([spiked, clean])
+    failures, _ = compare(BASE, merged, tolerance=0.30)
+    assert failures == []
+    # but a regression present in BOTH runs still fails
+    both = merge_best([spiked, json.loads(json.dumps(spiked))])
+    failures, _ = compare(BASE, both, tolerance=0.30)
+    assert len(failures) == 1
+
+
+def test_rows_only_on_one_side_never_fail():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"] = cur["rows"][:2] + [
+        {"name": "scenario/new", "us_per_call": 1.0,
+         "derived": {"slots_per_s": 1.0}}]
+    failures, notes = compare(BASE, cur, tolerance=0.30)
+    assert failures == []
+    assert any("missing from current" in n for n in notes)
+    assert any("new row" in n for n in notes)
+
+
+# ---------------------------------------------------------------------------
+# CLI robustness
+# ---------------------------------------------------------------------------
+
+def run_main(argv):
+    old = sys.argv
+    sys.argv = ["check_regression"] + argv
+    try:
+        main()
+    finally:
+        sys.argv = old
+
+
+def write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_main_fails_exit1_on_regression(tmp_path, capsys):
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["derived"]["engine_Mrec_s"] = 1.0
+    b = write(tmp_path, "base.json", json.dumps(BASE))
+    c = write(tmp_path, "cur.json", json.dumps(cur))
+    with pytest.raises(SystemExit) as ei:
+        run_main(["--baseline", b, "--current", c])
+    assert ei.value.code == 1
+    assert "BENCH REGRESSION" in capsys.readouterr().err
+
+
+def test_main_passes_exit0_on_identical(tmp_path, capsys):
+    b = write(tmp_path, "base.json", json.dumps(BASE))
+    c = write(tmp_path, "cur.json", json.dumps(BASE))
+    run_main(["--baseline", b, "--current", c])
+    assert "bench-check passed" in capsys.readouterr().out
+
+
+def test_malformed_json_errors_cleanly(tmp_path, capsys):
+    """Infrastructure failures exit 2 — distinct from exit 1, which means
+    a genuine regression — with a one-line message, not a traceback."""
+    bad = write(tmp_path, "bad.json", "{not json!!")
+    good = write(tmp_path, "good.json", json.dumps(BASE))
+    for argv in (["--baseline", bad, "--current", good],
+                 ["--baseline", good, "--current", bad]):
+        with pytest.raises(SystemExit) as ei:
+            run_main(argv)
+        assert ei.value.code == 2
+        assert "invalid JSON" in capsys.readouterr().err
+
+
+def test_shapeless_document_errors_cleanly(tmp_path, capsys):
+    norows = write(tmp_path, "norows.json", json.dumps({"meta": {}}))
+    with pytest.raises(SystemExit) as ei:
+        _load(norows)
+    assert ei.value.code == 2
+    assert "no 'rows'" in capsys.readouterr().err
+
+
+def test_missing_file_errors_cleanly(tmp_path, capsys):
+    good = write(tmp_path, "good.json", json.dumps(BASE))
+    with pytest.raises(SystemExit) as ei:
+        run_main(["--baseline", str(tmp_path / "nope.json"),
+                  "--current", good])
+    assert ei.value.code == 2
+    assert "cannot read" in capsys.readouterr().err

@@ -1,0 +1,175 @@
+"""Tests for the offline hypothesis shim itself (`tests/_propcheck.py`).
+
+The shim guards every property-test module in network-less CI, so it is
+itself gated here: seeded determinism, the ≤50-example cap, `assume()`
+semantics, `.filter` retry bounds, and the falsifying-example report.
+The shim module is exercised DIRECTLY (not through the installed
+`hypothesis` alias), so these tests are meaningful whether or not real
+hypothesis is importable in the environment.
+"""
+import numpy as np
+import pytest
+
+import _propcheck as pc
+
+
+def collect(strategy, n=20, seed=123):
+    rng = np.random.default_rng(seed)
+    return [strategy.example(rng) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# strategies: determinism + domains
+# ---------------------------------------------------------------------------
+
+def test_strategies_are_seed_deterministic():
+    strat = pc.tuples(pc.integers(0, 100), pc.booleans(),
+                      pc.sampled_from(["a", "b", "c"]),
+                      pc.lists(pc.integers(-5, 5), min_size=1, max_size=4))
+    assert collect(strat) == collect(strat)
+    assert collect(strat, seed=7) != collect(strat, seed=8)
+
+
+def test_strategy_domains():
+    for x in collect(pc.integers(-3, 3), 50):
+        assert -3 <= x <= 3 and isinstance(x, int)
+    for x in collect(pc.floats(0.0, 1.0), 50):
+        assert 0.0 <= x <= 1.0
+    for x in collect(pc.sets(pc.integers(0, 9), min_size=2, max_size=4), 20):
+        assert isinstance(x, set) and 2 <= len(x) <= 4
+    assert collect(pc.just(42), 5) == [42] * 5
+    for x in collect(pc.one_of(pc.just("l"), pc.just("r")), 30):
+        assert x in ("l", "r")
+
+
+def test_map_and_filter():
+    doubled = pc.integers(1, 10).map(lambda x: 2 * x)
+    assert all(x % 2 == 0 for x in collect(doubled, 30))
+    odd = pc.integers(0, 100).filter(lambda x: x % 2 == 1)
+    assert all(x % 2 == 1 for x in collect(odd, 30))
+
+
+def test_filter_retry_budget_exhausts_cleanly():
+    impossible = pc.integers(0, 10).filter(lambda x: x > 10)
+    with pytest.raises(RuntimeError, match="filter"):
+        collect(impossible, 1)
+
+
+def test_sampled_from_rejects_empty():
+    with pytest.raises(ValueError):
+        pc.sampled_from([])
+
+
+# ---------------------------------------------------------------------------
+# @given: run counts, caps, determinism
+# ---------------------------------------------------------------------------
+
+def test_given_runs_default_example_count():
+    calls = []
+
+    @pc.given(pc.integers(0, 1000))
+    def prop(x):
+        calls.append(x)
+
+    prop()
+    assert len(calls) == pc.DEFAULT_EXAMPLES
+
+
+def test_given_is_deterministic_across_invocations():
+    """The per-test rng is seeded from the test's qualified name: two
+    invocations see the same example sequence."""
+    runs = []
+
+    @pc.given(pc.integers(0, 10**6))
+    def prop(x):
+        runs.append(x)
+
+    prop()
+    first = list(runs)
+    runs.clear()
+    prop()
+    assert runs == first
+
+
+def test_settings_honoured_below_cap():
+    calls = []
+
+    @pc.settings(max_examples=7)
+    @pc.given(pc.integers())
+    def prop(x):
+        calls.append(x)
+
+    prop()
+    assert len(calls) == 7
+
+
+def test_settings_capped_at_50():
+    """Real hypothesis would run 500; the offline shim caps at 50 to keep
+    network-less CI fast."""
+    calls = []
+
+    @pc.settings(max_examples=500)
+    @pc.given(pc.integers())
+    def prop(x):
+        calls.append(x)
+
+    prop()
+    assert len(calls) == pc.DEFAULT_EXAMPLES
+
+
+def test_failure_propagates_and_reports(capsys):
+    @pc.given(pc.integers(5, 5))
+    def prop(x):
+        assert x != 5
+
+    with pytest.raises(AssertionError):
+        prop()
+    err = capsys.readouterr().err
+    assert "falsifying example" in err and "prop" in err
+
+
+# ---------------------------------------------------------------------------
+# assume()
+# ---------------------------------------------------------------------------
+
+def test_assume_skips_and_replaces_examples():
+    """assume(False) discards the example; the shim still runs the full
+    example budget with satisfying draws."""
+    seen = []
+
+    @pc.given(pc.integers(0, 9))
+    def prop(x):
+        pc.assume(x % 2 == 0)
+        seen.append(x)
+
+    prop()
+    assert len(seen) == pc.DEFAULT_EXAMPLES
+    assert all(x % 2 == 0 for x in seen)
+
+
+def test_assume_rejecting_everything_errors():
+    @pc.given(pc.integers(0, 9))
+    def prop(x):
+        pc.assume(False)
+
+    with pytest.raises(RuntimeError, match="assume"):
+        prop()
+
+
+def test_install_is_idempotent_once_registered():
+    """conftest already ran install() at session start; a second call must
+    be a no-op (`hypothesis` — real or shim — is importable and wins)."""
+    import hypothesis
+    was_shim = getattr(hypothesis, "__propcheck__", False)
+    assert pc.install() is False
+    import hypothesis as again
+    assert getattr(again, "__propcheck__", False) == was_shim
+
+
+def test_build_modules_exposes_the_api_surface():
+    hyp, st_mod = pc.build_modules()
+    assert hyp.given is pc.given and hyp.assume is pc.assume
+    assert hyp.settings is pc.settings and hyp.strategies is st_mod
+    for name in ("integers", "booleans", "floats", "sampled_from", "lists",
+                 "sets", "tuples", "just", "one_of"):
+        assert callable(getattr(st_mod, name)), name

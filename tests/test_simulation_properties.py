@@ -117,15 +117,52 @@ def test_batched_peak_matches_reference(name, seed, pattern):
 @settings(max_examples=4)
 @given(name=st.sampled_from(sorted(_GRAPHS)), seed=st.integers(0, 3))
 def test_sweep_equals_individual_runs(name, seed):
-    """One vmapped sweep program == per-load simulate() calls (same keys)."""
+    """One vmapped sweep program == per-load simulate() calls.  Sweep
+    point ℓ folds the base key by its load index (PR 3), so the matching
+    single run is simulate(..., fold=ℓ)."""
     g = _GRAPHS[name]
     loads = [0.2, 0.5, 0.9]
     res = simulate_sweep(g, "uniform", loads, slots=SLOTS, warmup=WARMUP,
                          seed=seed, tables=_TABLES[name])
-    for load, r in zip(loads, res):
-        single = _run(name, load, seed)
+    for i, (load, r) in enumerate(zip(loads, res)):
+        single = simulate(g, "uniform", load, slots=SLOTS, warmup=WARMUP,
+                          seed=seed, tables=_TABLES[name], fold=i)
         assert r.delivered == single.delivered, (load, r, single)
         assert r.injected == single.injected
+
+
+@settings(max_examples=3)
+@given(name=st.sampled_from(sorted(_GRAPHS)), seed=st.integers(0, 3),
+       load=st.sampled_from([0.3, 0.7]))
+def test_sweep_points_are_decorrelated(name, seed, load):
+    """Regression for the ROADMAP identical-seed-vmap note: pre-PR-3 every
+    run of a sweep shared one PRNG key, so two sweep points at the SAME
+    offered load were perfectly correlated (bitwise-equal counters).  With
+    per-(load-index) key folds they must differ."""
+    g = _GRAPHS[name]
+    a, b = simulate_sweep(g, "uniform", [load, load], slots=SLOTS,
+                          warmup=WARMUP, seed=seed, tables=_TABLES[name])
+    assert (a.delivered, a.injected) != (b.delivered, b.injected), (a, b)
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)),
+       load=st.sampled_from([0.3, 0.8]),
+       seed=st.integers(0, 3),
+       faults=st.integers(1, 4),
+       policy=st.sampled_from(["dor", "adaptive", "escape"]),
+       impl=st.sampled_from(["batched", "reference"]))
+def test_scenario_conservation_and_dead_link_audit(name, load, seed, faults,
+                                                   policy, impl):
+    """Random fault scenarios: conservation is EXACT (delivered + in-flight
+    + dropped == injected) and no packet ever crosses a dead channel."""
+    from repro.core import Scenario
+    g = _GRAPHS[name]
+    scen = Scenario.random_link_faults(g, faults, seed=seed, policy=policy)
+    r = simulate(g, "uniform", load, slots=SLOTS, warmup=0, seed=seed,
+                 tables=_TABLES[name], impl=impl, scenario=scen)
+    assert r.delivered + r.in_flight + r.dropped == r.injected, r
+    assert r.link_use[~scen.link_ok(g)].sum() == 0
 
 
 @settings(max_examples=6)
