@@ -37,10 +37,12 @@ bench-routing:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only routing
 
 # fast sanity pass CI runs on every matrix entry: cheap analytic sections
-# + the quick simulator benchmark; exercises the whole bench plumbing
+# + the quick simulator & scenario-engine benchmarks (covers the fused
+# Pallas row, the K-scenario one-compile sweep and the device fault-BFS
+# sweep); exercises the whole bench plumbing
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
-	    --only table1,table2,throughput,sim
+	    --only table1,table2,throughput,sim,scenarios
 
 # perf-regression gate: measure the gated sections twice (quick mode,
 # JSON; per-metric best-of — a load spike slows one run, a regression

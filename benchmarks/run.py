@@ -44,6 +44,12 @@ def main() -> None:
                     help="also write rows as JSON (bench-regression gate)")
     args = ap.parse_args()
     names = [s for s in args.only.split(",") if s] or list(SECTIONS)
+    # validate section names upfront: a typo must be a clear one-line
+    # error, not a generic "section failed" from the broad except below
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        sys.exit(f"unknown section(s): {', '.join(unknown)}; "
+                 f"choose from: {', '.join(SECTIONS)}")
     header()
     failed = []
     for name in names:

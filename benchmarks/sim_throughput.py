@@ -42,20 +42,25 @@ def main(quick: bool = False) -> None:
         return simulate(g, "uniform", load, slots=slots, warmup=warmup,
                         seed=1, tables=t, impl=impl)
 
-    # compile both before timing, then alternate (fair under machine noise)
-    run("batched", 0.5)
-    run("reference", 0.5)
-    best = {"batched": float("inf"), "reference": float("inf")}
+    # compile all three before timing, then alternate (fair under machine
+    # noise); "fused" is the Pallas kernel path — interpret mode off-TPU,
+    # so this row records the cost of the kernel formulation itself
+    impls = ("batched", "fused", "reference")
+    for impl in impls:
+        run(impl, 0.5)
+    best = {impl: float("inf") for impl in impls}
     for _ in range(REPS):
-        for impl in ("batched", "reference"):
+        for impl in impls:
             t0 = time.perf_counter()
             run(impl)
             best[impl] = min(best[impl], time.perf_counter() - t0)
-    for impl in ("batched", "reference"):
+    for impl in impls:
         emit(f"sim/{impl}/N={g.order}", best[impl] * 1e6,
              f"slots_per_s={slots / best[impl]:.1f};slots={slots}")
     emit(f"sim/speedup/N={g.order}", 0.0,
          f"speedup={best['reference'] / best['batched']:.2f}x")
+    emit(f"sim/fused_vs_batched/N={g.order}", 0.0,
+         f"ratio={best['batched'] / best['fused']:.2f}x")
 
     # whole load curve as one vmapped device program
     simulate_sweep(g, "uniform", loads, slots=slots, warmup=warmup, seed=1,

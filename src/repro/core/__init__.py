@@ -10,11 +10,13 @@ from .crystals import (BCC, FCC, PC, RTT, FourD_BCC, FourD_FCC, Lip, Torus,
 from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
                         faulted_average_distance, faulted_diameter,
                         faulted_distance_matrix, faulted_distance_profile,
-                        fcc_average_distance, fcc_diameter,
-                        mixed_torus_diameter, pc_average_distance,
-                        pc_diameter, summarize, torus_average_distance)
+                        faulted_distance_sweep, fcc_average_distance,
+                        fcc_diameter, mixed_torus_diameter,
+                        pc_average_distance, pc_diameter, summarize,
+                        torus_average_distance)
 from .lattice import LatticeGraph
-from .routing import (HierarchicalRouter, fault_aware_next_hop, make_router,
+from .routing import (HierarchicalRouter, fault_aware_next_hop,
+                      fault_aware_next_hop_device, make_router,
                       minimal_record_bruteforce, norm1, route_bcc, route_fcc,
                       route_ring, route_rtt, route_torus)
 from .scenario import Scenario, scenario_connected
@@ -57,7 +59,9 @@ __all__ = [
     "channel_load", "channel_load_device", "channel_load_uniform",
     "measured_saturation_throughput",
     "Scenario", "scenario_connected", "fault_aware_next_hop",
+    "fault_aware_next_hop_device",
     "fault_aware_channel_load", "fault_aware_saturation_throughput",
     "faulted_distance_matrix", "faulted_distance_profile",
+    "faulted_distance_sweep",
     "faulted_average_distance", "faulted_diameter",
 ]

@@ -110,15 +110,81 @@ def routed_average_distance(g: LatticeGraph, backend: str = "auto",
 # degraded-graph (scenario) distance profiles: fault-aware table rebuild
 # ---------------------------------------------------------------------------
 
-def faulted_distance_matrix(g: LatticeGraph, scenario) -> np.ndarray:
+def faulted_distance_matrix(g: LatticeGraph, scenario,
+                            backend: str = "auto") -> np.ndarray:
     """(N, N) live-path distances of the degraded graph (BFS rebuild via
     `routing.fault_aware_next_hop`; −1 = unreachable or dead endpoint).
     Faults break vertex transitivity, so unlike the pristine case a single
-    origin profile is not enough — the whole matrix is rebuilt."""
-    from .routing import fault_aware_next_hop
-    dist, _ = fault_aware_next_hop(g, scenario.link_ok(g),
-                                   scenario.node_ok(g))
-    return dist
+    origin profile is not enough — the whole matrix is rebuilt.
+
+    backend: "device" uses the compiled multi-source min-plus BFS
+    (`routing.fault_aware_next_hop_device` — same tables, scales past pod
+    sizes), "host" the per-destination numpy BFS loop, "auto" the device
+    path when JAX is importable."""
+    from .routing import fault_aware_next_hop, fault_aware_next_hop_device
+    link_ok, node_ok = scenario.link_ok(g), scenario.node_ok(g)
+    if backend not in ("auto", "device", "host"):
+        raise ValueError(f"unknown BFS backend {backend!r}")
+    if backend != "host":
+        try:
+            return fault_aware_next_hop_device(g, link_ok, node_ok)[0]
+        except ImportError:
+            if backend == "device":
+                raise
+    return fault_aware_next_hop(g, link_ok, node_ok)[0]
+
+
+def faulted_distance_sweep(g: LatticeGraph, scenarios) -> dict:
+    """Degraded-distance statistics for K fault patterns as ONE compiled
+    device program: the min-plus BFS relaxation runs under `lax.map` over
+    the stacked liveness masks (sequential over scenarios, so the (N, N)
+    distance front is resident once, not K times) and only the per-
+    scenario reductions come back to host.
+
+    Returns {"average_distance": (K,), "diameter": (K,),
+    "reachable_pairs": (K,)} over ordered live reachable pairs (the
+    `faulted_average_distance` / `faulted_diameter` conventions, with
+    one batched-sweep deviation: a lane with ZERO reachable pairs —
+    a totally disconnected fault pattern — reports
+    average_distance=NaN / diameter=0 / reachable_pairs=0 instead of
+    raising like `faulted_average_distance`, so one broken lane cannot
+    kill the other K−1; check `reachable_pairs` or NaN before ranking).  This is
+    the degraded-topology sweep the host N×BFS loop cannot sustain: at
+    N=4096 one host rebuild is minutes of Python, while the whole K-
+    scenario sweep here is one device program (`make bench` row
+    `scenarios/bfs_sweep*`)."""
+    import jax
+    import jax.numpy as jnp
+
+    from .routing import _get_fault_bfs            # shared relaxation
+
+    scenarios = list(scenarios)
+    N, P = g.order, 2 * g.n
+    nbr = g.neighbor_indices.astype(np.int32)
+    link = np.stack([s.link_ok(g) for s in scenarios])
+    node = np.stack([s.node_ok(g) for s in scenarios])
+    eff = link & node[:, :, None] & node[:, nbr]
+    relax = _get_fault_bfs(N, P, with_next_hop=False)
+    nbr_j = jnp.asarray(nbr)
+
+    def stats(masks):
+        eff_ok, link_ok, node_ok = masks
+        dist = relax(nbr_j, eff_ok, link_ok, node_ok)
+        reach = dist > 0
+        pairs = reach.sum()
+        d = jnp.where(reach, dist, 0)
+        # float32 row-sum accumulation: exact for any realistic diameter
+        # (row sums < 2^24), and the final mean is a float anyway
+        total = d.sum(axis=0, dtype=jnp.float32).sum(dtype=jnp.float32)
+        avg = jnp.where(pairs > 0, total / jnp.maximum(pairs, 1),
+                        jnp.float32(jnp.nan))   # disconnected lane → NaN
+        return (avg, d.max(), pairs)
+
+    avg, diam, pairs = jax.lax.map(
+        stats, (jnp.asarray(eff), jnp.asarray(link), jnp.asarray(node)))
+    return {"average_distance": np.asarray(avg, np.float64),
+            "diameter": np.asarray(diam, np.int64),
+            "reachable_pairs": np.asarray(pairs, np.int64)}
 
 
 def faulted_distance_profile(g: LatticeGraph, scenario,

@@ -18,21 +18,38 @@ Router model (simplifications vs INSEE noted in DESIGN.md §10):
     in-transit traffic beats injection (the BlueGene congestion-control
     behaviour noted in §6.2).
 
-Two implementations of the slot update share the state layout:
+Three implementations of the slot update share the state layout:
 
   * ``impl="batched"`` (default) — all per-link quantities (winners,
     records-after-hop, delivery flags, bubble requirements) are computed
     in one vectorised pass over all 2n ports, with no Python loop over
-    ports and no scatters; only the same-slot space-reuse fixed point (a
-    packet moving into a slot vacated in this very slot) runs as a cheap
-    `lax.scan` over the 2n port levels on an (N, 2n) carry, reproducing
-    the reference sweep's acceptance exactly.  A whole run is one
-    `lax.scan` over slots, and a whole load curve is one vmapped device
-    program (`simulate_sweep`).
+    ports and no scatters; the per-(node, out-port) winner is a segmented
+    min over N·2nQ encoded priority keys (segment id = node·2n +
+    requested port — realized as 2n fused masked column-mins, so no
+    (N, 2nQ, 2n) candidate tensor is ever materialized); only the
+    same-slot space-reuse fixed point (a packet moving into a slot
+    vacated in this very slot) runs as a cheap `lax.scan` over the 2n
+    port levels on an (N, 2n) carry, reproducing the reference sweep's
+    acceptance exactly.  A whole run is one `lax.scan` over slots, and a
+    whole load curve is one vmapped device program (`simulate_sweep`).
+  * ``impl="fused"`` — the same slot update as a Pallas kernel
+    (`repro.kernels.sim_step`): winner segmented-min, acceptance fixed
+    point and the one-hot clears/transit/injection writes fused into ONE
+    kernel pass over VMEM node tiles.  Off-TPU it runs in interpret mode
+    (this container is CPU-only; TPU is the target) and is bitwise-equal
+    to ``batched`` given the same pre-drawn traffic.  Real-TPU lowering
+    is still unvalidated — see the caveat in `kernels/sim_step.py`.
   * ``impl="reference"`` — the pre-batching per-port Python loop, kept as
-    the semantic oracle: tests validate the batched implementation
+    the semantic oracle: tests validate both other implementations
     statistically against it (same load curves within stochastic
     tolerance), and `benchmarks/sim_throughput.py` measures the speedup.
+
+Scenario fault masks are TRACED inputs of the compiled batched/fused
+programs (the pristine scenario keeps its own static specialization, so
+baselines stay bitwise-identical): K fault patterns of one structure
+(policy × dead-node-ness) share a single trace/compile, and
+`simulate_scenario_sweep` vmaps the whole scenario axis through one
+device program (see docs/simulator.md).
 
 Arbitration detail: the reference breaks queue-slot contention for an
 output link with i.i.d. uniform scores drawn inside the slot update; the
@@ -256,9 +273,11 @@ def _make_traffic(ctx, state, key, slots: int):
         di = state["di_fixed"][None, :]                    # (1, N), broadcast
     elif not ctx["trivial"] and ctx["has_dead_nodes"]:
         # uniform over *live* destinations: draw the node, reduce the
-        # delta on device (self-draws carry di == 0 and back-log)
-        dstn = ctx["live_tbl"][
-            jax.random.randint(kd, (slots, N), 0, ctx["n_live"])]
+        # delta on device (self-draws carry di == 0 and back-log).  The
+        # live table is a traced state input padded to N entries; the
+        # traced n_live bound keeps the draw exactly uniform over them.
+        dstn = state["live_tbl"][
+            jax.random.randint(kd, (slots, N), 0, state["n_live"])]
         di = _delta_idx(ctx["labels"][None, :, :], ctx["labels"][dstn],
                         ctx["hermite"], ctx["strides"])
     else:
@@ -268,7 +287,7 @@ def _make_traffic(ctx, state, key, slots: int):
         # DOR ignores liveness, so the precomputed port table stays valid
         p = ctx["port_ab"][di, coin]
     else:
-        p = policy_ports(r, ctx["link_ok"][None, :, :],
+        p = policy_ports(r, state["link_ok"][None, :, :],
                          ctx["policy"]).astype(jnp.int8)
     return dict(
         u=u,
@@ -302,8 +321,10 @@ def _make_slot_step_batched(ctx, warmup: int):
     (XLA CPU serializes scatter updates; everything here is gathers,
     one-hot masks and small reductions):
 
-      * winner per (node, out-port): min-reduce of priority keys over a
-        (N, 2nQ, 2n) one-hot candidate tensor — 8-bit seeded threefry
+      * winner per (node, out-port): a segmented min over the N·2nQ
+        encoded priority keys (segment id = node·2n + requested port,
+        realized as 2n fused masked column-mins — nothing bigger than
+        O(N·2nQ) is ever materialized) — 8-bit seeded threefry
         priorities pre-drawn for the whole run (`_make_traffic`) plus a
         per-slot rotating tie-break, standing in for the reference's
         i.i.d. uniform arbitration scores,
@@ -320,12 +341,18 @@ def _make_slot_step_batched(ctx, warmup: int):
     are excluded from the winner min-reduce (`link_ok` where-mask), the
     carried port comes from `policy_ports`, and dropped/audit counters are
     extra fused reductions — the trivial scenario compiles to the exact
-    pre-scenario program."""
+    pre-scenario program.  The masks are TRACED inputs (they travel in the
+    state, like `di_fixed`), so one compiled runner serves every fault
+    pattern of the same structure (policy × dead-node-ness) and
+    `simulate_scenario_sweep` can vmap a whole scenario axis through it.
+
+    NOTE: `kernels.sim_step._slot_step_kernel` mirrors this update phase
+    for phase and must stay bitwise-equal — change both together
+    (tests/test_fused_impl.py enforces the parity in CI)."""
     n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
     nbr = ctx["nbr"]
     rec_dtype = ctx["rec_dtype"]
     trivial = ctx["trivial"]
-    link_ok = None if trivial else ctx["link_ok"]
     PQ = P * Q
     # arbitration key = prio(8 bit)·PQ + rot(<PQ): int16 fits exactly up
     # to PQ=127 (256·PQ − 1 < 0x7FFF); wider queues fall back to int32
@@ -359,23 +386,33 @@ def _make_slot_step_batched(ctx, warmup: int):
         # is decided by the record reaching zero — so the batched state
         # carries no dst array at all.
         rec, birth, port = state["rec"], state["birth"], state["port"]
+        link_ok = None if trivial else state["link_ok"]
         slot = state["slot"]
         occ = birth >= 0                                   # (N, P, Q)
         port = jnp.where(occ, port, NO_PORT)
         port_flat = port.reshape(N, PQ)
 
-        # ---- winner per (node, out-port): one-hot min-reduce ----
+        # ---- winner per (node, out-port): segmented min over encoded keys --
+        # segment id = node·2n + requested_port, key = prio·PQ + rot —
         # pre-drawn 8-bit threefry priorities (tr["prio"]) + a per-slot
         # rotating tie-break keep the key narrow; priority collisions land
         # on the rotating tie-break, so they carry no systematic
-        # queue-slot bias.
+        # queue-slot bias.  The segmented reduction is realized as one
+        # fused masked column-min per port bucket (2n static buckets)
+        # rather than jax.ops.segment_min, whose scatter-min lowering XLA
+        # CPU serializes (~17× slower at N=4096); either way every
+        # per-slot intermediate stays O(N·2nQ) — the (N, 2nQ, 2n) one-hot
+        # candidate tensor this replaces was the largest tensor of the
+        # whole slot program.  Winners are bitwise-identical to the
+        # one-hot min-reduce: same keys, same min, per segment
+        # (tests/test_sim_memory.py pins the absence of the blowup).
         rot = (pq32[None, :] + jnp.int32(slot)) % PQ       # tie-break perm
         enc = tr["prio"].astype(key_dtype) * key_dtype(PQ) \
             + rot.astype(key_dtype)                        # (N, PQ) < BIG
-        cand = jnp.where(port_flat[:, :, None] == ports8[None, None, :],
-                         enc[:, :, None], BIG)             # (N, PQ, P)
-        w_enc = cand.min(axis=1)                           # (N, P)
-        if not trivial:
+        w_enc = jnp.stack(
+            [jnp.min(jnp.where(port_flat == ports8[p], enc, BIG), axis=1)
+             for p in range(P)], axis=1)                   # (N, P)
+        if link_ok is not None:
             # a dead channel moves nothing: mask its winner away (packets
             # requesting it — DOR through a fault — block in place)
             w_enc = jnp.where(link_ok, w_enc, BIG)
@@ -457,7 +494,7 @@ def _make_slot_step_batched(ctx, warmup: int):
         # traffic has priority; entering a ring costs 2 free slots)
         want_new = tr["u"] < state["load"]
         if not trivial:
-            want_new = want_new & ctx["inj_ok"]
+            want_new = want_new & state["inj_ok"]
         want = want_new | (state["backlog"] > 0)
         depcnt = dep_slot.reshape(N, P, Q).sum(axis=2)
         freeq_post = free0 + depcnt - acc                  # after transit
@@ -501,6 +538,52 @@ def _make_slot_step_batched(ctx, warmup: int):
             updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
         return _finish_slot(state, warmup, delivered, lat_sum, can, drop,
                             **updates), None
+
+    return slot_step
+
+
+def _make_slot_step_fused(ctx, warmup: int):
+    """The batched slot update routed through the Pallas kernel
+    (`repro.kernels.sim_step.fused_slot_step`): winner segmented-min +
+    acceptance fixed point + one-hot clears/transit/injection writes run
+    as ONE kernel pass over VMEM node tiles.  Same state layout and
+    pre-drawn traffic as `_make_slot_step_batched`, and bitwise-equal
+    results; off-TPU the kernel runs in interpret mode (validated by the
+    differential suite at quick shapes).  Real-TPU lowering is untested
+    in this CPU-only container — see the caveat in kernels/sim_step.py."""
+    from ..kernels.ops import _on_tpu
+    from ..kernels.sim_step import fused_slot_step
+    N = ctx["N"]
+    nbr = ctx["nbr"]
+    trivial = ctx["trivial"]
+    interpret = not _on_tpu()
+
+    def slot_step(state, tr):
+        slot = state["slot"]
+        want_new = tr["u"] < state["load"]
+        if not trivial:
+            want_new = want_new & state["inj_ok"]
+        want = want_new | (state["backlog"] > 0)
+        (new_rec, new_birth, new_port, deliver, lat, can8, drop8,
+         dep_port) = fused_slot_step(
+            state["rec"], state["birth"], state["port"], tr["prio"], slot,
+            want, tr["r"], tr["p"], tr["v"], nbr,
+            link_ok=None if trivial else state["link_ok"],
+            dst_live_fixed=None if trivial else state["dst_live_fixed"],
+            policy="dor" if trivial else ctx["policy"],
+            interpret=interpret)
+        can = can8 != 0
+        drop = None if trivial else (drop8 != 0)
+        backlog = state["backlog"] + want_new - can
+        if drop is not None:
+            backlog = backlog - drop
+        backlog = jnp.clip(backlog, 0, 1 << 30)
+        updates = dict(rec=new_rec, birth=new_birth, port=new_port,
+                       backlog=backlog)
+        if not trivial:
+            updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
+        return _finish_slot(state, warmup, (deliver != 0).sum(), lat.sum(),
+                            can, drop, **updates), None
 
     return slot_step
 
@@ -600,10 +683,46 @@ def _make_slot_step_reference(ctx, warmup: int):
     return slot_step
 
 
+def _scenario_mask_fields(scenario: Scenario, g: LatticeGraph, N: int,
+                          dst_np, force_dead_nodes: bool = False) -> dict:
+    """The scenario-DEPENDENT traced arrays of a mask-threaded context —
+    factored out so a K-scenario sweep derives per-scenario masks without
+    rebuilding the scenario-independent routing/label tables K times."""
+    link_ok = scenario.link_ok(g)
+    node_ok = scenario.node_ok(g)
+    live = np.flatnonzero(node_ok).astype(np.int32)
+    if live.size == 0:
+        raise ValueError("scenario kills every node")
+    # pad the live table to N entries so it has a scenario-independent
+    # shape (a traced input must not change shape across patterns);
+    # entries past n_live repeat live[0] and are never drawn
+    live_pad = np.full(N, live[0], np.int32)
+    live_pad[:live.size] = live
+    return dict(
+        link_ok=jnp.asarray(link_ok),
+        inj_ok=jnp.asarray(node_ok),
+        dst_ok=jnp.asarray(node_ok),
+        has_dead_nodes=bool(scenario.dead_nodes) or force_dead_nodes,
+        live_tbl=jnp.asarray(live_pad),
+        n_live=int(live.size),
+        # fixed-pattern packets aimed at a dead node are dropped at
+        # injection (uniform traffic samples live nodes, never drops)
+        dst_live_fixed=jnp.asarray(
+            node_ok[dst_np] if dst_np is not None else np.ones(N, bool)))
+
+
 def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
-              queue: int, scenario: Scenario | None = None):
+              queue: int, scenario: Scenario | None = None,
+              force_masks: bool = False, force_dead_nodes: bool = False):
+    """`force_masks=True` builds the mask-threaded (non-trivial) context
+    even for the pristine scenario — used by `simulate_scenario_sweep`,
+    where a pristine pattern may ride the traced-mask program alongside
+    faulted ones (all-live masks reproduce the trivial results);
+    `force_dead_nodes=True` additionally gives a dead-node-free pattern
+    the dead-node program STRUCTURE (live-table destination sampling over
+    all N nodes), so it can share a sweep with dead-node patterns."""
     scenario = scenario or Scenario()
-    trivial = scenario.is_trivial
+    trivial = scenario.is_trivial and not force_masks
     dst_np = pattern_table(g, pattern, seed)
     fixed_dst = dst_np is not None
     # records are tiny for every pod-sized lattice — int8 state quarters the
@@ -631,25 +750,19 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
                     * g_strides).sum(axis=-1).astype(np.int32)
     else:
         di_fixed = np.zeros(t.N, np.int32)
+    # the batched/fused cache key carries only the scenario STRUCTURE
+    # (policy × dead-node-ness): masks are traced state inputs, so every
+    # fault pattern of the same structure reuses one compiled runner.  The
+    # reference oracle keeps masks baked (full fingerprint key).
+    hdn = bool(scenario.dead_nodes) or force_dead_nodes
     scen: dict = dict(trivial=trivial, policy=scenario.policy,
-                      scen_fp=scenario.fingerprint(g))
+                      scen_fp=scenario.fingerprint(g),
+                      scen_structure=(("trivial",) if trivial else
+                                      ("traced", scenario.policy, hdn)))
     if not trivial:
-        link_ok = scenario.link_ok(g)
-        node_ok = scenario.node_ok(g)
-        live = np.flatnonzero(node_ok).astype(np.int32)
-        if live.size == 0:
-            raise ValueError("scenario kills every node")
-        scen.update(
-            link_ok=jnp.asarray(link_ok),
-            inj_ok=jnp.asarray(node_ok),
-            dst_ok=jnp.asarray(node_ok),
-            has_dead_nodes=bool(scenario.dead_nodes),
-            live_tbl=jnp.asarray(live),
-            n_live=int(live.size),
-            # fixed-pattern packets aimed at a dead node are dropped at
-            # injection (uniform traffic samples live nodes, never drops)
-            dst_live_fixed=jnp.asarray(
-                node_ok[dst_np] if fixed_dst else np.ones(t.N, bool)))
+        scen.update(_scenario_mask_fields(
+            scenario, g, t.N, dst_np if fixed_dst else None,
+            force_dead_nodes))
     return dict(
         n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype, **scen,
         nbr=jnp.asarray(t.neighbors),
@@ -682,12 +795,20 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
         dropped=jnp.int32(0))
     if not ctx["trivial"]:
         state["link_use"] = jnp.zeros((N, P), dtype=jnp.int32)
-    if impl == "batched":
+    if impl in ("batched", "fused"):
         # birth < 0 marks free slots; each packet carries its next DOR port
         state["port"] = jnp.zeros((N, P, Q), dtype=jnp.int8)
         state["di_fixed"] = ctx["di_fixed"]
         if not ctx["trivial"]:
+            # scenario masks are TRACED inputs: they ride in the state so
+            # one compiled runner serves every fault pattern of the same
+            # structure, and scenario sweeps can vmap over them
             state["dst_live_fixed"] = ctx["dst_live_fixed"]
+            state["link_ok"] = ctx["link_ok"]
+            state["inj_ok"] = ctx["inj_ok"]
+            if ctx["has_dead_nodes"]:
+                state["live_tbl"] = ctx["live_tbl"]
+                state["n_live"] = jnp.int32(ctx["n_live"])
         del state["dst_table"]
     else:
         # the reference keeps the original dst-as-occupancy layout
@@ -696,33 +817,55 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
     return state
 
 
-def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
-                n_loads: int, n_seeds: int = 1):
-    """One compiled `lax.scan` per (topology, pattern kind, scenario, run
-    shape); sweeps vmap the same program over the load axis and, nested
-    inside it, the seed axis.  The batched runner takes per-run PRNG keys
-    and pre-draws all traffic (`_make_traffic`); the reference runner
-    splits its key into per-slot keys and draws inside the scan."""
-    key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
-           ctx["Q"], impl, n_loads, n_seeds, ctx["scen_fp"])
-    if key not in _RUNNER_CACHE:
-        if impl == "batched":
-            step = _make_slot_step_batched(ctx, warmup)
+# scenario-dependent traced state inputs (vmapped by the scenario axis of
+# `simulate_scenario_sweep`, shared across the load/seed axes)
+_SCEN_STATE = ("link_ok", "inj_ok", "live_tbl", "n_live", "dst_live_fixed")
+# state entries shared across the load AND seed sweep axes
+_SHARED_STATE = ("dst_table", "di_fixed") + _SCEN_STATE
 
-            def runner(st, key):
-                tr = _make_traffic(ctx, st, key, slots)
-                return jax.lax.scan(step, st, tr)[0]
-        else:
+# traces per impl, incremented when a runner's Python body runs (i.e. at
+# jit-trace time) — the recompile-count tests read this to prove that K
+# fault patterns of one structure share a single trace/compile
+TRACE_COUNTS: dict = {"batched": 0, "reference": 0, "fused": 0}
+
+
+def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
+                n_loads: int, n_seeds: int = 1, n_scen: int = 1):
+    """One compiled `lax.scan` per (topology, pattern kind, scenario
+    STRUCTURE, run shape); sweeps vmap the same program over the load axis
+    and, nested inside it, the seed axis — and `simulate_scenario_sweep`
+    over an outermost scenario axis.  The batched/fused runners take
+    per-run PRNG keys and pre-draw all traffic (`_make_traffic`); the
+    reference runner splits its key into per-slot keys and draws inside
+    the scan.  Scenario masks are traced state inputs for batched/fused
+    (cache key = structure only: policy × dead-node-ness), and baked
+    constants for the reference oracle (cache key = full fingerprint)."""
+    scen_key = (ctx["scen_fp"] if impl == "reference"
+                else ctx["scen_structure"])
+    key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
+           ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key)
+    if key not in _RUNNER_CACHE:
+        if impl == "reference":
             step = _make_slot_step_reference(ctx, warmup)
 
             def runner(st, key):
+                TRACE_COUNTS[impl] += 1
                 ks = jax.random.split(key, slots)
                 return jax.lax.scan(step, st, ks)[0]
-        # dst_table / di_fixed are shared across both sweep axes, so
-        # fixed-pattern traffic is derived once, not once per run
-        axes = {k: (None if k in ("dst_table", "di_fixed",
-                                  "dst_live_fixed") else 0)
-                for k in _init_state(ctx, 0.0, impl)}
+        else:
+            step = (_make_slot_step_batched(ctx, warmup)
+                    if impl == "batched"
+                    else _make_slot_step_fused(ctx, warmup))
+
+            def runner(st, key):
+                TRACE_COUNTS[impl] += 1
+                tr = _make_traffic(ctx, st, key, slots)
+                return jax.lax.scan(step, st, tr)[0]
+        # dst_table / di_fixed / scenario masks are shared across both
+        # sweep axes, so fixed-pattern traffic is derived once, not once
+        # per run
+        state_keys = list(_init_state(ctx, 0.0, impl))
+        axes = {k: (None if k in _SHARED_STATE else 0) for k in state_keys}
         if n_seeds > 1:
             # seed axis: same initial state, one key per seed
             runner = jax.vmap(runner, in_axes=(None, 0), out_axes=axes)
@@ -730,6 +873,15 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
             # load axis: per-load state (the offered load lives in it) and
             # per-load fold of the key (decorrelates sweep points)
             runner = jax.vmap(runner, in_axes=(axes, 0), out_axes=axes)
+        if n_scen > 1:
+            # outermost scenario axis: only the masks vary; the PRNG key
+            # is shared (common random numbers — scenario differences in
+            # the results are fault effects, not sampling noise)
+            in_sc = {k: (0 if k in _SCEN_STATE else None)
+                     for k in state_keys}
+            out_sc = {k: (None if k in ("dst_table", "di_fixed") else 0)
+                      for k in state_keys}
+            runner = jax.vmap(runner, in_axes=(in_sc, None), out_axes=out_sc)
         _RUNNER_CACHE[key] = jax.jit(runner)
     return _RUNNER_CACHE[key]
 
@@ -750,6 +902,28 @@ def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
         dropped=int(out.get("dropped", 0)),
         in_flight=0 if occ is None else int((np.asarray(occ) >= 0).sum()),
         link_use=None if lu is None else np.asarray(lu))
+
+
+def _result_grid(out, axes_sizes: tuple, impl: str, *, slots: int,
+                 warmup: int, N: int) -> np.ndarray:
+    """Slice a (possibly vmapped) runner output into one `SimResult` per
+    grid cell.  `axes_sizes` is the full leading batch shape (e.g.
+    (L, S) or (K, L, S)); size-1 axes are absent from the raw output and
+    re-inserted here.  Shared by `simulate_sweep` and
+    `simulate_scenario_sweep` so the kept-counter set and axis
+    normalization cannot drift between them."""
+    occ_key = "dst" if impl == "reference" else "birth"
+    keep = ("delivered", "lat_sum", "injected", "dropped", "link_use",
+            occ_key)
+    out_np = {k: np.asarray(v) for k, v in out.items() if k in keep}
+    for i, size in enumerate(axes_sizes):
+        if size == 1:
+            out_np = {k: np.expand_dims(v, i) for k, v in out_np.items()}
+    res = np.empty(axes_sizes, dtype=object)
+    for idx in np.ndindex(*axes_sizes):
+        res[idx] = _result({k: v[idx] for k, v in out_np.items()},
+                           slots=slots, warmup=warmup, N=N)
+    return res
 
 
 @dataclass(frozen=True)
@@ -792,26 +966,59 @@ def _seed_list(seed: int, seeds) -> list[int] | None:
 
 
 def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
-                queue, seed, seed_list, tables, impl, scenario):
+                queue, seed, seed_list, tables, impl, scenario,
+                scenarios=None):
     """Build (runner, broadcast initial state, (L[, S]) key grid) for one
     sweep device program.  Key derivation: run (ℓ, s) of a multi-load
     sweep uses `fold_in(PRNGKey(seeds[s] + 17), ℓ)` — every load point
     gets its own fold (pre-PR-3 all points of a sweep shared one key and
     were perfectly correlated), and every seed its own base key.  A
     single-load sweep uses the unfolded base keys, so its seed-axis
-    slices stay bitwise-equal to plain `simulate(..., seed=seeds[s])`."""
+    slices stay bitwise-equal to plain `simulate(..., seed=seeds[s])`.
+    With `scenarios` (a list of K fault patterns) the state's traced mask
+    entries are stacked on an outermost scenario axis and the runner is
+    vmapped over it — K patterns, one trace, one compile.  The
+    scenario-independent tables are built ONCE (only the mask fields are
+    derived per scenario, via `_scenario_mask_fields`);
+    `force_dead_nodes` gives every lane the dead-node program structure
+    when any pattern in the sweep kills nodes."""
     t = tables or build_tables(g, seed)
-    ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
+    if scenarios is None:
+        ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
+        masks = None
+    else:
+        fdn = any(s.dead_nodes for s in scenarios)
+        ctx = _make_ctx(t, g, pattern, seed, queue, scenarios[0],
+                        force_masks=True, force_dead_nodes=fdn)
+        dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
+                  else None)
+        masks = [{k: ctx[k] for k in ("link_ok", "inj_ok", "live_tbl",
+                                      "n_live", "dst_live_fixed")}] + [
+            _scenario_mask_fields(s, g, t.N, dst_np, fdn)
+            for s in scenarios[1:]]
     sl = seed_list if seed_list is not None else [seed]
     L, S = len(loads), len(sl)
     runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
-                         n_loads=L, n_seeds=S)
+                         n_loads=L, n_seeds=S,
+                         n_scen=1 if masks is None else len(masks))
     state = _init_state(ctx, 0.0, impl, slots)
     if L > 1:
         state = {
-            k: (v if k in ("dst_table", "di_fixed", "dst_live_fixed")
+            k: (v if k in _SHARED_STATE
                 else jnp.broadcast_to(v, (L,) + v.shape))
             for k, v in state.items()}
+    if masks is not None and len(masks) > 1:
+        # stack the per-scenario traced masks on the scenario axis (a
+        # K=1 sweep has no scenario vmap — ctx's masks are already in
+        # the state)
+        stack = ["link_ok", "inj_ok", "dst_live_fixed"]
+        if ctx["has_dead_nodes"]:
+            stack.append("live_tbl")
+        for k in stack:
+            state[k] = jnp.stack([m[k] for m in masks])
+        if ctx["has_dead_nodes"]:
+            state["n_live"] = jnp.asarray([m["n_live"] for m in masks],
+                                          jnp.int32)
     state = dict(state, load=jnp.asarray(loads, jnp.float32) if L > 1
                  else jnp.float32(loads[0]))
     def run_key(s, li):
@@ -842,8 +1049,13 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     `repro.core.scenario.Scenario`); None is the pristine DOR baseline and
     compiles to the exact pre-scenario program.  `fold` reproduces one
     point of a multi-load sweep: `simulate_sweep(loads)[i]` equals
-    `simulate(loads[i], fold=i)`."""
-    if impl not in ("batched", "reference"):
+    `simulate(loads[i], fold=i)`.
+
+    impl="fused" routes the slot update through the Pallas kernel
+    (`repro.kernels.sim_step`): same state layout and pre-drawn traffic as
+    the batched path, winner/acceptance/apply fused into one kernel pass
+    (interpret mode off-TPU) — results are bitwise-equal to batched."""
+    if impl not in ("batched", "reference", "fused"):
         raise ValueError(f"unknown simulator impl {impl!r}")
     t = tables or build_tables(g, seed)
     ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
@@ -885,31 +1097,81 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
         scenario=scenario)
     out = runner(state, keys)
     L, S = len(loads), len(sl or [seed])
-    occ_key = "dst" if impl == "reference" else "birth"
-    keep = ("delivered", "lat_sum", "injected", "dropped", "link_use",
-            occ_key)
-    out_np = {k: np.asarray(v) for k, v in out.items() if k in keep}
-
-    def grid(v):
-        """Normalize a leading (L?, S?) batch to exactly (L, S, ...)."""
-        if L > 1 and S > 1:
-            return v
-        if L > 1:
-            return v[:, None]
-        if S > 1:
-            return v[None]
-        return v[None, None]
-
-    out_np = {k: grid(v) for k, v in out_np.items()}
-    res = [
-        [_result({k: v[li, si] for k, v in out_np.items()},
-                 slots=slots, warmup=warmup, N=t.N)
-         for si in range(S)]
-        for li in range(L)]
+    res = _result_grid(out, (L, S), impl, slots=slots, warmup=warmup,
+                       N=t.N)
     if sl is None:
-        return [row[0] for row in res]
+        return [res[li, 0] for li in range(L)]
     return SweepStats(loads=tuple(loads), seeds=tuple(sl),
                       results=tuple(tuple(row) for row in res))
+
+
+def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
+                            loads=(0.6,), *, slots: int = 512,
+                            warmup: int = 128, queue: int = 4, seed: int = 0,
+                            seeds=None, tables: SimTables | None = None,
+                            impl: str = "batched"):
+    """K fault patterns × (loads × seeds) as ONE device program: the
+    scenario masks are traced state inputs, so the compiled slot update is
+    vmapped over an outermost scenario axis — K patterns cost one trace
+    and one compile (pre-PR-4 each pattern was baked into its own
+    program and re-compiled).
+
+    All *faulted* scenarios must share the routing policy and
+    dead-node-ness (both shape the compiled program); `None`/pristine
+    entries mean the fault-free baseline — they adopt the sweep's policy
+    (with all channels live every policy routes the DOR minimal port, so
+    the baseline lane is policy-independent) and, in a dead-node sweep,
+    the dead-node program structure (live-table sampling over all N
+    nodes), riding the same traced-mask program with all-live masks.  The PRNG key grid is
+    shared across scenarios (common random numbers: result differences
+    between patterns are fault effects, not sampling noise), so scenario
+    k's results are bitwise-equal to the single-scenario sweep with the
+    same loads/seeds.
+
+    Returns a list of length K mirroring `simulate_sweep`'s return for
+    each scenario: list[SimResult] per load when `seeds is None`, else a
+    `SweepStats`."""
+    scenarios = [s if s is not None else Scenario() for s in scenarios]
+    if not scenarios:
+        raise ValueError("simulate_scenario_sweep needs >= 1 scenario")
+    if impl not in ("batched", "fused"):
+        raise ValueError(
+            "simulate_scenario_sweep needs a traced-mask implementation "
+            f"(batched | fused), got {impl!r}")
+    policies = sorted({s.policy for s in scenarios if not s.is_trivial})
+    if len(policies) > 1:
+        raise ValueError(
+            f"scenario sweep mixes routing policies {policies}; the policy "
+            "shapes the compiled program — sweep each policy separately")
+    if policies and policies[0] != "dor":
+        # pristine lanes adopt the sweep policy (equivalent routing on an
+        # all-live graph) so [None, faulted-adaptive, ...] just works
+        scenarios = [s.with_policy(policies[0]) if s.is_trivial else s
+                     for s in scenarios]
+    faulted = [s for s in scenarios if s.dead_links or s.dead_nodes]
+    if len({bool(s.dead_nodes) for s in faulted}) > 1:
+        raise ValueError(
+            "scenario sweep mixes dead-node and link-only fault patterns; "
+            "destination sampling differs structurally — sweep separately")
+    loads = [float(l) for l in np.asarray(loads).ravel()]
+    sl = _seed_list(seed, seeds)
+    runner, state, keys, t, _ = _sweep_plan(
+        g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
+        seed=seed, seed_list=sl, tables=tables, impl=impl, scenario=None,
+        scenarios=scenarios)
+    out = runner(state, keys)
+    K, L, S = len(scenarios), len(loads), len(sl or [seed])
+    res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
+                       N=t.N)
+    results = []
+    for ki in range(K):
+        if sl is None:
+            results.append([res[ki, li, 0] for li in range(L)])
+        else:
+            results.append(SweepStats(
+                loads=tuple(loads), seeds=tuple(sl),
+                results=tuple(tuple(row) for row in res[ki])))
+    return results
 
 
 def simulate_load_sweep(g: LatticeGraph, pattern: str, loads, **kw):

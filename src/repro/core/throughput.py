@@ -177,7 +177,7 @@ def measured_saturation_throughput(g: LatticeGraph, pairs: int = 20_000,
 
 def fault_aware_channel_load(g: LatticeGraph, scenario,
                              pairs: int = 20_000, seed: int = 0,
-                             tables=None) -> np.ndarray:
+                             tables=None, backend: str = "auto") -> np.ndarray:
     """Monte-Carlo channel loads on a *degraded* graph: `pairs` uniform
     live-src → live-dst pairs are walked along the fault-aware BFS
     next-hop tables (`routing.fault_aware_next_hop`), so the load
@@ -185,12 +185,25 @@ def fault_aware_channel_load(g: LatticeGraph, scenario,
     reflects the faulted topology instead of the pristine minimal records.
     Unreachable/self pairs are redrawn out of the sample; by construction
     no dead channel is ever crossed (asserted).  Scaled to one packet per
-    live node, matching the `channel_load` convention."""
-    from .routing import fault_aware_next_hop
+    live node, matching the `channel_load` convention.  The table rebuild
+    runs on device by default (`routing.fault_aware_next_hop_device`,
+    identical tables); backend="host" forces the numpy BFS loop."""
+    from .routing import fault_aware_next_hop, fault_aware_next_hop_device
+    if backend not in ("auto", "device", "host"):
+        raise ValueError(f"unknown BFS backend {backend!r}")
     link_ok = scenario.link_ok(g)
     node_ok = scenario.node_ok(g)
-    dist, next_hop = (fault_aware_next_hop(g, link_ok, node_ok)
-                      if tables is None else tables)
+    if tables is not None:
+        dist, next_hop = tables
+    elif backend != "host":
+        try:
+            dist, next_hop = fault_aware_next_hop_device(g, link_ok, node_ok)
+        except ImportError:   # jax absent — only "auto" may fall back
+            if backend == "device":
+                raise
+            dist, next_hop = fault_aware_next_hop(g, link_ok, node_ok)
+    else:
+        dist, next_hop = fault_aware_next_hop(g, link_ok, node_ok)
     live = np.flatnonzero(node_ok)
     if live.size < 2:
         raise ValueError("scenario leaves fewer than 2 live nodes")

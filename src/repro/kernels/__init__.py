@@ -1,5 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute hot-spots:
 flash attention (prefill/train), decode attention (long-KV serve),
-SSD intra-chunk (Mamba2), fused RMSNorm.  Each has a pure-jnp oracle in
-ref.py; ops.py holds the jit'd model-facing wrappers."""
-from . import ops, ref
+SSD intra-chunk (Mamba2), fused RMSNorm, and the §6.2 simulator's fused
+slot step (sim_step — winner arbitration + acceptance + apply in one
+pass, the `impl="fused"` backend of `repro.core.simulation`).  Each has
+a pure-jnp oracle (ref.py, or the simulator's reference impl); ops.py
+holds the jit'd model-facing wrappers."""
+from . import ops, ref, sim_step  # noqa: F401

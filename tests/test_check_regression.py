@@ -28,6 +28,31 @@ BASE = doc(**{
     "routing/FCC(8)/B=1000": {"engine_Mrec_s": 3.0},
 })
 
+# the ISSUE 4 rows: fused-impl slots/s, the K-scenario one-compile sweep
+# and the device fault-BFS sweep must be covered by the suffix markers
+NEW_ROWS = doc(**{
+    "sim/fused/N=512": {"slots_per_s": 80.0},
+    "scenarios/scen_sweep8/N=512": {"scen_sweep_loadpoints_per_s": 3.0,
+                                    "speedup_vs_seq_cold": 5.0},
+    "scenarios/bfs_sweep4/N=512": {"bfs_scenarios_per_s": 10.0,
+                                   "device_vs_host": 7.0},
+})
+
+
+def test_new_pr4_rows_are_gated():
+    """fused / scenario-sweep / BFS-sweep throughput metrics regress ⇒
+    the gate fails; their ratio metrics stay ungated by design."""
+    cur = json.loads(json.dumps(NEW_ROWS))
+    for row in cur["rows"]:
+        for k in row["derived"]:
+            row["derived"][k] *= 0.5                     # 2× slowdown
+    failures, _ = compare(NEW_ROWS, cur, tolerance=0.30)
+    assert sorted(f.split(" ")[0] for f in failures) == [
+        "scenarios/bfs_sweep4/N=512:bfs_scenarios_per_s",
+        "scenarios/scen_sweep8/N=512:scen_sweep_loadpoints_per_s",
+        "sim/fused/N=512:slots_per_s",
+    ], failures
+
 
 def test_injected_regression_fails():
     cur = json.loads(json.dumps(BASE))

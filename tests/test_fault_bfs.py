@@ -1,0 +1,98 @@
+"""Device multi-source BFS vs the host per-destination BFS (ISSUE 4).
+
+`routing.fault_aware_next_hop_device` must reproduce the host tables
+EXACTLY — distances and first-live-port next hops — on the acceptance
+topologies (T(4,4,4,4) + RTT/FCC/BCC) across fault classes, and the
+K-scenario distance sweep must match per-scenario host statistics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BCC, FCC, RTT, Scenario, Torus, fault_aware_channel_load,
+                        fault_aware_next_hop, fault_aware_next_hop_device,
+                        faulted_average_distance, faulted_diameter,
+                        faulted_distance_matrix, faulted_distance_sweep)
+
+GRAPHS = {"T4444": Torus(4, 4, 4, 4), "RTT4": RTT(4), "FCC2": FCC(2),
+          "BCC2": BCC(2)}
+
+
+def scenarios_for(g):
+    return [Scenario(),                                        # pristine
+            Scenario.random_link_faults(g, 3, seed=3),
+            Scenario.random_node_faults(g, 2, seed=1),
+            Scenario(dead_links=((0, 0), (0, 2)),
+                     dead_nodes=(g.order // 2,))]              # mixed
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_device_tables_equal_host_tables(gname):
+    g = GRAPHS[gname]
+    for scen in scenarios_for(g):
+        link_ok, node_ok = scen.link_ok(g), scen.node_ok(g)
+        dh, nh = fault_aware_next_hop(g, link_ok, node_ok)
+        dd, nd = fault_aware_next_hop_device(g, link_ok, node_ok)
+        assert np.array_equal(dh, dd), (gname, scen.name)
+        assert np.array_equal(nh, nd), (gname, scen.name)
+
+
+def test_disconnecting_fault_marks_unreachable():
+    """Cutting both links of a ring node isolates it: device and host
+    agree on the -1 (unreachable) pattern."""
+    ring = Torus(6)
+    scen = Scenario(dead_links=((2, 0), (2, 1)))
+    dh, nh = fault_aware_next_hop(ring, scen.link_ok(ring),
+                                  scen.node_ok(ring))
+    dd, nd = fault_aware_next_hop_device(ring, scen.link_ok(ring),
+                                         scen.node_ok(ring))
+    assert np.array_equal(dh, dd) and np.array_equal(nh, nd)
+    assert dd[0, 2] == -1 and dd[2, 0] == -1 and (dd[2, 2] == 0)
+
+
+def test_distance_matrix_backends_agree():
+    g = Torus(4, 4, 4)
+    scen = Scenario.random_link_faults(g, 4, seed=7)
+    assert np.array_equal(faulted_distance_matrix(g, scen, backend="host"),
+                          faulted_distance_matrix(g, scen, backend="device"))
+    with pytest.raises(ValueError, match="unknown BFS backend"):
+        faulted_distance_matrix(g, scen, backend="gpu")
+
+
+def test_faulted_distance_sweep_matches_host_stats():
+    g = Torus(4, 4, 4)
+    scens = [Scenario.random_link_faults(g, k, seed=k) for k in (0, 2, 4, 6)]
+    sw = faulted_distance_sweep(g, scens)
+    for i, s in enumerate(scens):
+        dist = faulted_distance_matrix(g, s, backend="host")
+        assert np.isclose(sw["average_distance"][i],
+                          faulted_average_distance(g, s, dist), atol=1e-5)
+        assert sw["diameter"][i] == faulted_diameter(g, s, dist)
+        assert sw["reachable_pairs"][i] == int((dist > 0).sum())
+
+
+def test_sweep_disconnected_lane_reports_nan_not_zero():
+    """A totally disconnected fault pattern must not score average
+    distance 0.0 (which would rank the broken topology 'best'): the lane
+    reports NaN + reachable_pairs=0 while healthy lanes stay finite."""
+    ring = Torus(4)
+    dead_all = Scenario(dead_links=tuple((u, 0) for u in range(4)))
+    sw = faulted_distance_sweep(ring, [dead_all, Scenario()])
+    assert np.isnan(sw["average_distance"][0])
+    assert sw["reachable_pairs"][0] == 0
+    assert np.isfinite(sw["average_distance"][1])
+    assert sw["reachable_pairs"][1] == 4 * 3
+
+
+def test_channel_load_walk_accepts_device_tables():
+    """fault_aware_channel_load's walk runs on the device-built tables by
+    default and still never steps onto a dead channel; host-backend loads
+    are identical (identical tables ⇒ identical walk)."""
+    g = Torus(4, 4)
+    scen = Scenario.random_link_faults(g, 3, seed=5)
+    ld = fault_aware_channel_load(g, scen, pairs=2000, seed=1)
+    lh = fault_aware_channel_load(g, scen, pairs=2000, seed=1,
+                                  backend="host")
+    assert np.array_equal(ld, lh)
+    assert ld[~scen.link_ok(g)].sum() == 0
+    with pytest.raises(ValueError, match="unknown BFS backend"):
+        fault_aware_channel_load(g, scen, pairs=100, backend="devcie")

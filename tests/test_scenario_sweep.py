@@ -1,0 +1,153 @@
+"""Traced scenario masks + `simulate_scenario_sweep` (ISSUE 4).
+
+The fault masks of the batched/fused simulator are traced inputs: K fault
+patterns of one structure (policy × dead-node-ness) share a single
+trace/compile, a changed mask never retraces, and the K-scenario sweep is
+ONE vmapped device program whose per-scenario lanes are bitwise-equal to
+single-scenario runs (the key grid is shared — common random numbers).
+`repro.core.simulation.TRACE_COUNTS` counts runner-body executions, which
+happen exactly once per jit trace.
+"""
+import pytest
+
+from repro.core import Scenario, Torus
+from repro.core.simulation import (TRACE_COUNTS, _RUNNER_CACHE, build_tables,
+                                   simulate, simulate_scenario_sweep,
+                                   simulate_sweep)
+
+G = Torus(4, 4)
+TABLES = build_tables(G)
+KW = dict(slots=96, warmup=0, seed=2, tables=TABLES)
+
+
+def link_scens(ks, policy="adaptive"):
+    return [Scenario.random_link_faults(G, k, seed=10 + k, policy=policy)
+            for k in ks]
+
+
+def test_k4_patterns_compile_once():
+    """K=4 distinct fault patterns through `simulate_scenario_sweep`
+    trigger exactly ONE trace of the batched runner."""
+    _RUNNER_CACHE.clear()
+    n0 = TRACE_COUNTS["batched"]
+    res = simulate_scenario_sweep(G, "uniform", link_scens((1, 2, 3, 4)),
+                                  loads=(0.6,), **KW)
+    assert TRACE_COUNTS["batched"] - n0 == 1
+    assert len(res) == 4
+    for scen, rl in zip(link_scens((1, 2, 3, 4)), res):
+        for r in rl:
+            assert r.delivered + r.in_flight + r.dropped == r.injected
+            assert int(r.link_use[~scen.link_ok(G)].sum()) == 0
+
+
+def test_changed_mask_does_not_retrace():
+    """Sequential single runs with different fault patterns of the same
+    structure reuse one compiled runner — masks are traced, not baked."""
+    _RUNNER_CACHE.clear()
+    a, b = link_scens((2, 5))
+    simulate(G, "uniform", 0.6, scenario=a, **KW)
+    n0 = TRACE_COUNTS["batched"]
+    rb = simulate(G, "uniform", 0.6, scenario=b, **KW)
+    assert TRACE_COUNTS["batched"] == n0          # no retrace
+    assert len(_RUNNER_CACHE) == 1
+    # and the traced masks really took effect (not a stale pattern)
+    assert int(rb.link_use[~b.link_ok(G)].sum()) == 0
+    # a structural change (policy) DOES trace a new program
+    simulate(G, "uniform", 0.6, scenario=b.with_policy("escape"), **KW)
+    assert TRACE_COUNTS["batched"] == n0 + 1
+
+
+def test_sweep_lane_bitwise_equals_single_scenario_sweep():
+    """Scenario lane k of the vmapped sweep == the single-scenario sweep
+    with the same loads/seeds, counter for counter (shared key grid)."""
+    scens = link_scens((1, 3))
+    res = simulate_scenario_sweep(G, "uniform", scens, loads=(0.3, 0.8),
+                                  **KW)
+    for scen, rl in zip(scens, res):
+        single = simulate_sweep(G, "uniform", (0.3, 0.8), scenario=scen,
+                                **KW)
+        assert [r.delivered for r in rl] == [r.delivered for r in single]
+        assert [r.injected for r in rl] == [r.injected for r in single]
+
+
+def test_sweep_supports_seed_axis_and_dead_nodes():
+    """(K scenarios × loads × seeds) in one program, dead-node patterns
+    included (traced live-destination tables of per-scenario length)."""
+    scens = [Scenario(dead_nodes=(5,), policy="adaptive"),
+             Scenario(dead_nodes=(2, 9), policy="adaptive")]
+    res = simulate_scenario_sweep(G, "uniform", scens, loads=(0.4, 0.9),
+                                  seeds=2, **KW)
+    for scen, st in zip(scens, res):
+        assert st.accepted().shape == (2, 2)
+        for row in st.results:
+            for r in row:
+                assert r.delivered + r.in_flight + r.dropped == r.injected
+                assert int(r.link_use[~scen.link_ok(G)].sum()) == 0
+        # the dead node really is masked in every lane
+        assert all(int(r.link_use[scen.dead_nodes[0]].sum()) == 0
+                   for row in st.results for r in row)
+
+
+def test_trivial_scenario_rides_the_traced_program():
+    """A None/pristine entry runs on the traced-mask program with all-live
+    masks — adopting the sweep's policy, since every policy routes the
+    minimal DOR port on an all-live graph — and reproduces the dedicated
+    pristine program's throughput within stochastic tolerance (same
+    seeds, one arbitration stream)."""
+    base = simulate(G, "uniform", 0.5, **KW)
+    for policy in ("dor", "adaptive"):   # mixed None + non-dor must work
+        res = simulate_scenario_sweep(
+            G, "uniform",
+            [None, Scenario.random_link_faults(G, 2, seed=3, policy=policy)],
+            loads=(0.5,), **KW)
+        pristine = res[0][0]
+        assert pristine.delivered + pristine.in_flight == pristine.injected
+        assert abs(pristine.accepted_load - base.accepted_load) <= \
+            max(0.05 * base.accepted_load, 0.03), policy
+
+
+def test_pristine_lane_rides_dead_node_sweep():
+    """[None, dead-node-faulted] is the canonical degraded-vs-baseline
+    comparison: the pristine lane adopts the dead-node program structure
+    (live-table sampling over all N nodes) and conserves exactly."""
+    scens = [None, Scenario(dead_nodes=(5, 10), policy="adaptive")]
+    res = simulate_scenario_sweep(G, "uniform", scens, loads=(0.6,), **KW)
+    for rl in res:
+        r = rl[0]
+        assert r.delivered + r.in_flight + r.dropped == r.injected
+    # the pristine lane delivers at least as much as the degraded one
+    assert res[0][0].delivered >= res[1][0].delivered
+    # and its dead-channel audit is trivially clean (no dead channels)
+    assert int(res[1][0].link_use[~scens[1].link_ok(G)].sum()) == 0
+
+
+def test_single_scenario_sweep_degenerates_cleanly():
+    """K=1 has no scenario vmap axis — the sweep must still run and equal
+    the plain single-scenario sweep (leading-axis normalization
+    regression)."""
+    scen = link_scens((2,))[0]
+    res = simulate_scenario_sweep(G, "uniform", [scen], loads=(0.5,), **KW)
+    single = simulate_sweep(G, "uniform", (0.5,), scenario=scen, **KW)
+    assert len(res) == 1
+    assert res[0][0].delivered == single[0].delivered
+    st = simulate_scenario_sweep(G, "uniform", [scen], loads=(0.3, 0.8),
+                                 seeds=2, **KW)[0]
+    assert st.accepted().shape == (2, 2)
+
+
+def test_mixed_structure_rejected():
+    with pytest.raises(ValueError, match="polic"):
+        simulate_scenario_sweep(
+            G, "uniform",
+            [Scenario(policy="adaptive", dead_links=((1, 0),)),
+             Scenario(policy="escape", dead_links=((1, 0),))], **KW)
+    with pytest.raises(ValueError, match="dead-node"):
+        simulate_scenario_sweep(
+            G, "uniform",
+            [Scenario(dead_nodes=(3,), policy="adaptive"),
+             Scenario(dead_links=((1, 0),), policy="adaptive")], **KW)
+    with pytest.raises(ValueError, match="traced-mask"):
+        simulate_scenario_sweep(G, "uniform", link_scens((1,)),
+                                impl="reference", **KW)
+    with pytest.raises(ValueError, match=">= 1"):
+        simulate_scenario_sweep(G, "uniform", [], **KW)
