@@ -7,24 +7,33 @@
 # `make lint` in the lint job.  Policy details: docs/ci.md.
 PY ?= python
 BENCH_JSON ?= /tmp/bench_current.json
+BENCH_NIGHTLY_JSON ?= /tmp/bench_nightly.json
 BENCH_TOLERANCE ?= 0.30
 # sections whose numbers the regression gate tracks (routing Mrec/s +
-# simulator & scenario-engine slots/s); keep in sync with BENCH_baseline.json
-BENCH_GATE_SECTIONS = routing,sim,scenarios
+# simulator, scenario-engine & transient-timeline slots/s); keep in sync
+# with BENCH_baseline.json
+BENCH_GATE_SECTIONS = routing,sim,scenarios,transient
 
 .PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
-        bench-check bench-baseline lint
+        bench-nightly bench-check bench-baseline lint
 
 # --durations surfaces the slowest tests so suite-time regressions are
 # visible in every CI log
 test:
 	$(PY) -m pytest -q --durations=15
 
-# skip the slow distributed/simulation modules; covers the routing stack
+# analytic + routing + scenario-unit modules (NO simulator sweeps): the
+# integer-matrix/lattice/crystal/symmetry stack, both routing backends,
+# the fault-BFS table rebuilds and the fault-schedule epoch compiler —
+# everything that runs in seconds without compiling a slot-step program.
+# The simulator differential/property suites stay in plain `make test`.
 test-fast:
 	$(PY) -m pytest -q tests/test_intmat.py tests/test_lattice.py \
 	    tests/test_crystals.py tests/test_routing.py \
-	    tests/test_routing_engine.py tests/test_symmetry.py
+	    tests/test_routing_engine.py tests/test_symmetry.py \
+	    tests/test_fault_bfs.py tests/test_fault_schedule.py \
+	    tests/test_propcheck.py tests/test_check_regression.py \
+	    tests/test_bench_driver.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -37,12 +46,19 @@ bench-routing:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only routing
 
 # fast sanity pass CI runs on every matrix entry: cheap analytic sections
-# + the quick simulator & scenario-engine benchmarks (covers the fused
-# Pallas row, the K-scenario one-compile sweep and the device fault-BFS
-# sweep); exercises the whole bench plumbing
+# + the quick simulator / scenario-engine / transient-timeline benchmarks
+# (covers the fused Pallas row, the K-scenario and K-schedule one-compile
+# sweeps and the device fault-BFS sweeps); exercises the whole bench
+# plumbing
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
-	    --only table1,table2,throughput,sim,scenarios
+	    --only table1,table2,throughput,sim,scenarios,transient
+
+# the nightly CI job: FULL mode, every section (incl. the fused-parity
+# differential cells in `sim` and the N=4096 sweeps), JSON for the
+# dated bench-trend artifact (docs/ci.md "Nightly bench trend")
+bench-nightly:
+	PYTHONPATH=src $(PY) -m benchmarks.run --json $(BENCH_NIGHTLY_JSON)
 
 # perf-regression gate: measure the gated sections twice (quick mode,
 # JSON; per-metric best-of — a load spike slows one run, a regression

@@ -18,7 +18,7 @@ import traceback
 
 from . import (fig5_8_simulation, roofline, routing_throughput, scenario_sim,
                sim_throughput, table1_distances, table2_lattices,
-               throughput_bounds, topology_collectives, util)
+               throughput_bounds, topology_collectives, transient_sim, util)
 from .util import header
 
 SECTIONS = {
@@ -28,6 +28,7 @@ SECTIONS = {
     "throughput": throughput_bounds.main,
     "sim": sim_throughput.main,
     "scenarios": scenario_sim.main,
+    "transient": transient_sim.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,

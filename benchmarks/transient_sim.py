@@ -1,0 +1,121 @@
+"""Transient-fault timeline engine throughput: the per-slot epoch-indexed
+simulator vs the static scenario path, the K-schedule one-compile sweep
+vs sequential per-timeline recompiles, and the epoch-stacked device BFS.
+
+The acceptance bars (ISSUE 5): a scheduled run (per-slot epoch gathers +
+conservation timeline) must stay within 2× of the static traced-mask
+scenario path at the same size; a K=8-timeline
+`simulate_schedule_sweep` must beat K sequential `simulate(schedule=)`
+calls that each pay their own compile (the sweep's one compile is the
+claim, so both sides are timed cold); and the per-epoch BFS rebuild of a
+whole schedule must run as ONE compiled program
+(`fault_aware_next_hop_device` stacked mode).  Sim rows are pinned at
+N=512 in BOTH modes — the measured wins are compile amortization and
+per-slot bookkeeping overhead, identical at any N (on XLA CPU vmap lanes
+serialize, so large-N run time would drown them) — while the BFS row
+scales to N=4096 × E=16 in full mode.  Emitted `slots_per_s` /
+`loadpoints_per_s` / `epochs_per_s` metrics are gated by
+`make bench-check`.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (FaultSchedule, Scenario, Torus, fault_aware_next_hop,
+                        fault_aware_next_hop_device)
+from repro.core.simulation import (_RUNNER_CACHE, build_tables, simulate,
+                                   simulate_schedule_sweep)
+
+from .util import emit
+
+REPS = 3
+
+
+def main(quick: bool = False) -> None:
+    # ---- scheduled vs static slot-step overhead ----
+    # pinned at N=512 in both modes: the quantity is the per-slot cost of
+    # the epoch gathers + timeline emission, not lattice scale
+    g = Torus(8, 8, 4, 2)
+    slots, warmup = 192, 48
+    t = build_tables(g)
+    scen = Scenario.random_link_faults(g, 8, seed=5, policy="adaptive")
+    flap = FaultSchedule(
+        events=((slots // 4, "link_down", (1, 0)),
+                (slots // 2, "link_down", (40, 2)),
+                (3 * slots // 4, "link_up", (1, 0))),
+        base=scen, name="bench_flap")
+    kw = dict(slots=slots, warmup=warmup, seed=1, tables=t)
+
+    def run_static():
+        return simulate(g, "uniform", 0.6, scenario=scen, **kw)
+
+    def run_sched():
+        return simulate(g, "uniform", 0.6, schedule=flap, **kw)
+
+    run_static()
+    run_sched()                                    # compile both
+    best = {"static": float("inf"), "timeline": float("inf")}
+    for _ in range(REPS):
+        for name, fn in (("static", run_static), ("timeline", run_sched)):
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    emit(f"transient/timeline/N={g.order}", best["timeline"] * 1e6,
+         f"timeline_slots_per_s={slots / best['timeline']:.1f};"
+         f"slots={slots};"
+         f"overhead_vs_static={best['timeline'] / best['static']:.2f}x")
+
+    # ---- K-schedule one-compile sweep vs sequential per-timeline runs ----
+    # mirrors scenarios/scen_sweep8: the win is the single trace/compile
+    # shared by all K timelines (each sequential run below starts from a
+    # cold runner cache, which is what K independent evaluations cost
+    # without the sweep)
+    K = 8
+    kscheds = [FaultSchedule.random_events(g, 6, slots, seed=100 + i,
+                                           policy="adaptive")
+               for i in range(K)]
+    _RUNNER_CACHE.clear()
+    t0 = time.perf_counter()
+    simulate_schedule_sweep(g, "uniform", kscheds, loads=(0.6,), **kw)
+    sweep_cold = time.perf_counter() - t0
+    best_ksweep = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        simulate_schedule_sweep(g, "uniform", kscheds, loads=(0.6,), **kw)
+        best_ksweep = min(best_ksweep, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for s in kscheds:
+        _RUNNER_CACHE.clear()              # per-timeline compile behavior
+        simulate(g, "uniform", 0.6, schedule=s, **kw)
+    seq_cold = time.perf_counter() - t0
+    emit(f"transient/sched_sweep{K}/N={g.order}", best_ksweep * 1e6,
+         f"sched_loadpoints_per_s={K / best_ksweep:.2f};"
+         f"one_compile_s={sweep_cold:.2f};seq_cold_s={seq_cold:.2f};"
+         f"speedup_vs_seq_cold={seq_cold / sweep_cold:.1f}x")
+
+    # ---- epoch-stacked device BFS: a whole timeline's per-epoch tables
+    # in ONE compiled program ----
+    gb = Torus(8, 8, 4, 2) if quick else Torus(8, 8, 8, 8)
+    E = 4 if quick else 16
+    churn = FaultSchedule.random_events(gb, 2 * E, 512, seed=7,
+                                        policy="adaptive", node_events=True)
+    cb = churn.compile(gb, 512)
+    link, node = cb.link_ok_stack(gb), cb.node_ok_stack(gb)
+    Eb = link.shape[0]
+    fault_aware_next_hop_device(gb, link, node)    # compile
+    best_bfs = float("inf")
+    for _ in range(REPS if quick else 1):
+        t0 = time.perf_counter()
+        fault_aware_next_hop_device(gb, link, node)
+        best_bfs = min(best_bfs, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    fault_aware_next_hop(gb, link[0], node[0])
+    host_one = time.perf_counter() - t0
+    emit(f"transient/bfs_epochs{Eb}/N={gb.order}", best_bfs * 1e6,
+         f"bfs_epochs_per_s={Eb / best_bfs:.2f};"
+         f"device_s={best_bfs:.2f};host_est_s={host_one * Eb:.1f};"
+         f"device_vs_host={host_one * Eb / best_bfs:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,10 +10,11 @@ from .crystals import (BCC, FCC, PC, RTT, FourD_BCC, FourD_FCC, Lip, Torus,
 from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
                         faulted_average_distance, faulted_diameter,
                         faulted_distance_matrix, faulted_distance_profile,
-                        faulted_distance_sweep, fcc_average_distance,
-                        fcc_diameter, mixed_torus_diameter,
-                        pc_average_distance, pc_diameter, summarize,
-                        torus_average_distance)
+                        faulted_distance_sweep, faulted_schedule_stats,
+                        fcc_average_distance, fcc_diameter,
+                        mixed_torus_diameter, pc_average_distance,
+                        pc_diameter, summarize, torus_average_distance)
+from .fault_schedule import CompiledSchedule, FaultSchedule
 from .lattice import LatticeGraph
 from .routing import (HierarchicalRouter, fault_aware_next_hop,
                       fault_aware_next_hop_device, make_router,
@@ -33,6 +34,8 @@ from .throughput import (bcc_throughput_bound, channel_load,
                          channel_load_device, channel_load_uniform,
                          fault_aware_channel_load,
                          fault_aware_saturation_throughput,
+                         fault_aware_schedule_load,
+                         fault_aware_schedule_saturation,
                          fcc_throughput_bound, measured_saturation_throughput,
                          mixed_torus_throughput_bound, pc_throughput_bound,
                          symmetric_throughput_bound)
@@ -64,4 +67,6 @@ __all__ = [
     "faulted_distance_matrix", "faulted_distance_profile",
     "faulted_distance_sweep",
     "faulted_average_distance", "faulted_diameter",
+    "FaultSchedule", "CompiledSchedule", "faulted_schedule_stats",
+    "fault_aware_schedule_load", "fault_aware_schedule_saturation",
 ]

@@ -187,6 +187,23 @@ def faulted_distance_sweep(g: LatticeGraph, scenarios) -> dict:
             "reachable_pairs": np.asarray(pairs, np.int64)}
 
 
+def faulted_schedule_stats(g: LatticeGraph, schedule, slots: int = 512
+                           ) -> dict:
+    """Per-EPOCH degraded-distance curves of a transient-fault timeline
+    (`repro.core.fault_schedule.FaultSchedule`, or an already-compiled
+    `CompiledSchedule`): the schedule's epochs are static scenarios, so
+    the whole timeline reuses `faulted_distance_sweep`'s one-compile
+    device BFS — K epochs of (N, N) relaxation in one program.
+
+    Returns `faulted_distance_sweep`'s dict plus `epoch_start_slot`
+    ((E,) — epoch e covers slots [start[e], start[e+1]))."""
+    from .fault_schedule import ensure_compiled
+    compiled = ensure_compiled(schedule, g, slots)
+    out = faulted_distance_sweep(g, compiled.epochs)
+    out["epoch_start_slot"] = np.asarray(compiled.starts, np.int64)
+    return out
+
+
 def faulted_distance_profile(g: LatticeGraph, scenario,
                              dist: np.ndarray | None = None) -> np.ndarray:
     """hist[k] = #ordered live reachable pairs at distance k ≥ 1 in the

@@ -1,0 +1,298 @@
+"""Transient-fault timelines for lattice-graph fabrics.
+
+A `Scenario` (PR 3/4) describes a *statically* degraded network.  Real
+systems live with churn: links flap, nodes die and come back mid-run.
+A `FaultSchedule` is the declarative time axis over that fault space —
+an ordered list of fault/repair **events**
+
+    (slot, kind, target)     kind ∈ {link_down, link_up,
+                                     node_down, node_up}
+
+applied on top of a base `Scenario` (initial faults + routing policy).
+An event at slot ``s`` takes effect *from* slot ``s`` onward (the whole
+of slot ``s`` already sees the new world).
+
+The spec compiles against a graph and a run length into a
+`CompiledSchedule`: the run is partitioned into **epochs** — maximal
+slot ranges with a constant fault pattern — each of which is an ordinary
+static `Scenario`, plus per-epoch mask stacks ``(E, …)`` and a
+``slot→epoch`` map.  Consecutive epochs whose fault state is identical
+are merged (a repair of a live link is a no-op, not a boundary), so a
+schedule whose events never change anything compiles to E = 1 — and a
+single-epoch schedule run is bitwise-equal to the static `Scenario` run
+(tests/test_transient_sim.py pins this on every scenario × pattern
+differential cell).
+
+Downstream consumers (`repro.core.simulation`, the `distances` /
+`throughput` fault-aware rebuilds) never branch on events in a hot loop:
+they consume the stacked per-epoch masks as traced device inputs and the
+slot→epoch map as a gather index — see docs/scenarios.md ("Transient
+faults") for the threading through all three `slot_step` implementations
+and the per-slot accounting semantics (enqueued packets at a node that
+dies are dropped; conservation holds at every slot, not just at run
+end).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from .lattice import LatticeGraph
+from .scenario import Scenario
+
+EVENT_KINDS = ("link_down", "link_up", "node_down", "node_up")
+
+
+def _canonical_link(g: LatticeGraph, u: int, p: int) -> tuple[int, int]:
+    """Undirected identity of channel (u, p): min of the two directed
+    endpoints, so kill/repair pairs match regardless of which side the
+    caller names."""
+    v = int(g.neighbor_indices[u, p])
+    return min((int(u), int(p)), (v, int(p) ^ 1))
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """Ordered fault/repair events over a base scenario (module docstring).
+
+    events: tuple of ``(slot, kind, target)`` — target is ``(node, port)``
+    for link events, a node index for node events.  Events are kept in
+    slot order (stable for same-slot events: they apply in listed order);
+    repairs of live targets and re-kills of dead ones are no-ops.
+    """
+
+    events: tuple = ()
+    base: Scenario = Scenario()
+    name: str = "schedule"
+
+    def __post_init__(self):
+        norm = []
+        for ev in self.events:
+            try:
+                slot, kind, target = ev
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"event {ev!r} is not a (slot, kind, target) triple")
+            if kind not in EVENT_KINDS:
+                raise ValueError(
+                    f"unknown event kind {kind!r}; expected one of "
+                    f"{EVENT_KINDS}")
+            if kind.startswith("link"):
+                try:
+                    u, p = target
+                except (TypeError, ValueError):
+                    raise ValueError(
+                        f"link event target {target!r} is not a "
+                        f"(node, port) pair")
+                target = (int(u), int(p))
+            else:
+                if isinstance(target, (tuple, list)):
+                    if len(target) != 1:
+                        raise ValueError(
+                            f"node event target {target!r} is not a "
+                            f"single node index")
+                    target = target[0]
+                target = int(target)
+            norm.append((int(slot), kind, target))
+        norm.sort(key=lambda ev: ev[0])        # stable: listed order kept
+        object.__setattr__(self, "events", tuple(norm))
+
+    @property
+    def policy(self) -> str:
+        return self.base.policy
+
+    def with_policy(self, policy: str) -> "FaultSchedule":
+        return replace(self, base=self.base.with_policy(policy),
+                       name=f"{self.name}/{policy}")
+
+    @property
+    def is_static(self) -> bool:
+        """True iff no events — the schedule is its base scenario."""
+        return not self.events
+
+    # -- compilation --------------------------------------------------------
+    def compile(self, g: LatticeGraph, slots: int) -> "CompiledSchedule":
+        """Partition a `slots`-long run into constant-fault epochs.
+
+        Events at slot ≤ 0 fold into the initial state; events at
+        slot ≥ `slots` never take effect in this run and are dropped.
+        Consecutive identical fault states merge (no spurious epochs).
+        """
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        dead_links = {_canonical_link(g, u, p)
+                      for u, p in self.base.dead_links}
+        dead_nodes = set(int(u) for u in self.base.dead_nodes)
+        by_slot: dict[int, list] = {}
+        for slot, kind, target in self.events:
+            s = max(slot, 0)
+            if s >= slots:
+                continue
+            by_slot.setdefault(s, []).append((kind, target))
+
+        def apply(kind, target):
+            if kind == "link_down":
+                dead_links.add(_canonical_link(g, *target))
+            elif kind == "link_up":
+                dead_links.discard(_canonical_link(g, *target))
+            elif kind == "node_down":
+                dead_nodes.add(target)
+            else:
+                dead_nodes.discard(target)
+
+        def snapshot(at: int) -> Scenario:
+            return Scenario(dead_links=tuple(sorted(dead_links)),
+                            dead_nodes=tuple(sorted(dead_nodes)),
+                            policy=self.base.policy,
+                            name=f"{self.name}@{at}")
+
+        for kind, target in by_slot.pop(0, []):
+            apply(kind, target)
+        epochs = [snapshot(0)]
+        starts = [0]
+        for s in sorted(by_slot):
+            for kind, target in by_slot[s]:
+                apply(kind, target)
+            snap = snapshot(s)
+            prev = epochs[-1]
+            if (snap.dead_links == prev.dead_links
+                    and snap.dead_nodes == prev.dead_nodes):
+                continue                       # no-op events: no boundary
+            epochs.append(snap)
+            starts.append(s)
+        starts_np = np.asarray(starts, dtype=np.int64)
+        slot2epoch = (np.searchsorted(starts_np, np.arange(slots),
+                                      side="right") - 1).astype(np.int32)
+        return CompiledSchedule(
+            epochs=tuple(epochs), starts=tuple(starts),
+            slot2epoch=slot2epoch, policy=self.base.policy,
+            slots=int(slots), name=self.name)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_scenario(cls, scenario: Scenario | None) -> "FaultSchedule":
+        """Degenerate (event-free) schedule: compiles to one epoch that IS
+        the scenario — the bitwise-equality bridge to the static engine."""
+        scenario = scenario or Scenario()
+        return cls(base=scenario, name=f"static:{scenario.name}")
+
+    @classmethod
+    def link_flap(cls, link: tuple[int, int], down_at: int, up_at: int,
+                  policy: str | None = None, base: Scenario | None = None,
+                  ) -> "FaultSchedule":
+        """One link dies at `down_at` and is repaired at `up_at` — the
+        canonical transient-fault smoke scenario.  `policy=None` keeps
+        the base scenario's policy (DOR for a fresh base); an explicit
+        `policy` overrides it."""
+        if up_at <= down_at:
+            raise ValueError(
+                f"repair slot {up_at} must follow failure slot {down_at}")
+        base = base or Scenario()
+        if policy is not None and base.policy != policy:
+            base = replace(base, policy=policy)
+        return cls(events=((down_at, "link_down", link),
+                           (up_at, "link_up", link)),
+                   base=base,
+                   name=f"flap{link}@{down_at}-{up_at}")
+
+    @classmethod
+    def random_events(cls, g: LatticeGraph, k: int, slots: int,
+                      seed: int = 0, policy: str = "adaptive",
+                      node_events: bool = False) -> "FaultSchedule":
+        """k random link (and optionally node) fault/repair events at
+        uniform slots — the property-test / benchmark generator.  Repairs
+        target previously-killed entities when any exist, so timelines
+        exercise fail→repair→fail chains rather than pure decay."""
+        rng = np.random.default_rng(seed)
+        events = []
+        downed_links: list[tuple[int, int]] = []
+        downed_nodes: list[int] = []
+        for _ in range(int(k)):
+            slot = int(rng.integers(0, slots))
+            pick_node = node_events and bool(rng.integers(0, 2))
+            repair = bool(rng.integers(0, 2))
+            if pick_node:
+                if repair and downed_nodes:
+                    u = downed_nodes.pop(int(rng.integers(
+                        0, len(downed_nodes))))
+                    events.append((slot, "node_up", u))
+                else:
+                    u = int(rng.integers(1, g.order))   # keep origin alive
+                    downed_nodes.append(u)
+                    events.append((slot, "node_down", u))
+            else:
+                if repair and downed_links:
+                    link = downed_links.pop(int(rng.integers(
+                        0, len(downed_links))))
+                    events.append((slot, "link_up", link))
+                else:
+                    link = (int(rng.integers(0, g.order)),
+                            int(rng.integers(0, 2 * g.n)))
+                    downed_links.append(link)
+                    events.append((slot, "link_down", link))
+        return cls(events=tuple(events),
+                   base=Scenario(policy=policy),
+                   name=f"random{k}@{seed}")
+
+
+@dataclass(frozen=True)
+class CompiledSchedule:
+    """A `FaultSchedule` bound to a graph and run length: per-epoch static
+    scenarios plus the slot→epoch index map (see `FaultSchedule.compile`).
+    """
+
+    epochs: tuple[Scenario, ...]
+    starts: tuple[int, ...]          # starts[e] = first slot of epoch e
+    slot2epoch: np.ndarray           # (slots,) int32
+    policy: str
+    slots: int
+    name: str = "schedule"
+
+    @property
+    def E(self) -> int:
+        return len(self.epochs)
+
+    @property
+    def has_dead_nodes(self) -> bool:
+        """True iff ANY epoch kills nodes — the program-structure bit the
+        simulator's destination sampling specializes on."""
+        return any(e.dead_nodes for e in self.epochs)
+
+    def epoch_of(self, slot: int) -> int:
+        return int(self.slot2epoch[slot])
+
+    def scenario_at(self, slot: int) -> Scenario:
+        """The static fault pattern in force during `slot`."""
+        return self.epochs[self.epoch_of(slot)]
+
+    def fingerprint(self, g: LatticeGraph) -> tuple:
+        """Hashable identity for compiled-runner caches (reference oracle:
+        masks are baked, so the full timeline is the key)."""
+        return ("schedule",
+                tuple(e.fingerprint(g) for e in self.epochs),
+                self.slot2epoch.tobytes())
+
+    # -- stacked masks -------------------------------------------------------
+    def link_ok_stack(self, g: LatticeGraph) -> np.ndarray:
+        """(E, N, 2n) per-epoch channel-liveness masks."""
+        return np.stack([e.link_ok(g) for e in self.epochs])
+
+    def node_ok_stack(self, g: LatticeGraph) -> np.ndarray:
+        """(E, N) per-epoch node-liveness masks."""
+        return np.stack([e.node_ok(g) for e in self.epochs])
+
+
+def ensure_compiled(schedule, g: LatticeGraph, slots: int
+                    ) -> CompiledSchedule:
+    """Normalize a schedule argument (every schedule-taking API funnels
+    through here): a `FaultSchedule` compiles against this run's length;
+    an already-compiled `CompiledSchedule` must match it — a silent
+    slots mismatch would index epochs the run never reaches."""
+    if isinstance(schedule, CompiledSchedule):
+        if schedule.slots != slots:
+            raise ValueError(
+                f"schedule was compiled for {schedule.slots} slots, "
+                f"this run has {slots}")
+        return schedule
+    return schedule.compile(g, slots)

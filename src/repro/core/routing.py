@@ -373,6 +373,26 @@ def _get_fault_bfs(N: int, P: int, with_next_hop: bool = True):
     return _FAULT_BFS_CACHE[key]
 
 
+def _get_fault_bfs_stacked(N: int, P: int):
+    """`lax.map` of the min-plus relaxation over a leading epoch/scenario
+    axis of stacked masks: the relaxation body compiles ONCE and the map
+    runs it sequentially per mask set, so the (N, N) distance front is
+    resident once — the epoch-stacked mode `fault_aware_next_hop_device`
+    exposes for per-epoch curves of a `FaultSchedule`."""
+    key = (N, P, "stacked")
+    if key not in _FAULT_BFS_CACHE:
+        import jax
+        relax = _get_fault_bfs(N, P)
+
+        def stacked(nbr, eff_ok, link_ok, node_ok):
+            return jax.lax.map(
+                lambda m: relax(nbr, m[0], m[1], m[2]),
+                (eff_ok, link_ok, node_ok))
+
+        _FAULT_BFS_CACHE[key] = jax.jit(stacked)
+    return _FAULT_BFS_CACHE[key]
+
+
 def fault_aware_next_hop_device(g: LatticeGraph, link_ok: np.ndarray,
                                 node_ok: np.ndarray | None = None
                                 ) -> tuple[np.ndarray, np.ndarray]:
@@ -384,14 +404,33 @@ def fault_aware_next_hop_device(g: LatticeGraph, link_ok: np.ndarray,
     are exactly the host tables (same distances, same first-live-port
     rule); the win is scale — the host loop is N sequential BFS passes in
     Python, this is one compiled program, so datacenter-sized fault
-    sweeps (`distances.faulted_distance_sweep`) become feasible."""
+    sweeps (`distances.faulted_distance_sweep`) become feasible.
+
+    STACKED-EPOCH mode: pass `link_ok` of shape (E, N, 2n) (and
+    optionally `node_ok` of shape (E, N)) — e.g. the per-epoch masks of a
+    `fault_schedule.CompiledSchedule` — and the relaxation runs under
+    `lax.map` over the E mask sets in ONE compiled program, returning
+    (E, N, N) dist / next-hop stacks.  `distances.faulted_schedule_stats`
+    and `throughput.fault_aware_schedule_load` build their per-epoch
+    curves on this path."""
     import jax.numpy as jnp
 
     N, P = g.order, 2 * g.n
     link_ok = np.asarray(link_ok, dtype=bool)
+    nbr = g.neighbor_indices.astype(np.int32)
+    if link_ok.ndim == 3:                                  # (E, N, 2n)
+        E = link_ok.shape[0]
+        node_ok = (np.ones((E, N), dtype=bool) if node_ok is None
+                   else np.asarray(node_ok, dtype=bool))
+        if node_ok.ndim == 1:
+            node_ok = np.broadcast_to(node_ok, (E, N))
+        eff_ok = link_ok & node_ok[:, :, None] & node_ok[:, nbr]
+        dist, nh = _get_fault_bfs_stacked(N, P)(
+            jnp.asarray(nbr), jnp.asarray(eff_ok), jnp.asarray(link_ok),
+            jnp.asarray(node_ok))
+        return np.asarray(dist), np.asarray(nh)
     node_ok = (np.ones(N, dtype=bool) if node_ok is None
                else np.asarray(node_ok, dtype=bool))
-    nbr = g.neighbor_indices.astype(np.int32)
     eff_ok = link_ok & node_ok[:, None] & node_ok[nbr]
     dist, nh = _get_fault_bfs(N, P)(
         jnp.asarray(nbr), jnp.asarray(eff_ok), jnp.asarray(link_ok),

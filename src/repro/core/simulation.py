@@ -60,6 +60,35 @@ min-reduction per slot.  Both keep every *semantic* randomness source —
 Bernoulli injection, uniform destinations, and the Remark-30 record
 coin.
 
+**Transient faults.**  A `repro.core.fault_schedule.FaultSchedule`
+(ordered fault/repair events) threads a TIME axis through the same
+mask machinery: the schedule compiles to per-epoch mask stacks ``(E, …)``
+plus a slot→epoch map, all of which ride in the state as traced inputs —
+the batched and fused paths gather the current epoch's masks inside the
+existing `lax.scan` carry (one dynamic index per slot; no per-epoch
+retrace, and the pristine path keeps its static specialization), while
+the reference oracle bakes the stacks and stays the per-slot semantic
+authority.  Timeline semantics (tests/test_transient_sim.py):
+
+  * packets enqueued at a node that dies are DROPPED that slot and
+    counted, so ``delivered + in_flight + dropped == injected`` holds at
+    *every* slot (with warmup=0), not just at run end — scheduled runs
+    emit a per-slot `SimTimeline` asserting exactly that;
+  * injection at currently-dead sources is masked per-epoch, and fixed
+    patterns drop packets aimed at a currently-dead destination;
+  * adaptive/escape re-consult `routing_engine.policy_ports` against the
+    current epoch's masks every slot (a carried port can go stale when
+    the world changes under a waiting packet); DOR ports are
+    liveness-independent and keep the carried-port fast path;
+  * a degenerate single-epoch schedule (E = 1) is BITWISE-equal to the
+    static `Scenario` run — the whole static engine is the E = 1 special
+    case of the timeline engine.
+
+`simulate_schedule_sweep(g, pattern, schedules, loads, seeds)` runs K
+timelines × loads × seeds through ONE compiled program (schedules pad
+their epoch stacks to a common E; the slot→epoch maps are per-lane
+traced inputs, so padding is free).
+
 Throughput is reported in phits/cycle/node = packets/slot/node.
 
 **Scenario engine.**  Both implementations accept a `repro.core.scenario.
@@ -87,6 +116,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .fault_schedule import CompiledSchedule, FaultSchedule, ensure_compiled
 from .lattice import LatticeGraph
 from .routing import make_router
 from .routing_engine import canonical_reduce, policy_ports
@@ -169,6 +199,29 @@ def pattern_table(g: LatticeGraph, pattern: str, seed: int = 0) -> np.ndarray | 
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class SimTimeline:
+    """Per-slot counter trace of a scheduled (transient-fault) run: each
+    array has shape (slots,) — cumulative counted totals AFTER each slot,
+    plus the instantaneous queue occupancy and the per-slot count of
+    dead-channel crossings (an exact audit: always zero).  With warmup=0
+    conservation holds at EVERY slot, not just at run end."""
+
+    delivered: np.ndarray
+    injected: np.ndarray
+    dropped: np.ndarray
+    in_flight: np.ndarray
+    dead_crossings: np.ndarray
+
+    def conservation_violations(self) -> np.ndarray:
+        """Slots where delivered + in_flight + dropped != injected."""
+        return np.flatnonzero(
+            self.injected != self.delivered + self.dropped + self.in_flight)
+
+    def conservation_ok(self) -> bool:
+        return self.conservation_violations().size == 0
+
+
+@dataclass(frozen=True)
 class SimResult:
     accepted_load: float      # phits / cycle / node
     avg_latency_cycles: float
@@ -180,6 +233,8 @@ class SimResult:
     # (N, 2n) per-channel packet crossings, counted over ALL slots; only
     # tracked for non-trivial scenarios (the dead-link audit)
     link_use: np.ndarray | None = field(default=None, compare=False)
+    # per-slot counter trace, only emitted by FaultSchedule runs
+    timeline: SimTimeline | None = field(default=None, compare=False)
 
 
 _RUNNER_CACHE: dict = {}
@@ -193,15 +248,19 @@ def _next_port(rec):
     return 2 * dim + (sgn < 0), dim, sgn
 
 
-def _inject(state, key, new_dst, new_rec, new_birth, ctx):
+def _inject(state, key, new_dst, new_rec, new_birth, ctx, masks=None):
     """Reference injection stage (per-slot PRNG draws + scatter writes,
     bitwise-stable vs the pre-batching simulator for trivial scenarios).
     Runs after transit so in-flight traffic has priority; entering a ring
     costs 2 free slots (bubble rule).  Under a non-trivial scenario dead
     sources never want, destinations are sampled over live nodes, packets
     of fixed patterns aimed at a dead node are *dropped*, and the
-    injection port follows the scenario policy."""
+    injection port follows the scenario policy.  `masks` overrides the
+    scenario mask entries with the CURRENT EPOCH's slices when the run
+    follows a `FaultSchedule` (the reference path resolves the epoch once
+    per slot and hands the static-shaped masks down here)."""
     N, P = ctx["N"], ctx["P"]
+    m = ctx if masks is None else {**ctx, **masks}
     fixed_dst = ctx["fixed_dst"]
     trivial = ctx["trivial"]
     labels, hermite, strides = ctx["labels"], ctx["hermite"], ctx["strides"]
@@ -210,14 +269,14 @@ def _inject(state, key, new_dst, new_rec, new_birth, ctx):
     k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
     want_new = jax.random.uniform(k1, (N,)) < state["load"]
     if not trivial:
-        want_new = want_new & ctx["inj_ok"]
+        want_new = want_new & m["inj_ok"]
     want = want_new | (state["backlog"] > 0)
     if fixed_dst:
         d = state["dst_table"]
     elif not trivial and ctx["has_dead_nodes"]:
         # uniform over *live* destinations (self-draws carry di == 0 and
         # simply back-log, exactly like a fixed self-pattern)
-        d = ctx["live_tbl"][jax.random.randint(k2, (N,), 0, ctx["n_live"])]
+        d = m["live_tbl"][jax.random.randint(k2, (N,), 0, m["n_live"])]
     else:
         d = jax.random.randint(k2, (N,), 0, N - 1)
         d = jnp.where(d >= jnp.arange(N), d + 1, d)
@@ -230,8 +289,8 @@ def _inject(state, key, new_dst, new_rec, new_birth, ctx):
         drop = None
         ipc = inj_port
     else:
-        inj_port = policy_ports(r, ctx["link_ok"], ctx["policy"])
-        drop = want & ~ctx["dst_ok"][d]
+        inj_port = policy_ports(r, m["link_ok"], ctx["policy"])
+        drop = want & ~m["dst_ok"][d]
         ipc = jnp.minimum(inj_port, P - 1)        # clamp the P sentinel
     freeq = jnp.take_along_axis(
         (new_dst < 0).sum(axis=2), ipc[:, None], axis=1)[:, 0]
@@ -262,8 +321,15 @@ def _make_traffic(ctx, state, key, slots: int):
     destination as a *delta index* drawn directly (dst uniform over the
     N−1 other nodes ⟺ delta uniform over the nonzero canonical labels),
     reduced to the record and its first DOR port via the `rec_ab` /
-    `port_ab` tables."""
+    `port_ab` tables.
+
+    Under a `FaultSchedule` (ctx["scheduled"]) the mask state entries
+    carry a leading epoch axis and `state["slot2epoch"]` maps each slot
+    to its epoch: live-destination sampling and non-DOR injection ports
+    gather the CURRENT epoch's masks per slot.  With E = 1 every gather
+    reproduces the static values bitwise."""
     N, P, Q = ctx["N"], ctx["P"], ctx["Q"]
+    scheduled = ctx.get("scheduled", False)
     ku, kd, kc, kp = jax.random.split(jax.random.fold_in(key, 2), 4)
     u = jax.random.uniform(ku, (slots, N))
     coin = (jax.random.uniform(kc, (slots, N)) < 0.5).astype(jnp.int32)
@@ -276,8 +342,15 @@ def _make_traffic(ctx, state, key, slots: int):
         # delta on device (self-draws carry di == 0 and back-log).  The
         # live table is a traced state input padded to N entries; the
         # traced n_live bound keeps the draw exactly uniform over them.
-        dstn = state["live_tbl"][
-            jax.random.randint(kd, (slots, N), 0, state["n_live"])]
+        if scheduled:
+            s2e = state["slot2epoch"]
+            lt = state["live_tbl"][s2e]                    # (slots, N)
+            idx = jax.random.randint(
+                kd, (slots, N), 0, state["n_live"][s2e][:, None])
+            dstn = jnp.take_along_axis(lt, idx, axis=1)
+        else:
+            dstn = state["live_tbl"][
+                jax.random.randint(kd, (slots, N), 0, state["n_live"])]
         di = _delta_idx(ctx["labels"][None, :, :], ctx["labels"][dstn],
                         ctx["hermite"], ctx["strides"])
     else:
@@ -286,6 +359,9 @@ def _make_traffic(ctx, state, key, slots: int):
     if ctx["trivial"] or ctx["policy"] == "dor":
         # DOR ignores liveness, so the precomputed port table stays valid
         p = ctx["port_ab"][di, coin]
+    elif scheduled:
+        p = policy_ports(r, state["link_ok"][state["slot2epoch"]],
+                         ctx["policy"]).astype(jnp.int8)
     else:
         p = policy_ports(r, state["link_ok"][None, :, :],
                          ctx["policy"]).astype(jnp.int8)
@@ -300,11 +376,13 @@ def _make_traffic(ctx, state, key, slots: int):
 
 
 def _finish_slot(state, counted_from, delivered, lat_sum, can, drop=None,
-                 **updates):
+                 qdrop=None, **updates):
     slot = state["slot"]
     counted = slot >= counted_from
     # dropped packets count as injected so that conservation stays exact:
-    # injected == delivered + in_flight + dropped
+    # injected == delivered + in_flight + dropped.  Queue drops (packets
+    # already in flight when their node dies, `qdrop`) were counted
+    # injected at injection time, so they increment ONLY `dropped`.
     inj = can.sum() if drop is None else can.sum() + drop.sum()
     out = dict(
         state, **updates, slot=slot + 1,
@@ -312,7 +390,8 @@ def _finish_slot(state, counted_from, delivered, lat_sum, can, drop=None,
         lat_sum=state["lat_sum"] + jnp.where(counted, lat_sum, 0),
         injected=state["injected"] + jnp.where(counted, inj, 0))
     if drop is not None:
-        out["dropped"] = state["dropped"] + jnp.where(counted, drop.sum(), 0)
+        d = drop.sum() if qdrop is None else drop.sum() + qdrop
+        out["dropped"] = state["dropped"] + jnp.where(counted, d, 0)
     return out
 
 
@@ -380,16 +459,47 @@ def _make_slot_step_batched(ctx, warmup: int):
         return jnp.take_along_axis(padded, port_flat.astype(jnp.int32),
                                    axis=1)
 
+    scheduled = ctx.get("scheduled", False)
+
     def slot_step(state, tr):
         # birth doubles as the occupancy marker (−1 = free slot): the
         # destination index itself is never consulted in transit — delivery
         # is decided by the record reaching zero — so the batched state
         # carries no dst array at all.
         rec, birth, port = state["rec"], state["birth"], state["port"]
-        link_ok = None if trivial else state["link_ok"]
+        if scheduled:
+            # resolve the current epoch INSIDE the scan carry: one dynamic
+            # gather per (E, …) mask stack, no per-epoch retrace.  Packets
+            # enqueued at a node that just died are dropped HERE (counted
+            # into `dropped` below), so per-slot conservation holds; its
+            # injection BACKLOG dies with it too (pending demand is not a
+            # packet — clearing it keeps a dead node from injecting while
+            # dead, and is a no-op at E=1 where dead nodes never backlog)
+            e = tr["epoch"]
+            link_ok = state["link_ok"][e]
+            inj_ok_e = state["inj_ok"][e]
+            deadq = (birth >= 0) & ~inj_ok_e[:, None, None]
+            qdrop = deadq.sum()
+            birth = jnp.where(deadq, -1, birth)
+            backlog0 = jnp.where(inj_ok_e, state["backlog"], 0)
+        else:
+            link_ok = None if trivial else state["link_ok"]
+            qdrop = None
+            backlog0 = state["backlog"]
         slot = state["slot"]
         occ = birth >= 0                                   # (N, P, Q)
-        port = jnp.where(occ, port, NO_PORT)
+        if scheduled and ctx["policy"] != "dor":
+            # adaptive/escape re-consult policy_ports against the CURRENT
+            # epoch's masks: a carried port can go stale when the world
+            # changes under a waiting packet.  With E = 1 the recompute is
+            # the identity (the carried port was this very function of the
+            # same rec/link_ok), keeping the static run bitwise-equal.
+            port = jnp.where(
+                occ,
+                policy_ports(rec, link_ok[:, None, None, :],
+                             ctx["policy"]).astype(jnp.int8), NO_PORT)
+        else:
+            port = jnp.where(occ, port, NO_PORT)
         port_flat = port.reshape(N, PQ)
 
         # ---- winner per (node, out-port): segmented min over encoded keys --
@@ -493,9 +603,11 @@ def _make_slot_step_batched(ctx, warmup: int):
         # injection from pre-drawn traffic (after transit: in-flight
         # traffic has priority; entering a ring costs 2 free slots)
         want_new = tr["u"] < state["load"]
-        if not trivial:
+        if scheduled:
+            want_new = want_new & inj_ok_e
+        elif not trivial:
             want_new = want_new & state["inj_ok"]
-        want = want_new | (state["backlog"] > 0)
+        want = want_new | (backlog0 > 0)
         depcnt = dep_slot.reshape(N, P, Q).sum(axis=2)
         freeq_post = free0 + depcnt - acc                  # after transit
         inj_port = tr["p"].astype(jnp.int32)
@@ -507,7 +619,8 @@ def _make_slot_step_batched(ctx, warmup: int):
             # the drop mask is pattern-specific, so — like di_fixed — it
             # lives in the STATE: the compiled runner stays shared across
             # fixed patterns (the cache key only carries fixed-ness)
-            drop = want & ~state["dst_live_fixed"]
+            drop = want & ~(state["dst_live_fixed"][e] if scheduled
+                            else state["dst_live_fixed"])
             ipc = jnp.minimum(inj_port, P - 1)             # clamp P sentinel
             can = (want & ~drop & (jnp.take_along_axis(
                 freeq_post, ipc[:, None], axis=1)[:, 0] >= 2)
@@ -515,7 +628,7 @@ def _make_slot_step_batched(ctx, warmup: int):
         imask = (can[:, None, None]
                  & (ports8[None, :, None] == tr["p"][:, None, None])
                  & (qi == slot_l[:, :, None]))
-        backlog = state["backlog"] + want_new - can
+        backlog = backlog0 + want_new - can
         if drop is not None:
             backlog = backlog - drop
         backlog = jnp.clip(backlog, 0, 1 << 30)
@@ -536,10 +649,24 @@ def _make_slot_step_batched(ctx, warmup: int):
             # dead-channel audit: count every crossing (all slots, not just
             # measured ones — "never" means never)
             updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
-        return _finish_slot(state, warmup, delivered, lat_sum, can, drop,
-                            **updates), None
+        out = _finish_slot(state, warmup, delivered, lat_sum, can, drop,
+                           qdrop=qdrop, **updates)
+        return out, (_timeline_y(out, new_birth, dep_port, link_ok)
+                     if scheduled else None)
 
     return slot_step
+
+
+def _timeline_y(out, occupancy, dep_port, link_ok):
+    """One per-slot `SimTimeline` sample: post-slot cumulative counters,
+    current queue occupancy, and the dead-channel-crossing audit (crossing
+    a channel while it is dead is impossible by construction — arbitration
+    masks it — so this is an exact always-zero regression tripwire)."""
+    crossed = dep_port if dep_port.dtype == jnp.bool_ else dep_port != 0
+    return dict(delivered=out["delivered"], injected=out["injected"],
+                dropped=out["dropped"],
+                in_flight=(occupancy >= 0).sum(),
+                dead_crossings=(crossed & ~link_ok).sum())
 
 
 def _make_slot_step_fused(ctx, warmup: int):
@@ -556,25 +683,51 @@ def _make_slot_step_fused(ctx, warmup: int):
     N = ctx["N"]
     nbr = ctx["nbr"]
     trivial = ctx["trivial"]
+    scheduled = ctx.get("scheduled", False)
     interpret = not _on_tpu()
 
     def slot_step(state, tr):
         slot = state["slot"]
+        rec, birth, port = state["rec"], state["birth"], state["port"]
+        if scheduled:
+            # epoch resolution + dead-node queue kill + the stale-port
+            # policy re-consult all happen HERE, in the scan carry — the
+            # kernel itself stays epoch-oblivious (it sees one slot's
+            # static-shaped masks) and bitwise-mirrors the batched step.
+            e = tr["epoch"]
+            link_ok = state["link_ok"][e]
+            inj_ok_e = state["inj_ok"][e]
+            dst_live = state["dst_live_fixed"][e]
+            deadq = (birth >= 0) & ~inj_ok_e[:, None, None]
+            qdrop = deadq.sum()
+            birth = jnp.where(deadq, -1, birth)
+            # a dead node's injection backlog dies with it (see batched)
+            backlog0 = jnp.where(inj_ok_e, state["backlog"], 0)
+            if ctx["policy"] != "dor":
+                port = policy_ports(rec, link_ok[:, None, None, :],
+                                    ctx["policy"]).astype(jnp.int8)
+        else:
+            link_ok = None if trivial else state["link_ok"]
+            dst_live = None if trivial else state["dst_live_fixed"]
+            qdrop = None
+            backlog0 = state["backlog"]
         want_new = tr["u"] < state["load"]
-        if not trivial:
+        if scheduled:
+            want_new = want_new & inj_ok_e
+        elif not trivial:
             want_new = want_new & state["inj_ok"]
-        want = want_new | (state["backlog"] > 0)
+        want = want_new | (backlog0 > 0)
         (new_rec, new_birth, new_port, deliver, lat, can8, drop8,
          dep_port) = fused_slot_step(
-            state["rec"], state["birth"], state["port"], tr["prio"], slot,
+            rec, birth, port, tr["prio"], slot,
             want, tr["r"], tr["p"], tr["v"], nbr,
-            link_ok=None if trivial else state["link_ok"],
-            dst_live_fixed=None if trivial else state["dst_live_fixed"],
+            link_ok=link_ok,
+            dst_live_fixed=dst_live,
             policy="dor" if trivial else ctx["policy"],
             interpret=interpret)
         can = can8 != 0
         drop = None if trivial else (drop8 != 0)
-        backlog = state["backlog"] + want_new - can
+        backlog = backlog0 + want_new - can
         if drop is not None:
             backlog = backlog - drop
         backlog = jnp.clip(backlog, 0, 1 << 30)
@@ -582,8 +735,10 @@ def _make_slot_step_fused(ctx, warmup: int):
                        backlog=backlog)
         if not trivial:
             updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
-        return _finish_slot(state, warmup, (deliver != 0).sum(), lat.sum(),
-                            can, drop, **updates), None
+        out = _finish_slot(state, warmup, (deliver != 0).sum(), lat.sum(),
+                           can, drop, qdrop=qdrop, **updates)
+        return out, (_timeline_y(out, new_birth, dep_port, link_ok)
+                     if scheduled else None)
 
     return slot_step
 
@@ -591,20 +746,43 @@ def _make_slot_step_fused(ctx, warmup: int):
 def _make_slot_step_reference(ctx, warmup: int):
     """The pre-batching per-port sweep (semantic oracle for the batched
     implementation; random output-link arbitration, sequential same-slot
-    space reuse in port order)."""
+    space reuse in port order).  Under a `FaultSchedule` the per-epoch
+    mask stacks stay BAKED constants (full-fingerprint cache key) and the
+    step resolves the current epoch from the slot counter — the oracle
+    defines the per-slot semantics the traced implementations must
+    match."""
     n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
     nbr = ctx["nbr"]
     opp = [p ^ 1 for p in range(P)]
     trivial = ctx["trivial"]
+    scheduled = ctx.get("scheduled", False)
 
     def slot_step(state, key):
         dst, rec, birth = state["dst"], state["rec"], state["birth"]
         slot = state["slot"]
+        if scheduled:
+            e = ctx["slot2epoch"][slot]
+            link_ok = ctx["link_ok"][e]
+            node_ok = ctx["inj_ok"][e]
+            masks = dict(link_ok=link_ok, inj_ok=node_ok, dst_ok=node_ok,
+                         live_tbl=ctx["live_tbl"][e],
+                         n_live=ctx["n_live"][e])
+            deadq = (dst >= 0) & ~node_ok[:, None, None]
+            qdrop = deadq.sum()
+            dst = jnp.where(deadq, -1, dst)
+            # a dead node's injection backlog dies with it (see batched):
+            # _inject reads the cleared value, so a dead source never
+            # injects from stale demand while dead
+            state = dict(state,
+                         backlog=jnp.where(node_ok, state["backlog"], 0))
+        else:
+            link_ok = None if trivial else ctx["link_ok"]
+            masks, qdrop = None, None
         occ = dst >= 0                                     # (N, P, Q)
         if trivial:
             port, _, _ = _next_port(rec)                   # (N, P, Q)
         else:
-            port = policy_ports(rec, ctx["link_ok"][:, None, None, :],
+            port = policy_ports(rec, link_ok[:, None, None, :],
                                 ctx["policy"])
         port = jnp.where(occ, port, -1)
 
@@ -613,7 +791,7 @@ def _make_slot_step_reference(ctx, warmup: int):
         requested = port[..., None] == jnp.arange(P)
         if not trivial:
             # dead channels never arbitrate: packets aimed at them block
-            requested = requested & ctx["link_ok"][:, None, None, :]
+            requested = requested & link_ok[:, None, None, :]
         flatscore = jnp.where(requested, rand[..., None], -1.0)
         flat = flatscore.reshape(N, P * Q, P)
         widx = jnp.argmax(flat, axis=1)                    # (N, P) flat pq index
@@ -631,6 +809,7 @@ def _make_slot_step_reference(ctx, warmup: int):
         # ---- per-link acceptance (each in-queue receives ≤ 1 packet) ----
         delivered = jnp.int32(0)
         lat_sum = jnp.int32(0)
+        dead_crossings = jnp.int32(0)
         new_dst, new_rec, new_birth = dst, rec, birth
         link_use = None if trivial else state["link_use"]
         for p in range(P):
@@ -652,6 +831,8 @@ def _make_slot_step_reference(ctx, warmup: int):
             # stats
             delivered += will_deliver.sum()
             lat_sum += jnp.where(will_deliver, slot + 1 - pk_birth, 0).sum()
+            if scheduled:
+                dead_crossings += (moved & ~link_ok[u, p]).sum()
             if link_use is not None:
                 # crossing of channel (u, p); u ↔ receiver is a bijection,
                 # so the scatter-add never collides
@@ -672,13 +853,20 @@ def _make_slot_step_reference(ctx, warmup: int):
                 jnp.where(ok, pk_birth, new_birth[r_, p, slot_idx]))
 
         new_dst, new_rec, new_birth, backlog, can, drop = _inject(
-            state, key, new_dst, new_rec, new_birth, ctx)
+            state, key, new_dst, new_rec, new_birth, ctx, masks)
         updates = dict(dst=new_dst, rec=new_rec, birth=new_birth,
                        backlog=backlog)
         if link_use is not None:
             updates["link_use"] = link_use
-        return _finish_slot(state, warmup, delivered, lat_sum, can, drop,
-                            **updates), None
+        out = _finish_slot(state, warmup, delivered, lat_sum, can, drop,
+                           qdrop=qdrop, **updates)
+        y = None
+        if scheduled:
+            y = dict(delivered=out["delivered"], injected=out["injected"],
+                     dropped=out["dropped"],
+                     in_flight=(new_dst >= 0).sum(),
+                     dead_crossings=dead_crossings)
+        return out, y
 
     return slot_step
 
@@ -711,18 +899,51 @@ def _scenario_mask_fields(scenario: Scenario, g: LatticeGraph, N: int,
             node_ok[dst_np] if dst_np is not None else np.ones(N, bool)))
 
 
+def _schedule_mask_fields(compiled: CompiledSchedule, g: LatticeGraph,
+                          N: int, dst_np, force_dead_nodes: bool = False,
+                          pad_to: int | None = None) -> dict:
+    """Per-EPOCH stacks of the scenario mask fields, plus the slot→epoch
+    map — the traced time axis of a scheduled run.  `pad_to` repeats the
+    final epoch so K schedules of differing epoch counts can share one
+    compiled program (padded epochs are unreachable: the slot→epoch map
+    never points at them)."""
+    per = [_scenario_mask_fields(s, g, N, dst_np, force_dead_nodes)
+           for s in compiled.epochs]
+    E = pad_to if pad_to is not None else len(per)
+    if E < len(per):
+        raise ValueError(
+            f"pad_to={E} is smaller than the schedule's {len(per)} epochs")
+    per = per + [per[-1]] * (E - len(per))
+    out = {k: jnp.stack([m[k] for m in per])
+           for k in ("link_ok", "inj_ok", "dst_ok", "live_tbl",
+                     "dst_live_fixed")}
+    out["n_live"] = jnp.asarray([m["n_live"] for m in per], jnp.int32)
+    out["has_dead_nodes"] = (any(m["has_dead_nodes"] for m in per)
+                             or force_dead_nodes)
+    out["slot2epoch"] = jnp.asarray(compiled.slot2epoch, jnp.int32)
+    return out
+
+
 def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
               queue: int, scenario: Scenario | None = None,
-              force_masks: bool = False, force_dead_nodes: bool = False):
+              force_masks: bool = False, force_dead_nodes: bool = False,
+              schedule: CompiledSchedule | None = None,
+              pad_epochs: int | None = None):
     """`force_masks=True` builds the mask-threaded (non-trivial) context
     even for the pristine scenario — used by `simulate_scenario_sweep`,
     where a pristine pattern may ride the traced-mask program alongside
     faulted ones (all-live masks reproduce the trivial results);
     `force_dead_nodes=True` additionally gives a dead-node-free pattern
     the dead-node program STRUCTURE (live-table destination sampling over
-    all N nodes), so it can share a sweep with dead-node patterns."""
+    all N nodes), so it can share a sweep with dead-node patterns.
+    `schedule` (a `CompiledSchedule`) builds the TIME-INDEXED context:
+    per-epoch mask stacks (padded to `pad_epochs` when sweeping K
+    schedules of differing epoch counts) plus the slot→epoch map, all
+    traced inputs of the batched/fused programs."""
     scenario = scenario or Scenario()
-    trivial = scenario.is_trivial and not force_masks
+    policy = schedule.policy if schedule is not None else scenario.policy
+    trivial = (schedule is None and scenario.is_trivial
+               and not force_masks)
     dst_np = pattern_table(g, pattern, seed)
     fixed_dst = dst_np is not None
     # records are tiny for every pod-sized lattice — int8 state quarters the
@@ -731,7 +952,7 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     # grow records past the minimal bound, so it gets the wide dtype)
     rec_max = max(int(np.abs(t.records_a).max(initial=0)),
                   int(np.abs(t.records_b).max(initial=0)))
-    rec_dtype = (jnp.int32 if scenario.policy == "escape" or rec_max > 120
+    rec_dtype = (jnp.int32 if policy == "escape" or rec_max > 120
                  else jnp.int8)
     # per-delta-index injection tables: record (Remark-30 pair) + its first
     # DOR port, so traffic generation is two gathers instead of routing work
@@ -751,18 +972,30 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     else:
         di_fixed = np.zeros(t.N, np.int32)
     # the batched/fused cache key carries only the scenario STRUCTURE
-    # (policy × dead-node-ness): masks are traced state inputs, so every
-    # fault pattern of the same structure reuses one compiled runner.  The
-    # reference oracle keeps masks baked (full fingerprint key).
-    hdn = bool(scenario.dead_nodes) or force_dead_nodes
-    scen: dict = dict(trivial=trivial, policy=scenario.policy,
-                      scen_fp=scenario.fingerprint(g),
-                      scen_structure=(("trivial",) if trivial else
-                                      ("traced", scenario.policy, hdn)))
-    if not trivial:
-        scen.update(_scenario_mask_fields(
-            scenario, g, t.N, dst_np if fixed_dst else None,
-            force_dead_nodes))
+    # (policy × dead-node-ness — plus the epoch count for schedules, a
+    # shape): masks are traced state inputs, so every fault pattern of the
+    # same structure reuses one compiled runner.  The reference oracle
+    # keeps masks baked (full fingerprint key).
+    if schedule is not None:
+        fields = _schedule_mask_fields(
+            schedule, g, t.N, dst_np if fixed_dst else None,
+            force_dead_nodes, pad_to=pad_epochs)
+        E = int(fields["link_ok"].shape[0])
+        scen: dict = dict(trivial=False, scheduled=True, policy=policy,
+                          scen_fp=schedule.fingerprint(g),
+                          scen_structure=("schedule", policy,
+                                          fields["has_dead_nodes"], E))
+        scen.update(fields)
+    else:
+        hdn = bool(scenario.dead_nodes) or force_dead_nodes
+        scen = dict(trivial=trivial, scheduled=False, policy=policy,
+                    scen_fp=scenario.fingerprint(g),
+                    scen_structure=(("trivial",) if trivial else
+                                    ("traced", policy, hdn)))
+        if not trivial:
+            scen.update(_scenario_mask_fields(
+                scenario, g, t.N, dst_np if fixed_dst else None,
+                force_dead_nodes))
     return dict(
         n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype, **scen,
         nbr=jnp.asarray(t.neighbors),
@@ -802,11 +1035,18 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
         if not ctx["trivial"]:
             # scenario masks are TRACED inputs: they ride in the state so
             # one compiled runner serves every fault pattern of the same
-            # structure, and scenario sweeps can vmap over them
+            # structure, and scenario sweeps can vmap over them.  Under a
+            # schedule they carry a leading (E,) epoch axis, n_live is an
+            # (E,) vector, and the slot→epoch map joins them.
             state["dst_live_fixed"] = ctx["dst_live_fixed"]
             state["link_ok"] = ctx["link_ok"]
             state["inj_ok"] = ctx["inj_ok"]
-            if ctx["has_dead_nodes"]:
+            if ctx.get("scheduled"):
+                state["slot2epoch"] = ctx["slot2epoch"]
+                if ctx["has_dead_nodes"]:
+                    state["live_tbl"] = ctx["live_tbl"]
+                    state["n_live"] = ctx["n_live"]
+            elif ctx["has_dead_nodes"]:
                 state["live_tbl"] = ctx["live_tbl"]
                 state["n_live"] = jnp.int32(ctx["n_live"])
         del state["dst_table"]
@@ -818,8 +1058,11 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
 
 
 # scenario-dependent traced state inputs (vmapped by the scenario axis of
-# `simulate_scenario_sweep`, shared across the load/seed axes)
-_SCEN_STATE = ("link_ok", "inj_ok", "live_tbl", "n_live", "dst_live_fixed")
+# `simulate_scenario_sweep` / the schedule axis of
+# `simulate_schedule_sweep`, shared across the load/seed axes);
+# slot2epoch only exists in scheduled states
+_SCEN_STATE = ("link_ok", "inj_ok", "live_tbl", "n_live", "dst_live_fixed",
+               "slot2epoch")
 # state entries shared across the load AND seed sweep axes
 _SHARED_STATE = ("dst_table", "di_fixed") + _SCEN_STATE
 
@@ -842,6 +1085,7 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
     constants for the reference oracle (cache key = full fingerprint)."""
     scen_key = (ctx["scen_fp"] if impl == "reference"
                 else ctx["scen_structure"])
+    scheduled = ctx.get("scheduled", False)
     key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
            ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key)
     if key not in _RUNNER_CACHE:
@@ -851,7 +1095,8 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
             def runner(st, key):
                 TRACE_COUNTS[impl] += 1
                 ks = jax.random.split(key, slots)
-                return jax.lax.scan(step, st, ks)[0]
+                final, ys = jax.lax.scan(step, st, ks)
+                return dict(final, timeline=ys) if scheduled else final
         else:
             step = (_make_slot_step_batched(ctx, warmup)
                     if impl == "batched"
@@ -860,19 +1105,27 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
             def runner(st, key):
                 TRACE_COUNTS[impl] += 1
                 tr = _make_traffic(ctx, st, key, slots)
-                return jax.lax.scan(step, st, tr)[0]
+                if scheduled:
+                    # the slot→epoch map is scanned alongside the traffic
+                    # so each step sees its epoch as a scalar
+                    tr["epoch"] = st["slot2epoch"]
+                final, ys = jax.lax.scan(step, st, tr)
+                return dict(final, timeline=ys) if scheduled else final
         # dst_table / di_fixed / scenario masks are shared across both
         # sweep axes, so fixed-pattern traffic is derived once, not once
         # per run
         state_keys = list(_init_state(ctx, 0.0, impl))
         axes = {k: (None if k in _SHARED_STATE else 0) for k in state_keys}
+        # the per-slot timeline ys only exist in scheduled outputs and are
+        # always batched along the vmapped axes
+        out_ax = dict(axes, timeline=0) if scheduled else axes
         if n_seeds > 1:
             # seed axis: same initial state, one key per seed
-            runner = jax.vmap(runner, in_axes=(None, 0), out_axes=axes)
+            runner = jax.vmap(runner, in_axes=(None, 0), out_axes=out_ax)
         if n_loads > 1:
             # load axis: per-load state (the offered load lives in it) and
             # per-load fold of the key (decorrelates sweep points)
-            runner = jax.vmap(runner, in_axes=(axes, 0), out_axes=axes)
+            runner = jax.vmap(runner, in_axes=(axes, 0), out_axes=out_ax)
         if n_scen > 1:
             # outermost scenario axis: only the masks vary; the PRNG key
             # is shared (common random numbers — scenario differences in
@@ -881,6 +1134,8 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
                      for k in state_keys}
             out_sc = {k: (None if k in ("dst_table", "di_fixed") else 0)
                       for k in state_keys}
+            if scheduled:
+                out_sc = dict(out_sc, timeline=0)
             runner = jax.vmap(runner, in_axes=(in_sc, None), out_axes=out_sc)
         _RUNNER_CACHE[key] = jax.jit(runner)
     return _RUNNER_CACHE[key]
@@ -893,6 +1148,7 @@ def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
     # batched state marks free slots with birth < 0
     occ = out.get("dst", out.get("birth"))
     lu = out.get("link_use")
+    tl = out.get("timeline")
     return SimResult(
         accepted_load=delivered / max(measured * N, 1),
         avg_latency_cycles=PACKET_PHITS * float(out["lat_sum"]) / max(delivered, 1),
@@ -901,7 +1157,9 @@ def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
         slots=slots,
         dropped=int(out.get("dropped", 0)),
         in_flight=0 if occ is None else int((np.asarray(occ) >= 0).sum()),
-        link_use=None if lu is None else np.asarray(lu))
+        link_use=None if lu is None else np.asarray(lu),
+        timeline=None if tl is None else SimTimeline(
+            **{k: np.asarray(v) for k, v in tl.items()}))
 
 
 def _result_grid(out, axes_sizes: tuple, impl: str, *, slots: int,
@@ -916,13 +1174,20 @@ def _result_grid(out, axes_sizes: tuple, impl: str, *, slots: int,
     keep = ("delivered", "lat_sum", "injected", "dropped", "link_use",
             occ_key)
     out_np = {k: np.asarray(v) for k, v in out.items() if k in keep}
+    tl = out.get("timeline")
+    tl_np = (None if tl is None
+             else {k: np.asarray(v) for k, v in tl.items()})
     for i, size in enumerate(axes_sizes):
         if size == 1:
             out_np = {k: np.expand_dims(v, i) for k, v in out_np.items()}
+            if tl_np is not None:
+                tl_np = {k: np.expand_dims(v, i) for k, v in tl_np.items()}
     res = np.empty(axes_sizes, dtype=object)
     for idx in np.ndindex(*axes_sizes):
-        res[idx] = _result({k: v[idx] for k, v in out_np.items()},
-                           slots=slots, warmup=warmup, N=N)
+        cell = {k: v[idx] for k, v in out_np.items()}
+        if tl_np is not None:
+            cell["timeline"] = {k: v[idx] for k, v in tl_np.items()}
+        res[idx] = _result(cell, slots=slots, warmup=warmup, N=N)
     return res
 
 
@@ -967,7 +1232,7 @@ def _seed_list(seed: int, seeds) -> list[int] | None:
 
 def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
                 queue, seed, seed_list, tables, impl, scenario,
-                scenarios=None):
+                scenarios=None, schedules=None):
     """Build (runner, broadcast initial state, (L[, S]) key grid) for one
     sweep device program.  Key derivation: run (ℓ, s) of a multi-load
     sweep uses `fold_in(PRNGKey(seeds[s] + 17), ℓ)` — every load point
@@ -981,9 +1246,26 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
     scenario-independent tables are built ONCE (only the mask fields are
     derived per scenario, via `_scenario_mask_fields`);
     `force_dead_nodes` gives every lane the dead-node program structure
-    when any pattern in the sweep kills nodes."""
+    when any pattern in the sweep kills nodes.  `schedules` (a list of K
+    `CompiledSchedule`s, already bound to `slots`) is the transient
+    analogue: per-schedule epoch stacks are padded to a common E and
+    stacked on the same outermost axis — K timelines, one trace, one
+    compile."""
     t = tables or build_tables(g, seed)
-    if scenarios is None:
+    if schedules is not None:
+        E = max(c.E for c in schedules)
+        fdn = any(c.has_dead_nodes for c in schedules)
+        ctx = _make_ctx(t, g, pattern, seed, queue, schedule=schedules[0],
+                        pad_epochs=E, force_dead_nodes=fdn)
+        dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
+                  else None)
+        sched_keys = ["link_ok", "inj_ok", "dst_live_fixed", "slot2epoch"]
+        if ctx["has_dead_nodes"]:
+            sched_keys += ["live_tbl", "n_live"]
+        masks = [{k: ctx[k] for k in sched_keys}] + [
+            _schedule_mask_fields(c, g, t.N, dst_np, fdn, pad_to=E)
+            for c in schedules[1:]]
+    elif scenarios is None:
         ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
         masks = None
     else:
@@ -1011,12 +1293,17 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
         # stack the per-scenario traced masks on the scenario axis (a
         # K=1 sweep has no scenario vmap — ctx's masks are already in
         # the state)
+        scheduled = ctx.get("scheduled", False)
         stack = ["link_ok", "inj_ok", "dst_live_fixed"]
+        if scheduled:
+            stack.append("slot2epoch")
         if ctx["has_dead_nodes"]:
             stack.append("live_tbl")
+            if scheduled:
+                stack.append("n_live")
         for k in stack:
             state[k] = jnp.stack([m[k] for m in masks])
-        if ctx["has_dead_nodes"]:
+        if ctx["has_dead_nodes"] and not scheduled:
             state["n_live"] = jnp.asarray([m["n_live"] for m in masks],
                                           jnp.int32)
     state = dict(state, load=jnp.asarray(loads, jnp.float32) if L > 1
@@ -1039,7 +1326,8 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
              slots: int = 512, warmup: int = 128, queue: int = 4,
              seed: int = 0, tables: SimTables | None = None,
              impl: str = "batched", scenario: Scenario | None = None,
-             fold: int | None = None) -> SimResult:
+             fold: int | None = None,
+             schedule: FaultSchedule | None = None) -> SimResult:
     """Run `slots` packet-slots (16 cycles each) at offered load `load`
     (phits/cycle/node) and measure accepted throughput + latency.
 
@@ -1047,9 +1335,13 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     impl="reference" is the per-port-sweep oracle it is validated against.
     `scenario` injects faults / selects the routing policy (see
     `repro.core.scenario.Scenario`); None is the pristine DOR baseline and
-    compiles to the exact pre-scenario program.  `fold` reproduces one
-    point of a multi-load sweep: `simulate_sweep(loads)[i]` equals
-    `simulate(loads[i], fold=i)`.
+    compiles to the exact pre-scenario program.  `schedule` (a
+    `repro.core.fault_schedule.FaultSchedule`, exclusive with `scenario`)
+    runs a TRANSIENT-fault timeline: per-epoch mask stacks ride the state
+    as traced inputs, the result carries a per-slot `SimTimeline`, and a
+    single-epoch schedule is bitwise-equal to the static scenario run.
+    `fold` reproduces one point of a multi-load sweep:
+    `simulate_sweep(loads)[i]` equals `simulate(loads[i], fold=i)`.
 
     impl="fused" routes the slot update through the Pallas kernel
     (`repro.kernels.sim_step`): same state layout and pre-drawn traffic as
@@ -1058,7 +1350,13 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     if impl not in ("batched", "reference", "fused"):
         raise ValueError(f"unknown simulator impl {impl!r}")
     t = tables or build_tables(g, seed)
-    ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
+    if schedule is not None:
+        if scenario is not None:
+            raise ValueError("pass either scenario= or schedule=, not both")
+        ctx = _make_ctx(t, g, pattern, seed, queue,
+                        schedule=ensure_compiled(schedule, g, slots))
+    else:
+        ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
     runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
                          n_loads=1)
     key = jax.random.PRNGKey(seed + 17)
@@ -1072,7 +1370,8 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
                    slots: int = 512, warmup: int = 128, queue: int = 4,
                    seed: int = 0, seeds=None,
                    tables: SimTables | None = None,
-                   impl: str = "batched", scenario: Scenario | None = None):
+                   impl: str = "batched", scenario: Scenario | None = None,
+                   schedule: FaultSchedule | None = None):
     """An entire offered-load curve (Figs. 5–8) as ONE device program: the
     per-slot update is vmapped over the load axis and — when `seeds` is
     given — over a nested seed axis, so the whole sweep JITs once and runs
@@ -1087,14 +1386,18 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
     `simulate` (same key, pre-PR-3 compatible)."""
     loads = [float(l) for l in np.asarray(loads).ravel()]
     sl = _seed_list(seed, seeds)
+    if schedule is not None and scenario is not None:
+        raise ValueError("pass either scenario= or schedule=, not both")
     if sl is None and len(loads) == 1:
         return [simulate(g, pattern, loads[0], slots=slots, warmup=warmup,
                          queue=queue, seed=seed, tables=tables, impl=impl,
-                         scenario=scenario)]
+                         scenario=scenario, schedule=schedule)]
     runner, state, keys, t, _ = _sweep_plan(
         g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
         seed=seed, seed_list=sl, tables=tables, impl=impl,
-        scenario=scenario)
+        scenario=scenario,
+        schedules=(None if schedule is None
+                   else [ensure_compiled(schedule, g, slots)]))
     out = runner(state, keys)
     L, S = len(loads), len(sl or [seed])
     res = _result_grid(out, (L, S), impl, slots=slots, warmup=warmup,
@@ -1161,6 +1464,73 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
         scenarios=scenarios)
     out = runner(state, keys)
     K, L, S = len(scenarios), len(loads), len(sl or [seed])
+    res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
+                       N=t.N)
+    results = []
+    for ki in range(K):
+        if sl is None:
+            results.append([res[ki, li, 0] for li in range(L)])
+        else:
+            results.append(SweepStats(
+                loads=tuple(loads), seeds=tuple(sl),
+                results=tuple(tuple(row) for row in res[ki])))
+    return results
+
+
+def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
+                            loads=(0.6,), *, slots: int = 512,
+                            warmup: int = 128, queue: int = 4, seed: int = 0,
+                            seeds=None, tables: SimTables | None = None,
+                            impl: str = "batched"):
+    """K transient-fault TIMELINES × (loads × seeds) as ONE device
+    program — `simulate_scenario_sweep` generalized along the time axis.
+    Each schedule compiles to per-epoch mask stacks + a slot→epoch map;
+    stacks are padded to the sweep-wide maximum epoch count (padded
+    epochs are unreachable) so all K lanes share one trace and one
+    compile, and the slot→epoch maps ride the outermost vmap axis as
+    traced inputs.
+
+    Entries may be `FaultSchedule`s, static `Scenario`s (wrapped as
+    degenerate single-epoch schedules) or `None` (the pristine baseline
+    lane).  All lanes must share the routing policy (pristine/static-DOR
+    lanes adopt the sweep's policy, which routes identically on an
+    all-live graph); dead-node-ness is unified structurally — any lane
+    with a node death anywhere in its timeline switches the whole sweep
+    to live-table destination sampling.
+
+    The PRNG key grid is shared across lanes (common random numbers), so
+    lane k is bitwise-equal to the single-schedule sweep with the same
+    loads/seeds, and a lane whose schedule is a degenerate single-epoch
+    timeline is bitwise-equal to the STATIC `Scenario` run.  Returns a
+    list of length K mirroring `simulate_sweep`'s return; every
+    `SimResult` carries its per-slot `SimTimeline`."""
+    schedules = [s if isinstance(s, FaultSchedule)
+                 else FaultSchedule.from_scenario(s) for s in schedules]
+    if not schedules:
+        raise ValueError("simulate_schedule_sweep needs >= 1 schedule")
+    if impl not in ("batched", "fused"):
+        raise ValueError(
+            "simulate_schedule_sweep needs a traced-mask implementation "
+            f"(batched | fused), got {impl!r}")
+    policies = sorted({s.policy for s in schedules
+                       if not (s.is_static and s.base.is_trivial)})
+    if len(policies) > 1:
+        raise ValueError(
+            f"schedule sweep mixes routing policies {policies}; the policy "
+            "shapes the compiled program — sweep each policy separately")
+    if policies and policies[0] != "dor":
+        schedules = [s.with_policy(policies[0])
+                     if s.is_static and s.base.is_trivial else s
+                     for s in schedules]
+    loads = [float(l) for l in np.asarray(loads).ravel()]
+    sl = _seed_list(seed, seeds)
+    compiled = [ensure_compiled(s, g, slots) for s in schedules]
+    runner, state, keys, t, _ = _sweep_plan(
+        g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
+        seed=seed, seed_list=sl, tables=tables, impl=impl, scenario=None,
+        schedules=compiled)
+    out = runner(state, keys)
+    K, L, S = len(compiled), len(loads), len(sl or [seed])
     res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
                        N=t.N)
     results = []

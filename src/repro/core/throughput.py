@@ -233,3 +233,34 @@ def fault_aware_saturation_throughput(g: LatticeGraph, scenario,
     traffic routed around the faults (phits/cycle/node)."""
     return float(
         1.0 / fault_aware_channel_load(g, scenario, pairs, seed).max())
+
+
+def fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
+                              pairs: int = 20_000,
+                              seed: int = 0) -> np.ndarray:
+    """Per-EPOCH Monte-Carlo channel loads of a transient-fault timeline
+    (`repro.core.fault_schedule.FaultSchedule` / `CompiledSchedule`):
+    the fault-aware BFS tables for ALL epochs are rebuilt in one compiled
+    device program (`routing.fault_aware_next_hop_device`'s stacked-epoch
+    mode), then each epoch's live-pair traffic is walked along its own
+    tables.  Returns (E, N, 2n) loads — the per-epoch load curve the
+    degraded saturation bound below derives from."""
+    from .fault_schedule import ensure_compiled
+    from .routing import fault_aware_next_hop_device
+    compiled = ensure_compiled(schedule, g, slots)
+    dist, nh = fault_aware_next_hop_device(
+        g, compiled.link_ok_stack(g), compiled.node_ok_stack(g))
+    return np.stack([
+        fault_aware_channel_load(g, scen, pairs, seed,
+                                 tables=(dist[e], nh[e]))
+        for e, scen in enumerate(compiled.epochs)])
+
+
+def fault_aware_schedule_saturation(g: LatticeGraph, schedule,
+                                    slots: int = 512, pairs: int = 20_000,
+                                    seed: int = 0) -> np.ndarray:
+    """(E,) per-epoch saturation bounds 1/max-load of a transient-fault
+    timeline — how the fabric's degraded capacity moves as links flap and
+    nodes die/return."""
+    loads = fault_aware_schedule_load(g, schedule, slots, pairs, seed)
+    return 1.0 / loads.reshape(loads.shape[0], -1).max(axis=1)

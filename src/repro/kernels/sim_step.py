@@ -28,6 +28,17 @@ porting pass (2-D iota shims, gather → dynamic-slice loops, halo-tiled
 phases) the first time `interpret=False` runs on hardware.  See the
 ROADMAP fused-kernel frontier item.
 
+Transient faults (`repro.core.fault_schedule.FaultSchedule`) need NO
+kernel changes: the kernel is epoch-oblivious by design.  The fused slot
+step in `repro.core.simulation` resolves the current epoch inside the
+`lax.scan` carry — gathering that slot's `link_ok` / `dst_live_fixed`
+slices from the traced (E, …) stacks, dropping packets enqueued at
+just-died nodes, and re-consulting `policy_ports` for stale carried
+ports — and hands this kernel exactly the static-shaped per-slot masks
+it has always taken.  That keeps the bitwise-parity contract with the
+batched step intact under schedules (tests/test_transient_sim.py runs
+the scheduled parity cells).
+
 Tiling: the grid walks node tiles of `block_nodes` rows for the heavy
 phase-3 writes — the `(tile, 2n, Q, n)` state tensors are the kernel's
 big residents, so VMEM holds one tile of them at a time.  Phases 1–2 are

@@ -30,7 +30,7 @@ def test_unknown_section_is_a_clear_upfront_error():
     assert "unknown section" in msg and "tabel1" in msg
     assert "routing" not in msg.split("choose from")[0].replace(
         "tabel1,", "")         # only the bad name is reported as unknown
-    for valid in ("table1", "sim", "scenarios"):
+    for valid in ("table1", "sim", "scenarios", "transient"):
         assert valid in msg.split("choose from")[1]
 
 

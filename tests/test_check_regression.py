@@ -54,6 +54,42 @@ def test_new_pr4_rows_are_gated():
     ], failures
 
 
+# the ISSUE 5 rows: the transient timeline run, the K-schedule
+# one-compile sweep and the epoch-stacked device BFS
+TRANSIENT_ROWS = doc(**{
+    "transient/timeline/N=512": {"timeline_slots_per_s": 700.0,
+                                 "overhead_vs_static": 1.2},
+    "transient/sched_sweep8/N=512": {"sched_loadpoints_per_s": 3.0,
+                                     "speedup_vs_seq_cold": 5.0},
+    "transient/bfs_epochs16/N=4096": {"bfs_epochs_per_s": 0.7,
+                                      "device_vs_host": 10.0},
+})
+
+
+def test_transient_rows_are_gated():
+    """Timeline slots/s, schedule-sweep loadpoints/s and the new
+    epochs_per_s suffix all gate; the overhead/speedup ratios do not."""
+    cur = json.loads(json.dumps(TRANSIENT_ROWS))
+    for row in cur["rows"]:
+        for k in row["derived"]:
+            row["derived"][k] *= 0.5
+    failures, _ = compare(TRANSIENT_ROWS, cur, tolerance=0.30)
+    assert sorted(f.split(" ")[0] for f in failures) == [
+        "transient/bfs_epochs16/N=4096:bfs_epochs_per_s",
+        "transient/sched_sweep8/N=512:sched_loadpoints_per_s",
+        "transient/timeline/N=512:timeline_slots_per_s",
+    ], failures
+
+
+def test_transient_rows_within_tolerance_pass():
+    cur = json.loads(json.dumps(TRANSIENT_ROWS))
+    for row in cur["rows"]:
+        for k in row["derived"]:
+            row["derived"][k] *= 0.85                    # 15% < 30%
+    failures, _ = compare(TRANSIENT_ROWS, cur, tolerance=0.30)
+    assert failures == []
+
+
 def test_injected_regression_fails():
     cur = json.loads(json.dumps(BASE))
     cur["rows"][1]["derived"]["slots_per_s"] = 40.0      # 2.5× slowdown

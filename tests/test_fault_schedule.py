@@ -1,0 +1,239 @@
+"""Unit tests for the `FaultSchedule` epoch compiler (ISSUE 5) — the
+host-side half of the transient-fault engine: event normalization, the
+slot→epoch boundary convention (an event at slot s takes effect FROM
+slot s), fail→repair→fail chains, no-op dedup (a schedule whose events
+never change anything compiles to one epoch), and a propcheck-shim
+property test over random event lists.  The simulator-level timeline
+tests live in tests/test_transient_sim.py.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CompiledSchedule, FaultSchedule, Scenario, Torus
+
+G = Torus(4, 4)
+SLOTS = 64
+
+
+def test_empty_schedule_single_epoch():
+    c = FaultSchedule().compile(G, SLOTS)
+    assert c.E == 1
+    assert c.starts == (0,)
+    assert np.array_equal(c.slot2epoch, np.zeros(SLOTS, np.int32))
+    assert c.epochs[0].is_trivial
+
+
+def test_static_base_single_epoch_is_the_scenario():
+    scen = Scenario(dead_links=((3, 1),), policy="adaptive")
+    c = FaultSchedule.from_scenario(scen).compile(G, SLOTS)
+    assert c.E == 1 and c.policy == "adaptive"
+    assert np.array_equal(c.epochs[0].link_ok(G), scen.link_ok(G))
+    assert np.array_equal(c.epochs[0].node_ok(G), scen.node_ok(G))
+
+
+def test_epoch_boundary_off_by_one():
+    """An event at slot s starts a new epoch AT slot s: slot s−1 still
+    sees the old world, slot s already sees the new one."""
+    s = 17
+    c = FaultSchedule(events=((s, "link_down", (2, 0)),)).compile(G, SLOTS)
+    assert c.E == 2
+    assert c.starts == (0, s)
+    assert c.epoch_of(s - 1) == 0
+    assert c.epoch_of(s) == 1
+    assert c.scenario_at(s - 1).link_ok(G)[2, 0]
+    assert not c.scenario_at(s).link_ok(G)[2, 0]
+
+
+def test_slot_zero_and_out_of_range_events():
+    """Events at slot ≤ 0 fold into the initial state; events at
+    slot ≥ slots never fire in this run."""
+    # the never-reached link (2, 1) is chosen non-incident to dead node 5
+    c = FaultSchedule(events=((0, "link_down", (2, 0)),
+                              (-3, "node_down", 5),
+                              (SLOTS, "link_down", (2, 1)),
+                              (SLOTS + 9, "node_down", 7))
+                      ).compile(G, SLOTS)
+    assert c.E == 1
+    assert not c.epochs[0].link_ok(G)[2, 0]
+    assert not c.epochs[0].node_ok(G)[5]
+    assert c.epochs[0].link_ok(G)[2, 1]        # never-reached event dropped
+    assert c.epochs[0].node_ok(G)[7]
+
+
+def test_fail_repair_fail_same_link():
+    link = (6, 2)
+    c = FaultSchedule(events=((10, "link_down", link),
+                              (20, "link_up", link),
+                              (30, "link_down", link))).compile(G, SLOTS)
+    assert c.E == 4
+    assert c.starts == (0, 10, 20, 30)
+    alive = [c.epochs[e].link_ok(G)[6, 2] for e in range(4)]
+    assert alive == [True, False, True, False]
+    # the reverse channel dies/revives in lockstep (links fail whole)
+    v = int(G.neighbor_indices[6, 2])
+    rev = [c.epochs[e].link_ok(G)[v, 3] for e in range(4)]
+    assert rev == alive
+
+
+def test_link_identity_is_undirected():
+    """Killing (u, p) and repairing via the reverse endpoint (v, p^1)
+    must cancel — the canonical undirected identity matches them."""
+    u, p = 6, 2
+    v = int(G.neighbor_indices[u, p])
+    c = FaultSchedule(events=((10, "link_down", (u, p)),
+                              (20, "link_up", (v, p ^ 1)))).compile(G, SLOTS)
+    assert c.E == 3
+    assert c.epochs[2].link_ok(G)[u, p]
+
+
+def test_node_death_takes_links_and_returns():
+    c = FaultSchedule(events=((8, "node_down", 5),
+                              (24, "node_up", 5))).compile(G, SLOTS)
+    assert c.E == 3
+    assert not c.epochs[1].node_ok(G)[5]
+    assert not c.epochs[1].link_ok(G)[5].any()
+    assert c.epochs[2].node_ok(G)[5]
+    assert c.epochs[2].link_ok(G)[5].all()
+    assert c.has_dead_nodes          # any epoch with dead nodes counts
+
+
+def test_noop_events_create_no_epochs():
+    """Repairing a live link / re-killing a dead one changes nothing and
+    must not split the run into spurious epochs."""
+    c = FaultSchedule(events=((10, "link_up", (2, 0)),
+                              (20, "node_up", 5))).compile(G, SLOTS)
+    assert c.E == 1
+    base = Scenario(dead_links=((2, 0),))
+    c2 = FaultSchedule(events=((10, "link_down", (2, 0)),),
+                       base=base).compile(G, SLOTS)
+    assert c2.E == 1
+
+
+def test_same_slot_events_apply_in_listed_order():
+    c = FaultSchedule(events=((10, "link_down", (2, 0)),
+                              (10, "link_up", (2, 0)))).compile(G, SLOTS)
+    assert c.E == 1                   # down then up at slot 10 = no-op
+    c2 = FaultSchedule(events=((10, "link_up", (2, 0)),
+                               (10, "link_down", (2, 0)),),
+                       base=Scenario(dead_links=((2, 0),))
+                       ).compile(G, SLOTS)
+    assert c2.E == 1                  # up then down: still dead
+    assert not c2.epochs[0].link_ok(G)[2, 0]
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        FaultSchedule(events=((3, "link_explode", (1, 0)),))
+    with pytest.raises(ValueError, match="triple"):
+        FaultSchedule(events=("link_down",))
+    with pytest.raises(ValueError, match="node, port"):
+        FaultSchedule(events=((1, "link_down", 5),))     # bare int target
+    with pytest.raises(ValueError, match="single node"):
+        FaultSchedule(events=((1, "node_down", (5, 3)),))  # pair for a node
+    with pytest.raises(ValueError, match="slots"):
+        FaultSchedule().compile(G, 0)
+    with pytest.raises(ValueError, match="repair slot"):
+        FaultSchedule.link_flap((1, 0), down_at=20, up_at=20)
+    with pytest.raises(ValueError, match="unknown policy"):
+        FaultSchedule(base=Scenario(policy="psychic"))
+
+
+def test_with_policy_and_properties():
+    f = FaultSchedule.link_flap((1, 0), 8, 16, policy="dor")
+    assert f.policy == "dor" and not f.is_static
+    g2 = f.with_policy("escape")
+    assert g2.policy == "escape"
+    assert g2.events == f.events
+
+
+def test_link_flap_keeps_base_policy():
+    """`link_flap` without an explicit policy preserves the base
+    scenario's policy instead of silently resetting it to DOR."""
+    base = Scenario(policy="adaptive", dead_links=((3, 1),))
+    f = FaultSchedule.link_flap((1, 0), 8, 16, base=base)
+    assert f.policy == "adaptive"
+    assert f.base.dead_links == base.dead_links
+    # an explicit policy still wins
+    assert FaultSchedule.link_flap((1, 0), 8, 16, policy="escape",
+                                   base=base).policy == "escape"
+
+
+EVENT = st.tuples(
+    st.integers(min_value=-4, max_value=SLOTS + 4),
+    st.sampled_from(["link_down", "link_up", "node_down", "node_up"]),
+    st.integers(min_value=0, max_value=G.order * 2 * G.n - 1))
+
+
+def _mk_event(ev):
+    slot, kind, raw = ev
+    if kind.startswith("link"):
+        return (slot, kind, (raw // (2 * G.n), raw % (2 * G.n)))
+    return (slot, kind, raw % (G.order - 1) + 1)   # keep node 0 alive
+
+
+@given(st.lists(EVENT, min_size=0, max_size=10))
+@settings(max_examples=50)
+def test_random_event_lists_compile_consistently(raw_events):
+    """Property: any event list compiles; the slot→epoch map is monotone,
+    starts at epoch 0, changes only at event slots, and `scenario_at`
+    replays the event fold exactly."""
+    sched = FaultSchedule(events=tuple(_mk_event(e) for e in raw_events))
+    c = sched.compile(G, SLOTS)
+    s2e = c.slot2epoch
+    assert s2e.shape == (SLOTS,)
+    assert s2e[0] == 0
+    assert (np.diff(s2e) >= 0).all()
+    assert s2e[-1] == c.E - 1
+    event_slots = {max(s, 0) for s, _, _ in sched.events if s < SLOTS}
+    for i in range(1, SLOTS):
+        if s2e[i] != s2e[i - 1]:
+            assert i in event_slots
+            assert c.starts[s2e[i]] == i
+    # epochs are deduped: consecutive epochs always differ
+    for a, b in zip(c.epochs, c.epochs[1:]):
+        assert (a.dead_links != b.dead_links
+                or a.dead_nodes != b.dead_nodes)
+    # replay: fold the events by hand and compare the final epoch
+    dead_links, dead_nodes = set(), set()
+    nbr = G.neighbor_indices
+    for slot, kind, tgt in sched.events:
+        if slot >= SLOTS:
+            continue
+        if kind.startswith("link"):
+            u, p = tgt
+            key = min((u, p), (int(nbr[u, p]), p ^ 1))
+            (dead_links.add if kind == "link_down"
+             else dead_links.discard)(key)
+        else:
+            (dead_nodes.add if kind == "node_down"
+             else dead_nodes.discard)(tgt)
+    final = c.epochs[-1]
+    assert set(final.dead_links) == dead_links
+    assert set(final.dead_nodes) == dead_nodes
+
+
+def test_precompiled_schedule_slots_mismatch_raises():
+    """Every schedule-taking API funnels through `ensure_compiled`: a
+    CompiledSchedule bound to a different run length must fail loudly,
+    not silently report epochs the run never reaches."""
+    from repro.core.distances import faulted_schedule_stats
+    from repro.core.fault_schedule import ensure_compiled
+    from repro.core.throughput import fault_aware_schedule_load
+    c = FaultSchedule.link_flap((1, 0), 8, 16).compile(G, 128)
+    with pytest.raises(ValueError, match="compiled for 128"):
+        ensure_compiled(c, G, 64)
+    with pytest.raises(ValueError, match="compiled for 128"):
+        faulted_schedule_stats(G, c, slots=64)
+    with pytest.raises(ValueError, match="compiled for 128"):
+        fault_aware_schedule_load(G, c, slots=64)
+    assert ensure_compiled(c, G, 128) is c
+
+
+def test_random_events_constructor_is_deterministic():
+    a = FaultSchedule.random_events(G, 6, SLOTS, seed=3, node_events=True)
+    b = FaultSchedule.random_events(G, 6, SLOTS, seed=3, node_events=True)
+    assert a.events == b.events
+    ca = a.compile(G, SLOTS)
+    assert isinstance(ca, CompiledSchedule) and ca.E >= 1

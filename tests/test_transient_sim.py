@@ -1,0 +1,337 @@
+"""Transient-fault timeline engine (ISSUE 5): the `FaultSchedule` time
+axis threaded through all three `slot_step` implementations.
+
+Pins the tentpole contracts:
+  * a degenerate single-epoch schedule is BITWISE-equal to the static
+    `Scenario` run on every scenario × pattern differential cell;
+  * `delivered + in_flight + dropped == injected` holds at EVERY slot
+    (warmup=0), including across link flaps and node deaths with packets
+    enqueued, and no packet ever crosses a currently-dead channel;
+  * a K=8-schedule `simulate_schedule_sweep` compiles exactly once
+    (TRACE_COUNTS) and each lane is bitwise-equal to its single-schedule
+    run;
+  * `impl="fused"` stays bitwise-equal to `impl="batched"` under a
+    schedule; `impl="reference"` remains the per-slot semantic oracle
+    (statistical agreement).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import FaultSchedule, Scenario, Torus
+from repro.core.simulation import (TRACE_COUNTS, _RUNNER_CACHE, build_tables,
+                                   simulate, simulate_schedule_sweep)
+
+G = Torus(4, 4)
+TABLES = build_tables(G)
+KW = dict(slots=96, warmup=0, seed=2, tables=TABLES)
+
+
+def counters(r):
+    return (r.delivered, r.injected, r.dropped, r.in_flight)
+
+
+def check_timeline(r):
+    tl = r.timeline
+    assert tl is not None
+    assert tl.conservation_ok(), tl.conservation_violations()
+    assert tl.dead_crossings.sum() == 0
+    # the timeline's final sample must agree with the run counters
+    assert tl.delivered[-1] == r.delivered
+    assert tl.injected[-1] == r.injected
+    assert tl.dropped[-1] == r.dropped
+    assert tl.in_flight[-1] == r.in_flight
+
+
+# ---- the degenerate single-epoch differential cells -----------------------
+
+CELLS = [
+    (Scenario.random_link_faults(G, 2, seed=3, policy="dor"), "uniform"),
+    (Scenario.random_link_faults(G, 3, seed=4, policy="adaptive"),
+     "randompairings"),
+    (Scenario.random_link_faults(G, 2, seed=5, policy="escape"),
+     "centralsymmetric"),
+    (Scenario.random_node_faults(G, 2, seed=6, policy="adaptive"),
+     "uniform"),
+    (Scenario.random_node_faults(G, 1, seed=7, policy="adaptive"),
+     "antipodal"),
+]
+
+
+@pytest.mark.parametrize("scen,pattern", CELLS,
+                         ids=[f"{s.policy}-{p}" for s, p in CELLS])
+def test_single_epoch_schedule_bitwise_equals_static(scen, pattern):
+    """E=1 schedule ≡ static scenario, counter for counter and crossing
+    for crossing — the static engine is the E=1 special case."""
+    static = simulate(G, pattern, 0.6, scenario=scen, **KW)
+    sched = simulate(G, pattern, 0.6,
+                     schedule=FaultSchedule.from_scenario(scen), **KW)
+    assert counters(static) == counters(sched)
+    assert np.array_equal(static.link_use, sched.link_use)
+    check_timeline(sched)
+
+
+def test_pristine_single_epoch_schedule_conserves():
+    r = simulate(G, "uniform", 0.5, schedule=FaultSchedule(), **KW)
+    check_timeline(r)
+    assert r.dropped == 0
+
+
+# ---- per-slot conservation under churn ------------------------------------
+
+def test_mid_run_link_flap_conserves_every_slot():
+    """The acceptance cell: a link dies mid-run and is repaired later;
+    conservation is an every-slot integer identity, under both DOR
+    (blocking) and adaptive (re-routing)."""
+    for policy in ("dor", "adaptive"):
+        flap = FaultSchedule.link_flap((1, 0), down_at=24, up_at=60,
+                                       policy=policy)
+        r = simulate(G, "uniform", 0.8, schedule=flap, **KW)
+        check_timeline(r)
+
+
+def test_node_death_drops_enqueued_packets():
+    """A node dying mid-run takes its queued packets with it: they move
+    from in_flight to dropped THAT slot, and conservation never breaks."""
+    sched = FaultSchedule(events=((40, "node_down", 5),),
+                          base=Scenario(policy="adaptive"))
+    r = simulate(G, "uniform", 1.0, schedule=sched, **KW)
+    check_timeline(r)
+    assert r.dropped > 0
+    # drops can only start at the death slot
+    assert r.timeline.dropped[:40].sum() == 0
+    # the dead node's channels are never crossed after death: link_use on
+    # its ports equals the pre-death crossings, which the audit already
+    # bounds; the exact invariant is the per-slot dead_crossings == 0
+    # inside check_timeline
+
+
+def test_dead_node_stops_injecting_from_backlog():
+    """A node that dies with positive injection backlog must NOT keep
+    injecting while dead: its backlog (pending demand, not packets) dies
+    with it.  Regression: `want = want_new | backlog>0` used to bypass
+    the per-epoch injection mask, so a DOR node whose links were cut
+    (backlog building) injected one doomed packet per slot after death —
+    +1 injected and +1 dropped every slot."""
+    s = 40
+    # cut every link of node 5 early so its backlog builds (DOR blocks
+    # at the dead ports but demand keeps arriving at load 1.0), then
+    # kill the node itself
+    cut = tuple((4, "link_down", (5, p)) for p in range(2 * G.n))
+    sched = FaultSchedule(events=cut + ((s, "node_down", 5),),
+                          base=Scenario(policy="dor"))
+    r = simulate(G, "uniform", 1.0, schedule=sched, **KW)
+    check_timeline(r)
+    tl = r.timeline
+    # queue drops happen AT the death slot only; afterwards the dead node
+    # must stay silent (no injected-then-dropped stream)
+    assert tl.dropped[-1] == tl.dropped[s]
+    # fused path takes the same semantics, bitwise
+    rf = simulate(G, "uniform", 1.0, schedule=sched, impl="fused", **KW)
+    assert counters(r) == counters(rf)
+    # and the reference oracle agrees that drops stop at the death slot
+    rr = simulate(G, "uniform", 1.0, schedule=sched, impl="reference", **KW)
+    check_timeline(rr)
+    assert rr.timeline.dropped[-1] == rr.timeline.dropped[s]
+
+
+def test_fail_repair_fail_in_simulation():
+    sched = FaultSchedule(events=((16, "link_down", (1, 0)),
+                                  (40, "link_up", (1, 0)),
+                                  (64, "link_down", (1, 0))),
+                          base=Scenario(policy="dor"))
+    r = simulate(G, "uniform", 0.8, schedule=sched, **KW)
+    check_timeline(r)
+    # while the link is dead the static audit cannot apply (it is live at
+    # other times); the per-slot dead_crossings audit in check_timeline
+    # is the exact guarantee
+
+
+def test_epoch_boundary_off_by_one_in_simulation():
+    """Kill a fixed pattern's destination at slot s: injection drops
+    start EXACTLY at s (the whole of slot s sees the new world)."""
+    s = 32
+    sched = FaultSchedule(events=((s, "node_down", 5),),
+                          base=Scenario(policy="adaptive"))
+    # centralsymmetric maps some live source onto node 5, and load 1.0
+    # makes that source want a packet every slot
+    r = simulate(G, "centralsymmetric", 1.0, schedule=sched, **KW)
+    check_timeline(r)
+    tl = r.timeline
+    assert tl.dropped[:s].sum() == 0
+    assert tl.dropped[s] > 0
+
+
+# ---- sweep: K timelines, one compile --------------------------------------
+
+def test_k8_schedule_sweep_compiles_once_with_flaps():
+    """The acceptance criterion: K=8 timelines (mid-run link flaps) ×
+    one load through ONE trace/compile, per-slot conservation in every
+    lane."""
+    _RUNNER_CACHE.clear()
+    scheds = [FaultSchedule.link_flap((i, 0), 20 + i, 50 + i,
+                                      policy="adaptive")
+              for i in range(8)]
+    n0 = TRACE_COUNTS["batched"]
+    res = simulate_schedule_sweep(G, "uniform", scheds, loads=(0.7,), **KW)
+    assert TRACE_COUNTS["batched"] - n0 == 1
+    assert len(res) == 8
+    for rl in res:
+        check_timeline(rl[0])
+
+
+def test_sweep_lane_bitwise_equals_single_schedule_run():
+    scheds = [FaultSchedule(events=tuple(
+        (10 + j, "link_down", (4 * i + j, 0)) for j in range(3)),
+        base=Scenario(policy="dor"), name=f"s{i}") for i in range(3)]
+    res = simulate_schedule_sweep(G, "uniform", scheds, loads=(0.8,), **KW)
+    for sched, rl in zip(scheds, res):
+        single = simulate(G, "uniform", 0.8, schedule=sched, **KW)
+        assert counters(single) == counters(rl[0])
+        assert np.array_equal(single.timeline.delivered,
+                              rl[0].timeline.delivered)
+
+
+def test_sweep_pads_mixed_epoch_counts_and_seed_axis():
+    """Schedules of differing E share one program (stacks padded to the
+    max); loads × seeds axes nest under the schedule axis."""
+    scheds = [FaultSchedule(),                                   # E=1
+              FaultSchedule.link_flap((1, 0), 24, 60,
+                                      policy="adaptive"),        # E=3
+              FaultSchedule(events=((30, "link_down", (2, 0)),),
+                            base=Scenario(policy="adaptive"))]   # E=2
+    res = simulate_schedule_sweep(G, "uniform", scheds,
+                                  loads=(0.4, 0.9), seeds=2, **KW)
+    for st_ in res:
+        assert st_.accepted().shape == (2, 2)
+        for row in st_.results:
+            for r in row:
+                check_timeline(r)
+    # the pristine lane (adopting the sweep policy) dominates the flapped
+    # one on every (load, seed) cell or ties within noise; just assert
+    # its exact conservation held (above) and the lane count
+    assert len(res) == 3
+
+
+def test_sweep_lane_with_degenerate_schedule_equals_static_scenario():
+    """A static `Scenario` entry rides the schedule sweep as an E=1 lane
+    and reproduces the static scenario run bitwise."""
+    scen = Scenario.random_link_faults(G, 2, seed=9, policy="adaptive")
+    res = simulate_schedule_sweep(
+        G, "uniform", [scen, FaultSchedule.link_flap((1, 0), 24, 60,
+                                                     policy="adaptive")],
+        loads=(0.6,), **KW)
+    static = simulate(G, "uniform", 0.6, scenario=scen, **KW)
+    assert counters(res[0][0]) == counters(static)
+    assert np.array_equal(res[0][0].link_use, static.link_use)
+
+
+def test_schedule_node_sweep_with_dead_node_structure():
+    """Dead-node timelines force live-table destination sampling for the
+    whole sweep; a node-free lane shares the program and conserves."""
+    scheds = [FaultSchedule(),
+              FaultSchedule(events=((20, "node_down", 5),
+                                    (60, "node_up", 5)),
+                            base=Scenario(policy="adaptive"))]
+    res = simulate_schedule_sweep(G, "uniform", scheds, loads=(0.8,), **KW)
+    for rl in res:
+        check_timeline(rl[0])
+
+
+def test_schedule_sweep_validation():
+    with pytest.raises(ValueError, match="polic"):
+        simulate_schedule_sweep(
+            G, "uniform",
+            [FaultSchedule.link_flap((1, 0), 8, 16, policy="adaptive"),
+             FaultSchedule.link_flap((1, 0), 8, 16, policy="escape")],
+            **KW)
+    with pytest.raises(ValueError, match="traced-mask"):
+        simulate_schedule_sweep(G, "uniform", [FaultSchedule()],
+                                impl="reference", **KW)
+    with pytest.raises(ValueError, match=">= 1"):
+        simulate_schedule_sweep(G, "uniform", [], **KW)
+    with pytest.raises(ValueError, match="not both"):
+        simulate(G, "uniform", 0.5, scenario=Scenario(),
+                 schedule=FaultSchedule(), **KW)
+
+
+# ---- cross-implementation --------------------------------------------------
+
+def test_fused_is_bitwise_equal_under_schedule():
+    sched = FaultSchedule(events=((12, "link_down", (1, 0)),
+                                  (20, "node_down", 5),
+                                  (40, "link_up", (1, 0)),
+                                  (50, "node_up", 5)),
+                          base=Scenario(policy="adaptive"))
+    kw = dict(KW, slots=64)
+    rb = simulate(G, "uniform", 0.7, schedule=sched, **kw)
+    rf = simulate(G, "uniform", 0.7, schedule=sched, impl="fused", **kw)
+    assert counters(rb) == counters(rf)
+    assert np.array_equal(rb.link_use, rf.link_use)
+    for k in ("delivered", "injected", "dropped", "in_flight",
+              "dead_crossings"):
+        assert np.array_equal(getattr(rb.timeline, k),
+                              getattr(rf.timeline, k)), k
+
+
+def test_reference_oracle_conserves_and_agrees():
+    """The per-port reference sweep under the same schedule: exact
+    conservation + audit, and statistical agreement with batched on the
+    seed-averaged accepted load (different arbitration randomness)."""
+    flap = FaultSchedule.link_flap((1, 0), 32, 96, policy="adaptive")
+    kw = dict(KW, slots=160)
+    seeds = (2, 3, 4, 5)
+    acc_b, acc_r = [], []
+    for s in seeds:
+        kws = dict(kw, seed=s)
+        rr = simulate(G, "uniform", 0.6, schedule=flap, impl="reference",
+                      **kws)
+        check_timeline(rr)
+        rb = simulate(G, "uniform", 0.6, schedule=flap, **kws)
+        acc_r.append(rr.accepted_load)
+        acc_b.append(rb.accepted_load)
+    mb, mr = np.mean(acc_b), np.mean(acc_r)
+    assert abs(mb - mr) <= max(0.08 * mb, 0.03), (mb, mr)
+
+
+def test_single_run_reference_changed_schedule_recompiles():
+    """Reference keeps baked masks: a different timeline is a different
+    program (full-fingerprint cache key) — documenting the contract that
+    only batched/fused trace the time axis."""
+    _RUNNER_CACHE.clear()
+    a = FaultSchedule.link_flap((1, 0), 8, 16, policy="adaptive")
+    b = FaultSchedule.link_flap((2, 0), 8, 16, policy="adaptive")
+    kw = dict(KW, slots=32)
+    simulate(G, "uniform", 0.5, schedule=a, impl="reference", **kw)
+    n_ref = len(_RUNNER_CACHE)
+    simulate(G, "uniform", 0.5, schedule=b, impl="reference", **kw)
+    assert len(_RUNNER_CACHE) == n_ref + 1
+    # ... while batched reuses one runner for both timelines
+    n0 = TRACE_COUNTS["batched"]
+    simulate(G, "uniform", 0.5, schedule=a, **kw)
+    simulate(G, "uniform", 0.5, schedule=b, **kw)
+    assert TRACE_COUNTS["batched"] - n0 <= 1
+
+
+# ---- propcheck property: random timelines conserve -------------------------
+
+FLAP_EVENT = st.tuples(
+    st.sampled_from([0, 12, 24]),                 # bounded epoch count
+    st.sampled_from(["link_down", "link_up"]),
+    st.integers(min_value=0, max_value=G.order * 2 * G.n - 1))
+
+
+@given(st.lists(FLAP_EVENT, min_size=0, max_size=4))
+@settings(max_examples=25)
+def test_random_link_timelines_conserve(raw_events):
+    """Property (propcheck-shim subset): ANY link-event timeline keeps
+    the per-slot conservation identity and the dead-crossing audit.
+    Event slots are drawn from {0, 12, 24} so the handful of epoch-count
+    structures compile once and every example reuses them."""
+    events = tuple((s, k, (t // (2 * G.n), t % (2 * G.n)))
+                   for s, k, t in raw_events)
+    sched = FaultSchedule(events=events, base=Scenario(policy="adaptive"))
+    r = simulate(G, "uniform", 0.7, schedule=sched,
+                 slots=48, warmup=0, seed=1, tables=TABLES)
+    check_timeline(r)
