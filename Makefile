@@ -10,9 +10,9 @@ BENCH_JSON ?= /tmp/bench_current.json
 BENCH_NIGHTLY_JSON ?= /tmp/bench_nightly.json
 BENCH_TOLERANCE ?= 0.30
 # sections whose numbers the regression gate tracks (routing Mrec/s +
-# simulator, scenario-engine & transient-timeline slots/s); keep in sync
-# with BENCH_baseline.json
-BENCH_GATE_SECTIONS = routing,sim,scenarios,transient
+# simulator, scenario-engine & transient-timeline slots/s + the latency
+# histogram overhead ratio); keep in sync with BENCH_baseline.json
+BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency
 
 .PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
         bench-nightly bench-check bench-baseline lint
@@ -46,13 +46,13 @@ bench-routing:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only routing
 
 # fast sanity pass CI runs on every matrix entry: cheap analytic sections
-# + the quick simulator / scenario-engine / transient-timeline benchmarks
-# (covers the fused Pallas row, the K-scenario and K-schedule one-compile
-# sweeps and the device fault-BFS sweeps); exercises the whole bench
-# plumbing
+# + the quick simulator / scenario-engine / transient-timeline / latency
+# telemetry benchmarks (covers the fused Pallas row, the K-scenario and
+# K-schedule one-compile sweeps, the device fault-BFS sweeps and the
+# histogram-overhead rows); exercises the whole bench plumbing
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
-	    --only table1,table2,throughput,sim,scenarios,transient
+	    --only table1,table2,throughput,sim,scenarios,transient,latency
 
 # the nightly CI job: FULL mode, every section (incl. the fused-parity
 # differential cells in `sim` and the N=4096 sweeps), JSON for the

@@ -24,9 +24,11 @@ import sys
 # derived-metric keys that are gated (higher is better); matched as key
 # SUFFIXES so e.g. scen_sweep_loadpoints_per_s and sweep_loadpoints_per_s
 # both fall under the loadpoints marker (the PR 3 suffix-matching fix).
-# epochs_per_s covers the transient-engine epoch-stacked BFS rows.
+# epochs_per_s covers the transient-engine epoch-stacked BFS rows;
+# overhead_ratio gates the latency-histogram cost (plain/hist run time —
+# higher is better, 1.0 means the telemetry is free).
 GATED_SUFFIXES = ("_Mrec_s", "slots_per_s", "loadpoints_per_s",
-                  "scenarios_per_s", "epochs_per_s")
+                  "scenarios_per_s", "epochs_per_s", "overhead_ratio")
 # dispatch-overhead-dominated micro-rows: reported, never gated (they are
 # not the protected quantity and are the noisiest numbers on shared CPUs).
 # Matched as a name SUFFIX: a substring test would also swallow the

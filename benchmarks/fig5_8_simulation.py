@@ -30,39 +30,50 @@ PAPER_GAINS = {
 }
 
 
-def peak(g, tables, pattern, loads, slots, warmup, seed=3, seeds=None):
+def peak(g, tables, pattern, loads, slots, warmup, seed=3, seeds=None,
+         hist_bins=0):
     """Throughput peak over the load sweep.  With `seeds` the sweep gains
     the multi-seed axis (one device program) and the peak comes back as
-    mean ± CI half-width over the seed axis — the Figs 5–8 error bars."""
+    mean ± CI half-width over the seed axis — the Figs 5–8 error bars.
+    With `hist_bins` the sweep also collects latency histograms and the
+    fourth return is the exact p99 latency (cycles, seed-pooled) at the
+    peak load (NaN without hist_bins)."""
     if seeds is None:
         res = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
-                             tables=tables, seed=seed)
+                             tables=tables, seed=seed, hist_bins=hist_bins)
         best = max(res, key=lambda r: r.accepted_load)
-        return best.accepted_load, 0.0, best.avg_latency_cycles
+        p99 = best.latency_p99 if hist_bins else float("nan")
+        return best.accepted_load, 0.0, best.avg_latency_cycles, p99
     st = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
-                        tables=tables, seed=seed, seeds=seeds)
+                        tables=tables, seed=seed, seeds=seeds,
+                        hist_bins=hist_bins)
     mean = st.accepted_mean()
     i = int(np.argmax(mean))
+    p99 = float(st.latency_p99()[i]) if hist_bins else float("nan")
     return float(mean[i]), float(st.accepted_ci()[i]), \
-        float(st.latency_mean()[i])
+        float(st.latency_mean()[i]), p99
 
 
-def run_pair(tag: str, torus, crystal, loads, slots, warmup, seeds=None):
+def run_pair(tag: str, torus, crystal, loads, slots, warmup, seeds=None,
+             hist_bins=0):
     t_tab = build_tables(torus)
     c_tab = build_tables(crystal)
     for pattern in PATTERNS:
         t0 = time.perf_counter()
-        pt, et, lt = peak(torus, t_tab, pattern, loads, slots, warmup,
-                          seeds=seeds)
-        pc_, ec, lc = peak(crystal, c_tab, pattern, loads, slots, warmup,
-                           seeds=seeds)
+        pt, et, lt, qt = peak(torus, t_tab, pattern, loads, slots, warmup,
+                              seeds=seeds, hist_bins=hist_bins)
+        pc_, ec, lc, qc = peak(crystal, c_tab, pattern, loads, slots,
+                               warmup, seeds=seeds, hist_bins=hist_bins)
         us = (time.perf_counter() - t0) * 1e6
         gain = pc_ / max(pt, 1e-9)
-        emit(f"fig5_8/{tag}/{pattern}", us,
-             f"torus_peak={pt:.3f};crystal_peak={pc_:.3f};gain={gain:.2f};"
-             f"paper_gain={PAPER_GAINS[(tag, pattern)]};"
-             f"torus_ci={et:.3f};crystal_ci={ec:.3f};"
-             f"torus_lat={lt:.0f};crystal_lat={lc:.0f}")
+        row = (f"torus_peak={pt:.3f};crystal_peak={pc_:.3f};"
+               f"gain={gain:.2f};"
+               f"paper_gain={PAPER_GAINS[(tag, pattern)]};"
+               f"torus_ci={et:.3f};crystal_ci={ec:.3f};"
+               f"torus_lat={lt:.0f};crystal_lat={lc:.0f}")
+        if hist_bins:
+            row += f";torus_p99={qt:.0f};crystal_p99={qc:.0f}"
+        emit(f"fig5_8/{tag}/{pattern}", us, row)
 
 
 def main(quick: bool = False) -> None:
@@ -70,13 +81,15 @@ def main(quick: bool = False) -> None:
         np.array([0.2, 0.4, 0.6, 0.8, 1.0])
     slots = 192 if quick else 288
     warmup = 48 if quick else 64
-    # full mode: 2-seed error bars (quick CI smoke stays single-seed)
+    # full mode: 2-seed error bars + exact p99 tail columns from the
+    # in-carry histograms (quick CI smoke stays single-seed, no hist)
     seeds = None if quick else 2
+    bins = 0 if quick else 64
     run_pair("small", Torus(8, 8, 8, 4), FourD_BCC(4), loads, slots, warmup,
-             seeds=seeds)
+             seeds=seeds, hist_bins=bins)
     if not quick:
         run_pair("large", Torus(16, 8, 8, 8), FourD_FCC(8), loads, slots,
-                 warmup, seeds=seeds)
+                 warmup, seeds=seeds, hist_bins=bins)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Overhead of the in-carry latency histogram (ISSUE 6 acceptance bench).
+
+Times the SAME full batched run with and without `hist_bins=64`,
+interleaved best-of-`REPS` (machine noise hits both arms), and records
+
+  * `hist_slots_per_s`  — absolute throughput of the histogram run
+    (suffix-gated like every other slots/s row), and
+  * `overhead_ratio`    — plain_time / hist_time (≥ 0.9 means the
+    histogram costs < 10 %, the ISSUE 6 acceptance bound; gated so the
+    telemetry can never silently become expensive).
+
+A second row times the percentile-vs-load curve (`simulate_sweep` with
+hist_bins over L load points — one compiled device program) the
+tail-latency figures are drawn from.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Torus
+from repro.core.simulation import build_tables, simulate, simulate_sweep
+
+from .util import emit
+
+REPS = 3
+BINS = 64
+
+
+def _best(f, reps=REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(quick: bool = False) -> None:
+    g = Torus(8, 8, 4, 2) if quick else Torus(8, 8, 8, 8)
+    slots = 192 if quick else 512
+    warmup = 48 if quick else 128
+    loads = (0.3, 0.6, 1.0) if quick else (0.2, 0.4, 0.6, 0.8, 1.0)
+    t = build_tables(g)
+
+    def run(bins):
+        return simulate(g, "uniform", 0.6, slots=slots, warmup=warmup,
+                        seed=1, tables=t, hist_bins=bins)
+
+    arms = (0, BINS)
+    for bins in arms:                               # compile both first
+        run(bins)
+    best = {bins: float("inf") for bins in arms}
+    for _ in range(REPS):
+        for bins in arms:
+            t0 = time.perf_counter()
+            run(bins)
+            best[bins] = min(best[bins], time.perf_counter() - t0)
+    emit(f"latency/hist/N={g.order}", best[BINS] * 1e6,
+         f"hist_slots_per_s={slots / best[BINS]:.1f};"
+         f"overhead_ratio={best[0] / best[BINS]:.3f};bins={BINS}")
+
+    # percentile-vs-load curve: L load points, one compile, histograms on
+    simulate_sweep(g, "uniform", loads, slots=slots, warmup=warmup, seed=1,
+                   tables=t, hist_bins=BINS)       # compile
+    dt = _best(lambda: simulate_sweep(g, "uniform", loads, slots=slots,
+                                      warmup=warmup, seed=1, tables=t,
+                                      hist_bins=BINS))
+    emit(f"latency/p99curve{len(loads)}/N={g.order}", dt * 1e6,
+         f"p99curve_loadpoints_per_s={len(loads) / dt:.2f};"
+         f"bins={BINS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,9 +16,10 @@ import platform
 import sys
 import traceback
 
-from . import (fig5_8_simulation, roofline, routing_throughput, scenario_sim,
-               sim_throughput, table1_distances, table2_lattices,
-               throughput_bounds, topology_collectives, transient_sim, util)
+from . import (fig5_8_simulation, latency_telemetry, roofline,
+               routing_throughput, scenario_sim, sim_throughput,
+               table1_distances, table2_lattices, throughput_bounds,
+               topology_collectives, transient_sim, util)
 from .util import header
 
 SECTIONS = {
@@ -29,6 +30,7 @@ SECTIONS = {
     "sim": sim_throughput.main,
     "scenarios": scenario_sim.main,
     "transient": transient_sim.main,
+    "latency": latency_telemetry.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,

@@ -91,6 +91,28 @@ traced inputs, so padding is free).
 
 Throughput is reported in phits/cycle/node = packets/slot/node.
 
+**Latency telemetry.**  Every delivery knows its packet's birth slot, so
+latency statistics are *measured-window* statistics: a delivery counts
+toward the latency mean (and, with ``hist_bins > 0``, the bucketed
+histogram) only when the packet was BORN at or after `warmup` — packets
+born during warmup carry queue-buildup ages that are not steady-state
+samples (pre-PR-6 they silently inflated the mean).  `lat_cnt` tracks
+how many deliveries were measured; with zero measured deliveries the
+mean is NaN, never 0.0.  ``hist_bins=B`` threads a fixed-width ``(B,)``
+age histogram through the scan carry of all three implementations
+(bucket ``i < B-1`` = deliveries aged exactly ``i`` slots; bucket
+``B-1`` = overflow, ages ``>= B-1``), accumulated with one
+`segment_sum` per slot — no per-packet host transfer, no shape change
+across loads, and bitwise-zero effect on every pre-existing counter.
+`SimResult.latency_percentile` / `latency_p50/p99/p999` recover EXACT
+nearest-rank percentiles from the histogram (validated cycle-exactly
+against the per-packet `reference_latency_samples` oracle whenever no
+mass reaches the overflow bucket); `SweepStats` pools seed histograms
+into percentile-vs-load curves, and scheduled runs carry a per-slot
+cumulative histogram in `SimTimeline` from which
+`SimTimeline.recovery_slots` measures slots-until-p99-returns-to-
+baseline after a repair event (see docs/simulator.md).
+
 **Scenario engine.**  Both implementations accept a `repro.core.scenario.
 Scenario` (dead links, dead nodes, routing policy ∈ {dor, adaptive,
 escape}).  Faults and policies enter the compiled slot update purely as
@@ -198,19 +220,73 @@ def pattern_table(g: LatticeGraph, pattern: str, seed: int = 0) -> np.ndarray | 
 # the simulator
 # ---------------------------------------------------------------------------
 
+def _hist_percentile(hist: np.ndarray, q: float) -> float:
+    """EXACT nearest-rank percentile of a (B,) latency histogram, in
+    CYCLES (bucket i = latency of exactly i slots = 16·i cycles for
+    i < B−1).  NaN with no mass; +inf when the rank lands in the
+    overflow bucket B−1 (the true value is only lower-bounded there —
+    pick `hist_bins` above the worst age for exact tails)."""
+    hist = np.asarray(hist)
+    total = int(hist.sum())
+    if total == 0:
+        return float("nan")
+    if not (0.0 < q <= 1.0):
+        raise ValueError(f"percentile q must be in (0, 1], got {q}")
+    rank = min(total, max(1, int(np.ceil(q * total))))
+    idx = int(np.searchsorted(np.cumsum(hist), rank, side="left"))
+    if idx >= hist.size - 1:
+        return float("inf")
+    return float(PACKET_PHITS * idx)
+
+
+def _bucket_counts(age, meas, bins: int):
+    """(B,) bucketed delivery counts of one slot: clip ages into the
+    fixed-width buckets and reduce the measured-delivery mask through a
+    one-hot matvec (ages of unmeasured lanes are clipped garbage with
+    weight 0).  Deliberately NOT `segment_sum`: XLA CPU serializes its
+    scatter-add lowering — a dense (NP, B) dot is ~3× cheaper per slot
+    at bench shapes (same trick as the segmented-min arbitration
+    rewrite).  The dot packs TWO buckets per int32 column (bucket 2c in
+    the low half-word, 2c+1 in the high), halving the one-hot
+    intermediate — another ~2×.  A per-slot per-bucket count is at most
+    the N·P lane count, so 16-bit halves cannot overflow while
+    N·P ≤ 65535; beyond that (or for odd `bins`) fall back to the plain
+    one-column-per-bucket dot."""
+    b = jnp.clip(age.astype(jnp.int32), 0, bins - 1).ravel()
+    m = meas.astype(jnp.int32).ravel()
+    if bins % 2 or b.size > 0xFFFF:
+        onehot = (b[:, None] == jnp.arange(bins, dtype=jnp.int32)[None, :]
+                  ).astype(jnp.int32)
+        return m @ onehot
+    cols = jnp.arange(bins // 2, dtype=jnp.int32)
+    packed = jnp.where((b[:, None] >> 1) == cols[None, :],
+                       jnp.int32(1) << (16 * (b[:, None] & 1)), 0)
+    # unpack via uint32: the high half-word may set bit 31 (count 2^15)
+    r = (m @ packed).astype(jnp.uint32)
+    lo = (r & 0xFFFF).astype(jnp.int32)
+    hi = (r >> 16).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=1).ravel()
+
+
 @dataclass(frozen=True)
 class SimTimeline:
     """Per-slot counter trace of a scheduled (transient-fault) run: each
     array has shape (slots,) — cumulative counted totals AFTER each slot,
     plus the instantaneous queue occupancy and the per-slot count of
     dead-channel crossings (an exact audit: always zero).  With warmup=0
-    conservation holds at EVERY slot, not just at run end."""
+    conservation holds at EVERY slot, not just at run end.
+
+    With ``hist_bins > 0`` the trace also carries `lat_hist`, the
+    CUMULATIVE (slots, B) latency histogram after each slot — windowed
+    differences of it give per-slot tail-latency estimates without any
+    per-packet storage (`latency_percentile_trace`, `recovery_slots`)."""
 
     delivered: np.ndarray
     injected: np.ndarray
     dropped: np.ndarray
     in_flight: np.ndarray
     dead_crossings: np.ndarray
+    lat_hist: np.ndarray | None = None
 
     def conservation_violations(self) -> np.ndarray:
         """Slots where delivered + in_flight + dropped != injected."""
@@ -220,21 +296,102 @@ class SimTimeline:
     def conservation_ok(self) -> bool:
         return self.conservation_violations().size == 0
 
+    # -- tail-latency telemetry (hist_bins runs only) -----------------------
+    def _require_hist(self):
+        if self.lat_hist is None:
+            raise ValueError(
+                "timeline has no latency histogram — run with hist_bins>0")
+
+    def latency_window_hist(self, end_slot: int, window: int) -> np.ndarray:
+        """(B,) histogram of deliveries measured in the `window` slots
+        ending AT `end_slot` (inclusive) — a cumulative difference."""
+        self._require_hist()
+        if end_slot < 0:
+            return np.zeros(self.lat_hist.shape[1], self.lat_hist.dtype)
+        hi = self.lat_hist[end_slot]
+        if end_slot - window >= 0:
+            return hi - self.lat_hist[end_slot - window]
+        return hi.copy()
+
+    def latency_percentile_trace(self, q: float = 0.99,
+                                 window: int = 64) -> np.ndarray:
+        """(slots,) windowed nearest-rank percentile (cycles) after each
+        slot — NaN where the window saw no measured delivery."""
+        self._require_hist()
+        return np.array([
+            _hist_percentile(self.latency_window_hist(s, window), q)
+            for s in range(self.lat_hist.shape[0])])
+
+    def recovery_slots(self, fault_slot: int, repair_slot: int, *,
+                       q: float = 0.99, window: int = 64,
+                       slack_cycles: float = 0.0) -> int | None:
+        """Slots from the repair event until the windowed percentile-q
+        latency first returns to its pre-fault baseline (the same-width
+        window ending just before `fault_slot`), or None if it never
+        does within the run.  `slack_cycles` loosens the baseline for
+        stochastic traffic (windows are finite samples)."""
+        self._require_hist()
+        if not 0 < fault_slot <= repair_slot < self.lat_hist.shape[0]:
+            raise ValueError(
+                f"need 0 < fault_slot <= repair_slot < slots, got "
+                f"fault={fault_slot} repair={repair_slot} "
+                f"slots={self.lat_hist.shape[0]}")
+        base = _hist_percentile(
+            self.latency_window_hist(fault_slot - 1, window), q)
+        if np.isnan(base):
+            raise ValueError(
+                "no measured deliveries in the pre-fault window — widen "
+                "`window` or shorten the warmup")
+        for s in range(repair_slot, self.lat_hist.shape[0]):
+            p = _hist_percentile(self.latency_window_hist(s, window), q)
+            if not np.isnan(p) and p <= base + slack_cycles:
+                return s - repair_slot
+        return None
+
 
 @dataclass(frozen=True)
 class SimResult:
     accepted_load: float      # phits / cycle / node
-    avg_latency_cycles: float
+    avg_latency_cycles: float  # NaN when lat_count == 0 (no measured pkt)
     delivered: int
     injected: int
     slots: int
     dropped: int = 0          # refused at injection (dead destination)
     in_flight: int = 0        # occupied queue slots at run end
+    # deliveries the latency stats measured: born AND delivered at or
+    # after warmup (== delivered when warmup=0; the mean and histogram
+    # are taken over exactly these packets)
+    lat_count: int = 0
+    # (hist_bins,) age histogram of the measured deliveries — bucket i
+    # counts latency of exactly i slots (i < B−1), bucket B−1 overflows;
+    # None unless the run asked for hist_bins > 0
+    latency_hist: np.ndarray | None = field(default=None, compare=False)
     # (N, 2n) per-channel packet crossings, counted over ALL slots; only
     # tracked for non-trivial scenarios (the dead-link audit)
     link_use: np.ndarray | None = field(default=None, compare=False)
     # per-slot counter trace, only emitted by FaultSchedule runs
     timeline: SimTimeline | None = field(default=None, compare=False)
+
+    def latency_percentile(self, q: float) -> float:
+        """EXACT nearest-rank percentile-q latency in cycles from the
+        bucketed histogram (requires a hist_bins>0 run); NaN with no
+        measured delivery, +inf if the rank overflows the last bucket."""
+        if self.latency_hist is None:
+            raise ValueError(
+                "result has no latency histogram — run with hist_bins>0")
+        return _hist_percentile(self.latency_hist, q)
+
+    @property
+    def latency_p50(self) -> float:
+        return self.latency_percentile(0.50)
+
+    @property
+    def latency_p99(self) -> float:
+        return self.latency_percentile(0.99)
+
+    @property
+    def latency_p999(self) -> float:
+        return self.latency_percentile(0.999)
 
 
 _RUNNER_CACHE: dict = {}
@@ -375,8 +532,8 @@ def _make_traffic(ctx, state, key, slots: int):
         prio=jax.random.bits(kp, (slots, N, P * Q), jnp.uint8))
 
 
-def _finish_slot(state, counted_from, delivered, lat_sum, can, drop=None,
-                 qdrop=None, **updates):
+def _finish_slot(state, counted_from, delivered, lat_sum, lat_cnt, can,
+                 drop=None, qdrop=None, **updates):
     slot = state["slot"]
     counted = slot >= counted_from
     # dropped packets count as injected so that conservation stays exact:
@@ -384,10 +541,15 @@ def _finish_slot(state, counted_from, delivered, lat_sum, can, drop=None,
     # already in flight when their node dies, `qdrop`) were counted
     # injected at injection time, so they increment ONLY `dropped`.
     inj = can.sum() if drop is None else can.sum() + drop.sum()
+    # lat_sum / lat_cnt arrive already filtered to measured deliveries
+    # (birth >= warmup) — a packet born at or after warmup can only be
+    # delivered at a counted slot, so no extra `counted` gate is needed
+    # (and with warmup=0 the filter is the old behaviour bitwise)
     out = dict(
         state, **updates, slot=slot + 1,
         delivered=state["delivered"] + jnp.where(counted, delivered, 0),
-        lat_sum=state["lat_sum"] + jnp.where(counted, lat_sum, 0),
+        lat_sum=state["lat_sum"] + lat_sum,
+        lat_cnt=state["lat_cnt"] + lat_cnt,
         injected=state["injected"] + jnp.where(counted, inj, 0))
     if drop is not None:
         d = drop.sum() if qdrop is None else drop.sum() + qdrop
@@ -578,7 +740,15 @@ def _make_slot_step_batched(ctx, warmup: int):
         moved = deliver | acc
 
         delivered = deliver.sum()
-        lat_sum = jnp.where(deliver, slot + 1 - in_birth, 0).sum()
+        # latency telemetry measures only packets BORN in the measured
+        # window: warmup-era births carry queue-buildup ages that are not
+        # steady-state samples (the PR-6 warmup-bias fix).  birth >= warmup
+        # implies delivery slot > warmup, so these sums need no extra
+        # counted gate.
+        age = slot + 1 - in_birth                          # (N, P)
+        meas = deliver & (in_birth >= warmup)
+        lat_sum = jnp.where(meas, age, 0).sum()
+        lat_cnt = meas.sum()
 
         # ---- apply: clear departed slots + fused transit/injection write --
         # Transit fills the FIRST free slot of the in-queue, injection the
@@ -645,12 +815,15 @@ def _make_slot_step_batched(ctx, warmup: int):
 
         updates = dict(rec=new_rec, birth=new_birth, port=new_port,
                        backlog=backlog)
+        if ctx["hist_bins"]:
+            updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
+                age, meas, ctx["hist_bins"])
         if not trivial:
             # dead-channel audit: count every crossing (all slots, not just
             # measured ones — "never" means never)
             updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
-        out = _finish_slot(state, warmup, delivered, lat_sum, can, drop,
-                           qdrop=qdrop, **updates)
+        out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
+                           drop, qdrop=qdrop, **updates)
         return out, (_timeline_y(out, new_birth, dep_port, link_ok)
                      if scheduled else None)
 
@@ -663,10 +836,15 @@ def _timeline_y(out, occupancy, dep_port, link_ok):
     a channel while it is dead is impossible by construction — arbitration
     masks it — so this is an exact always-zero regression tripwire)."""
     crossed = dep_port if dep_port.dtype == jnp.bool_ else dep_port != 0
-    return dict(delivered=out["delivered"], injected=out["injected"],
-                dropped=out["dropped"],
-                in_flight=(occupancy >= 0).sum(),
-                dead_crossings=(crossed & ~link_ok).sum())
+    y = dict(delivered=out["delivered"], injected=out["injected"],
+             dropped=out["dropped"],
+             in_flight=(occupancy >= 0).sum(),
+             dead_crossings=(crossed & ~link_ok).sum())
+    if "lat_hist" in out:
+        # cumulative post-slot histogram: windowed differences on the host
+        # give per-slot tail-latency traces (SimTimeline.recovery_slots)
+        y["lat_hist"] = out["lat_hist"]
+    return y
 
 
 def _make_slot_step_fused(ctx, warmup: int):
@@ -731,12 +909,24 @@ def _make_slot_step_fused(ctx, warmup: int):
         if drop is not None:
             backlog = backlog - drop
         backlog = jnp.clip(backlog, 0, 1 << 30)
+        # the kernel's `lat` output is slot+1−birth where delivered (0
+        # elsewhere), so birth = slot+1−lat: the measured-window filter and
+        # histogram run OUTSIDE the kernel on its existing outputs — the
+        # kernel body stays untouched and the batched bitwise-parity
+        # contract is preserved counter for counter
+        delivered_m = deliver != 0
+        meas = delivered_m & (slot + 1 - lat >= warmup)
+        lat_sum = jnp.where(meas, lat, 0).sum()
+        lat_cnt = meas.sum()
         updates = dict(rec=new_rec, birth=new_birth, port=new_port,
                        backlog=backlog)
+        if ctx["hist_bins"]:
+            updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
+                lat, meas, ctx["hist_bins"])
         if not trivial:
             updates["link_use"] = state["link_use"] + dep_port.astype(jnp.int32)
-        out = _finish_slot(state, warmup, (deliver != 0).sum(), lat.sum(),
-                           can, drop, qdrop=qdrop, **updates)
+        out = _finish_slot(state, warmup, delivered_m.sum(), lat_sum,
+                           lat_cnt, can, drop, qdrop=qdrop, **updates)
         return out, (_timeline_y(out, new_birth, dep_port, link_ok)
                      if scheduled else None)
 
@@ -809,7 +999,9 @@ def _make_slot_step_reference(ctx, warmup: int):
         # ---- per-link acceptance (each in-queue receives ≤ 1 packet) ----
         delivered = jnp.int32(0)
         lat_sum = jnp.int32(0)
+        lat_cnt = jnp.int32(0)
         dead_crossings = jnp.int32(0)
+        age_l, meas_l, del_l = [], [], []
         new_dst, new_rec, new_birth = dst, rec, birth
         link_use = None if trivial else state["link_use"]
         for p in range(P):
@@ -828,9 +1020,18 @@ def _make_slot_step_reference(ctx, warmup: int):
             freeq = (new_dst[:, p] < 0).sum(axis=1)
             ok = has & ~done & (freeq >= jnp.where(turning, 2, 1))
             moved = will_deliver | ok
-            # stats
+            # stats — latency over measured deliveries only (birth >=
+            # warmup, the PR-6 warmup-bias fix; identical to the batched
+            # step's filter)
+            age_p = slot + 1 - pk_birth
+            meas_p = will_deliver & (pk_birth >= warmup)
             delivered += will_deliver.sum()
-            lat_sum += jnp.where(will_deliver, slot + 1 - pk_birth, 0).sum()
+            lat_sum += jnp.where(meas_p, age_p, 0).sum()
+            lat_cnt += meas_p.sum()
+            if ctx["hist_bins"] or ctx.get("lat_trace"):
+                age_l.append(age_p)
+                meas_l.append(meas_p)
+                del_l.append(will_deliver)
             if scheduled:
                 dead_crossings += (moved & ~link_ok[u, p]).sum()
             if link_use is not None:
@@ -856,16 +1057,26 @@ def _make_slot_step_reference(ctx, warmup: int):
             state, key, new_dst, new_rec, new_birth, ctx, masks)
         updates = dict(dst=new_dst, rec=new_rec, birth=new_birth,
                        backlog=backlog)
+        if ctx["hist_bins"]:
+            updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
+                jnp.stack(age_l, 1), jnp.stack(meas_l, 1),
+                ctx["hist_bins"])
         if link_use is not None:
             updates["link_use"] = link_use
-        out = _finish_slot(state, warmup, delivered, lat_sum, can, drop,
-                           qdrop=qdrop, **updates)
+        out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
+                           drop, qdrop=qdrop, **updates)
         y = None
         if scheduled:
             y = dict(delivered=out["delivered"], injected=out["injected"],
                      dropped=out["dropped"],
                      in_flight=(new_dst >= 0).sum(),
                      dead_crossings=dead_crossings)
+            if ctx["hist_bins"]:
+                y["lat_hist"] = out["lat_hist"]
+        elif ctx.get("lat_trace"):
+            # the per-packet oracle: every delivery's age + flag, per slot
+            # (test-scale only — slots×N×2n device→host traffic)
+            y = dict(age=jnp.stack(age_l, 1), deliv=jnp.stack(del_l, 1))
         return out, y
 
     return slot_step
@@ -928,7 +1139,8 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
               queue: int, scenario: Scenario | None = None,
               force_masks: bool = False, force_dead_nodes: bool = False,
               schedule: CompiledSchedule | None = None,
-              pad_epochs: int | None = None):
+              pad_epochs: int | None = None, *, hist_bins: int = 0,
+              lat_trace: bool = False):
     """`force_masks=True` builds the mask-threaded (non-trivial) context
     even for the pristine scenario — used by `simulate_scenario_sweep`,
     where a pristine pattern may ride the traced-mask program alongside
@@ -939,8 +1151,16 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     `schedule` (a `CompiledSchedule`) builds the TIME-INDEXED context:
     per-epoch mask stacks (padded to `pad_epochs` when sweeping K
     schedules of differing epoch counts) plus the slot→epoch map, all
-    traced inputs of the batched/fused programs."""
+    traced inputs of the batched/fused programs.  `hist_bins=B` turns on
+    the in-carry latency histogram (age buckets 0..B−2 exact, B−1
+    overflow); `lat_trace=True` makes the REFERENCE runner additionally
+    emit per-slot delivery traces (the per-packet latency oracle —
+    test-scale only, exclusive with `schedule`)."""
     scenario = scenario or Scenario()
+    if lat_trace and schedule is not None:
+        raise ValueError("lat_trace is exclusive with schedule=")
+    if hist_bins < 0:
+        raise ValueError(f"hist_bins must be >= 0, got {hist_bins}")
     policy = schedule.policy if schedule is not None else scenario.policy
     trivial = (schedule is None and scenario.is_trivial
                and not force_masks)
@@ -997,7 +1217,8 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
                 scenario, g, t.N, dst_np if fixed_dst else None,
                 force_dead_nodes))
     return dict(
-        n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype, **scen,
+        n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype,
+        hist_bins=int(hist_bins), lat_trace=bool(lat_trace), **scen,
         nbr=jnp.asarray(t.neighbors),
         rec_a=jnp.asarray(t.records_a),
         rec_b=jnp.asarray(t.records_b),
@@ -1024,8 +1245,11 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
         slot=jnp.int32(0),
         delivered=jnp.int32(0),
         lat_sum=jnp.int32(0),
+        lat_cnt=jnp.int32(0),
         injected=jnp.int32(0),
         dropped=jnp.int32(0))
+    if ctx["hist_bins"]:
+        state["lat_hist"] = jnp.zeros((ctx["hist_bins"],), jnp.int32)
     if not ctx["trivial"]:
         state["link_use"] = jnp.zeros((N, P), dtype=jnp.int32)
     if impl in ("batched", "fused"):
@@ -1086,8 +1310,10 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
     scen_key = (ctx["scen_fp"] if impl == "reference"
                 else ctx["scen_structure"])
     scheduled = ctx.get("scheduled", False)
+    tracing = ctx["lat_trace"] and impl == "reference"
     key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
-           ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key)
+           ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key,
+           ctx["hist_bins"], tracing)
     if key not in _RUNNER_CACHE:
         if impl == "reference":
             step = _make_slot_step_reference(ctx, warmup)
@@ -1096,7 +1322,11 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
                 TRACE_COUNTS[impl] += 1
                 ks = jax.random.split(key, slots)
                 final, ys = jax.lax.scan(step, st, ks)
-                return dict(final, timeline=ys) if scheduled else final
+                if scheduled:
+                    return dict(final, timeline=ys)
+                if tracing:
+                    return dict(final, lat_trace=ys)
+                return final
         else:
             step = (_make_slot_step_batched(ctx, warmup)
                     if impl == "batched"
@@ -1117,8 +1347,9 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
         state_keys = list(_init_state(ctx, 0.0, impl))
         axes = {k: (None if k in _SHARED_STATE else 0) for k in state_keys}
         # the per-slot timeline ys only exist in scheduled outputs and are
-        # always batched along the vmapped axes
-        out_ax = dict(axes, timeline=0) if scheduled else axes
+        # always batched along the vmapped axes (ditto the oracle trace)
+        out_ax = dict(axes, timeline=0) if scheduled else (
+            dict(axes, lat_trace=0) if tracing else axes)
         if n_seeds > 1:
             # seed axis: same initial state, one key per seed
             runner = jax.vmap(runner, in_axes=(None, 0), out_axes=out_ax)
@@ -1144,19 +1375,26 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
 def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
     measured = slots - warmup
     delivered = int(out["delivered"])
+    lat_cnt = int(out["lat_cnt"])
     # occupancy at run end: the reference keeps dst-as-occupancy, the
     # batched state marks free slots with birth < 0
     occ = out.get("dst", out.get("birth"))
     lu = out.get("link_use")
     tl = out.get("timeline")
+    lh = out.get("lat_hist")
     return SimResult(
         accepted_load=delivered / max(measured * N, 1),
-        avg_latency_cycles=PACKET_PHITS * float(out["lat_sum"]) / max(delivered, 1),
+        # mean over MEASURED deliveries (born at/after warmup); NaN — not
+        # a fake 0.0 — when nothing qualified
+        avg_latency_cycles=(PACKET_PHITS * float(out["lat_sum"]) / lat_cnt
+                            if lat_cnt else float("nan")),
         delivered=delivered,
         injected=int(out["injected"]),
         slots=slots,
         dropped=int(out.get("dropped", 0)),
         in_flight=0 if occ is None else int((np.asarray(occ) >= 0).sum()),
+        lat_count=lat_cnt,
+        latency_hist=None if lh is None else np.asarray(lh),
         link_use=None if lu is None else np.asarray(lu),
         timeline=None if tl is None else SimTimeline(
             **{k: np.asarray(v) for k, v in tl.items()}))
@@ -1171,8 +1409,8 @@ def _result_grid(out, axes_sizes: tuple, impl: str, *, slots: int,
     `simulate_scenario_sweep` so the kept-counter set and axis
     normalization cannot drift between them."""
     occ_key = "dst" if impl == "reference" else "birth"
-    keep = ("delivered", "lat_sum", "injected", "dropped", "link_use",
-            occ_key)
+    keep = ("delivered", "lat_sum", "lat_cnt", "lat_hist", "injected",
+            "dropped", "link_use", occ_key)
     out_np = {k: np.asarray(v) for k, v in out.items() if k in keep}
     tl = out.get("timeline")
     tl_np = (None if tl is None
@@ -1219,7 +1457,47 @@ class SweepStats:
         return z * a.std(axis=1, ddof=1) / np.sqrt(k)
 
     def latency_mean(self) -> np.ndarray:
-        return self.field("avg_latency_cycles").mean(axis=1)
+        """Per-load latency mean pooled over seeds, weighted by each
+        seed's MEASURED delivery count (an unweighted per-seed mean
+        over-represents starved seeds); seeds that measured nothing
+        (NaN mean, zero weight) drop out, and a load point where no seed
+        measured anything is NaN."""
+        m = self.field("avg_latency_cycles")               # (L, S)
+        w = self.field("lat_count")
+        w = np.where(np.isnan(m), 0.0, w)
+        tot = w.sum(axis=1)
+        num = np.where(w > 0, m, 0.0) * w
+        return np.where(tot > 0, num.sum(axis=1) / np.maximum(tot, 1.0),
+                        np.nan)
+
+    def latency_hist(self) -> np.ndarray:
+        """(L, B) histogram pooled (summed) over the seed axis — the
+        exact multi-seed distribution, not an average of averages."""
+        rows = []
+        for row in self.results:
+            hs = [r.latency_hist for r in row]
+            if any(h is None for h in hs):
+                raise ValueError(
+                    "sweep ran without hist_bins; pass hist_bins= to the "
+                    "sweep call to collect latency histograms")
+            rows.append(np.sum(hs, axis=0))
+        return np.asarray(rows)
+
+    def latency_percentile(self, q: float) -> np.ndarray:
+        """(L,) exact q-th latency percentile (cycles) of the pooled
+        per-load histogram; NaN where nothing was measured, +inf where
+        the percentile falls in the overflow bucket."""
+        return np.array([_hist_percentile(h, q)
+                         for h in self.latency_hist()])
+
+    def latency_p50(self) -> np.ndarray:
+        return self.latency_percentile(0.50)
+
+    def latency_p99(self) -> np.ndarray:
+        return self.latency_percentile(0.99)
+
+    def latency_p999(self) -> np.ndarray:
+        return self.latency_percentile(0.999)
 
 
 def _seed_list(seed: int, seeds) -> list[int] | None:
@@ -1232,7 +1510,7 @@ def _seed_list(seed: int, seeds) -> list[int] | None:
 
 def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
                 queue, seed, seed_list, tables, impl, scenario,
-                scenarios=None, schedules=None):
+                scenarios=None, schedules=None, hist_bins=0):
     """Build (runner, broadcast initial state, (L[, S]) key grid) for one
     sweep device program.  Key derivation: run (ℓ, s) of a multi-load
     sweep uses `fold_in(PRNGKey(seeds[s] + 17), ℓ)` — every load point
@@ -1256,7 +1534,8 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
         E = max(c.E for c in schedules)
         fdn = any(c.has_dead_nodes for c in schedules)
         ctx = _make_ctx(t, g, pattern, seed, queue, schedule=schedules[0],
-                        pad_epochs=E, force_dead_nodes=fdn)
+                        pad_epochs=E, force_dead_nodes=fdn,
+                        hist_bins=hist_bins)
         dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
                   else None)
         sched_keys = ["link_ok", "inj_ok", "dst_live_fixed", "slot2epoch"]
@@ -1266,12 +1545,14 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
             _schedule_mask_fields(c, g, t.N, dst_np, fdn, pad_to=E)
             for c in schedules[1:]]
     elif scenarios is None:
-        ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
+        ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
+                        hist_bins=hist_bins)
         masks = None
     else:
         fdn = any(s.dead_nodes for s in scenarios)
         ctx = _make_ctx(t, g, pattern, seed, queue, scenarios[0],
-                        force_masks=True, force_dead_nodes=fdn)
+                        force_masks=True, force_dead_nodes=fdn,
+                        hist_bins=hist_bins)
         dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
                   else None)
         masks = [{k: ctx[k] for k in ("link_ok", "inj_ok", "live_tbl",
@@ -1327,7 +1608,8 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
              seed: int = 0, tables: SimTables | None = None,
              impl: str = "batched", scenario: Scenario | None = None,
              fold: int | None = None,
-             schedule: FaultSchedule | None = None) -> SimResult:
+             schedule: FaultSchedule | None = None,
+             hist_bins: int = 0) -> SimResult:
     """Run `slots` packet-slots (16 cycles each) at offered load `load`
     (phits/cycle/node) and measure accepted throughput + latency.
 
@@ -1346,7 +1628,12 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     impl="fused" routes the slot update through the Pallas kernel
     (`repro.kernels.sim_step`): same state layout and pre-drawn traffic as
     the batched path, winner/acceptance/apply fused into one kernel pass
-    (interpret mode off-TPU) — results are bitwise-equal to batched."""
+    (interpret mode off-TPU) — results are bitwise-equal to batched.
+
+    `hist_bins=B` additionally collects the (B,)-bucket latency histogram
+    in the scan carry (`SimResult.latency_hist` /
+    `latency_p50/p99/p999`); 0 (the default) compiles the exact
+    histogram-free program."""
     if impl not in ("batched", "reference", "fused"):
         raise ValueError(f"unknown simulator impl {impl!r}")
     t = tables or build_tables(g, seed)
@@ -1354,9 +1641,11 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
         if scenario is not None:
             raise ValueError("pass either scenario= or schedule=, not both")
         ctx = _make_ctx(t, g, pattern, seed, queue,
-                        schedule=ensure_compiled(schedule, g, slots))
+                        schedule=ensure_compiled(schedule, g, slots),
+                        hist_bins=hist_bins)
     else:
-        ctx = _make_ctx(t, g, pattern, seed, queue, scenario)
+        ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
+                        hist_bins=hist_bins)
     runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
                          n_loads=1)
     key = jax.random.PRNGKey(seed + 17)
@@ -1371,7 +1660,8 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
                    seed: int = 0, seeds=None,
                    tables: SimTables | None = None,
                    impl: str = "batched", scenario: Scenario | None = None,
-                   schedule: FaultSchedule | None = None):
+                   schedule: FaultSchedule | None = None,
+                   hist_bins: int = 0):
     """An entire offered-load curve (Figs. 5–8) as ONE device program: the
     per-slot update is vmapped over the load axis and — when `seeds` is
     given — over a nested seed axis, so the whole sweep JITs once and runs
@@ -1391,13 +1681,15 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
     if sl is None and len(loads) == 1:
         return [simulate(g, pattern, loads[0], slots=slots, warmup=warmup,
                          queue=queue, seed=seed, tables=tables, impl=impl,
-                         scenario=scenario, schedule=schedule)]
+                         scenario=scenario, schedule=schedule,
+                         hist_bins=hist_bins)]
     runner, state, keys, t, _ = _sweep_plan(
         g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
         seed=seed, seed_list=sl, tables=tables, impl=impl,
         scenario=scenario,
         schedules=(None if schedule is None
-                   else [ensure_compiled(schedule, g, slots)]))
+                   else [ensure_compiled(schedule, g, slots)]),
+        hist_bins=hist_bins)
     out = runner(state, keys)
     L, S = len(loads), len(sl or [seed])
     res = _result_grid(out, (L, S), impl, slots=slots, warmup=warmup,
@@ -1412,7 +1704,7 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
                             loads=(0.6,), *, slots: int = 512,
                             warmup: int = 128, queue: int = 4, seed: int = 0,
                             seeds=None, tables: SimTables | None = None,
-                            impl: str = "batched"):
+                            impl: str = "batched", hist_bins: int = 0):
     """K fault patterns × (loads × seeds) as ONE device program: the
     scenario masks are traced state inputs, so the compiled slot update is
     vmapped over an outermost scenario axis — K patterns cost one trace
@@ -1461,7 +1753,7 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
     runner, state, keys, t, _ = _sweep_plan(
         g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
         seed=seed, seed_list=sl, tables=tables, impl=impl, scenario=None,
-        scenarios=scenarios)
+        scenarios=scenarios, hist_bins=hist_bins)
     out = runner(state, keys)
     K, L, S = len(scenarios), len(loads), len(sl or [seed])
     res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
@@ -1481,7 +1773,7 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
                             loads=(0.6,), *, slots: int = 512,
                             warmup: int = 128, queue: int = 4, seed: int = 0,
                             seeds=None, tables: SimTables | None = None,
-                            impl: str = "batched"):
+                            impl: str = "batched", hist_bins: int = 0):
     """K transient-fault TIMELINES × (loads × seeds) as ONE device
     program — `simulate_scenario_sweep` generalized along the time axis.
     Each schedule compiles to per-epoch mask stacks + a slot→epoch map;
@@ -1528,7 +1820,7 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
     runner, state, keys, t, _ = _sweep_plan(
         g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
         seed=seed, seed_list=sl, tables=tables, impl=impl, scenario=None,
-        schedules=compiled)
+        schedules=compiled, hist_bins=hist_bins)
     out = runner(state, keys)
     K, L, S = len(compiled), len(loads), len(sl or [seed])
     res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
@@ -1563,3 +1855,68 @@ def peak_throughput(g: LatticeGraph, pattern: str, loads=None, **kw):
     res = simulate_load_sweep(g, pattern, loads, **kw)
     best = max(res, key=lambda r: r.accepted_load)
     return best, res
+
+
+def reference_latency_samples(g: LatticeGraph, pattern: str, load: float,
+                              *, slots: int = 512, warmup: int = 128,
+                              queue: int = 4, seed: int = 0,
+                              tables: SimTables | None = None,
+                              scenario: Scenario | None = None,
+                              hist_bins: int = 0):
+    """The per-packet latency ORACLE: one reference-impl run that, on top
+    of the usual counters (and histogram, when `hist_bins` is given),
+    records every delivery's exact age in slots.  Returns
+    ``(SimResult, samples)`` where ``samples`` holds two sorted int
+    arrays of per-packet ages:
+
+      * ``measured`` — deliveries of packets born at/after warmup (the
+        population `lat_sum`/`lat_cnt`/`latency_hist` count), and
+      * ``window``  — deliveries at slots ≥ warmup regardless of birth
+        (the pre-fix biased population, kept so the warmup-bias
+        regression test can demonstrate the difference).
+
+    The run uses the same PRNG key derivation as `simulate(...,
+    impl="reference")`, so the samples describe exactly that run —
+    percentile accessors are validated cycle-exactly against them.
+    Test-scale only: the trace is a (slots, N, 2n) device→host transfer.
+    """
+    t = tables or build_tables(g, seed)
+    ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
+                    hist_bins=hist_bins, lat_trace=True)
+    runner = _get_runner(t, ctx, slots=slots, warmup=warmup,
+                         impl="reference", n_loads=1)
+    out = dict(runner(_init_state(ctx, load, "reference", slots),
+                      jax.random.PRNGKey(seed + 17)))
+    tr = out.pop("lat_trace")
+    res = _result(out, slots=slots, warmup=warmup, N=t.N)
+    age = np.asarray(tr["age"])                        # (slots, N, P)
+    deliv = np.asarray(tr["deliv"]).astype(bool)
+    slot_idx = np.arange(slots)[:, None, None]
+    birth = slot_idx + 1 - age
+    samples = dict(
+        measured=np.sort(age[deliv & (birth >= warmup)]),
+        window=np.sort(age[deliv & (slot_idx >= warmup)]))
+    return res, samples
+
+
+def schedule_recovery_slots(result: SimResult, schedule: FaultSchedule,
+                            *, q: float = 0.99, window: int = 64,
+                            slack_cycles: float = 0.0) -> int | None:
+    """Recovery time of a transient-fault run: slots from the schedule's
+    LAST repair event until the windowed q-th latency percentile returns
+    to its pre-fault baseline (see `SimTimeline.recovery_slots`).  The
+    fault onset is the schedule's first ``*_down`` event, the repair its
+    last ``*_up`` event; `result` must come from a `schedule=` run with
+    `hist_bins` enabled.  Returns None when the tail never recovers
+    inside the run."""
+    downs = [s for s, kind, _ in schedule.events if kind.endswith("_down")]
+    ups = [s for s, kind, _ in schedule.events if kind.endswith("_up")]
+    if not downs or not ups:
+        raise ValueError(
+            "schedule needs at least one *_down and one *_up event to "
+            f"define a fault/repair pair, got events={schedule.events!r}")
+    if result.timeline is None:
+        raise ValueError("result has no timeline — run with schedule=")
+    return result.timeline.recovery_slots(
+        min(downs), max(ups), q=q, window=window,
+        slack_cycles=slack_cycles)

@@ -237,7 +237,15 @@ def fused_slot_step(rec, birth, port, prio, slot, want, tr_r, tr_p, tr_v,
 
     Returns (new_rec, new_birth, new_port, deliver, lat, can, drop,
     dep_port) — deliver/can/drop/dep_port as int8 masks, lat as int32
-    latency contributions.  Bitwise-equal to the batched slot update."""
+    latency contributions.  Bitwise-equal to the batched slot update.
+
+    CONTRACT (latency telemetry): `lat` is slot+1−birth exactly where
+    `deliver` is set and 0 elsewhere, so the wrapper reconstructs each
+    delivered packet's birth as slot+1−lat.  The measured-window filter
+    (birth ≥ warmup) and the age-bucket histogram both run OUTSIDE the
+    kernel on these two outputs — keep them intact when changing the
+    kernel, or the wrapper-side telemetry (and its bitwise parity with
+    the batched step) silently breaks."""
     N, P, Q, n = rec.shape
     trivial = link_ok is None
     if block_nodes is None or N % block_nodes:

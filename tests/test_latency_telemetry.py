@@ -1,0 +1,332 @@
+"""Latency-telemetry tests (ISSUE 6): the three accounting bugfixes
+(warmup birth bias, zero-delivered NaN, delivered-weighted sweep means),
+the in-carry age histogram across all three slot_step implementations,
+cycle-exact percentiles against the reference per-packet oracle, and the
+post-repair recovery metric.
+
+Property strategies stay inside the `tests/_propcheck.py` shim subset
+(`integers`, `sampled_from`, `@given`, `@settings`), so this module runs
+offline in CI exactly as with real hypothesis.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BCC, FCC, PC, RTT, FaultSchedule, Scenario, Torus
+from repro.core.simulation import (PACKET_PHITS, SimResult, SimTimeline,
+                                   SweepStats, build_tables,
+                                   reference_latency_samples,
+                                   schedule_recovery_slots, simulate,
+                                   simulate_schedule_sweep, simulate_sweep)
+
+# shared run shape + bucket count → one compile per (graph, impl) across
+# all examples (hist_bins is part of the runner cache key)
+SLOTS, WARMUP, BINS = 160, 40, 64
+
+_GRAPHS = {
+    "BCC2": BCC(2),          # 32 nodes
+    "PC2": PC(2),            # 8 nodes
+    "T442": Torus(4, 4, 2),  # 32 nodes, mixed-radix
+}
+_TABLES = {k: build_tables(g) for k, g in _GRAPHS.items()}
+IMPLS = ("batched", "fused", "reference")
+
+
+def _run(name, load, seed, impl="batched", pattern="uniform", **kw):
+    g = _GRAPHS[name]
+    kw.setdefault("slots", SLOTS)
+    kw.setdefault("warmup", WARMUP)
+    return simulate(g, pattern, load, seed=seed, tables=_TABLES[name],
+                    impl=impl, **kw)
+
+
+# ---------------------------------------------------------------- bugfixes
+@pytest.mark.parametrize("impl", IMPLS)
+def test_warmup_bias_no_measured_packets_is_nan(impl):
+    """Regression (warmup birth bias): with warmup = slots−1 no packet can
+    be BORN in the measured window and also deliver, so the measured
+    population is empty and the mean must be NaN.  Pre-fix the mean
+    averaged warmup-era births delivered in the last slot — a finite,
+    inflated number."""
+    r = _run("BCC2", 0.6, seed=3, impl=impl, warmup=SLOTS - 1)
+    assert r.delivered > 0          # the window itself saw deliveries
+    assert r.lat_count == 0
+    assert np.isnan(r.avg_latency_cycles), (impl, r.avg_latency_cycles)
+
+
+def test_warmup_bias_oracle_mean_is_measured_population():
+    """Regression (warmup birth bias), exact form: the reported mean
+    equals the per-packet mean over packets BORN at/after warmup — and
+    provably differs from the pre-fix population (packets DELIVERED after
+    warmup regardless of birth) at high load, where warmup-era births
+    carry inflated queue-buildup ages."""
+    r, s = reference_latency_samples(
+        _GRAPHS["BCC2"], "uniform", 1.0, slots=SLOTS, warmup=WARMUP,
+        seed=1, tables=_TABLES["BCC2"], hist_bins=BINS)
+    measured, window = s["measured"], s["window"]
+    assert measured.size == r.lat_count
+    assert np.isclose(r.avg_latency_cycles,
+                      PACKET_PHITS * measured.mean(), atol=1e-9)
+    # the bias is real at saturation: the old population is strictly
+    # larger and strictly slower on average
+    assert window.size > measured.size
+    assert window.mean() > measured.mean()
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_zero_delivered_reports_nan_not_zero(impl):
+    """Regression (max(delivered, 1) bug): a run that delivers nothing
+    must report NaN latency, not a fake 0.0 cycles."""
+    r = _run("PC2", 0.0, seed=0, impl=impl, slots=64, warmup=16)
+    assert r.delivered == 0
+    assert np.isnan(r.avg_latency_cycles)
+
+
+def _fake_result(mean, count):
+    return SimResult(accepted_load=0.0, avg_latency_cycles=mean,
+                     delivered=count, injected=count, slots=SLOTS,
+                     lat_count=count)
+
+
+def test_sweepstats_latency_mean_is_delivered_weighted():
+    """Regression (unweighted seed mean): a starved seed (few measured
+    deliveries) must not drag the per-load mean with full weight."""
+    stats = SweepStats(
+        loads=(0.5, 0.9), seeds=(0, 1),
+        results=((_fake_result(10.0, 900), _fake_result(20.0, 100)),
+                 (_fake_result(30.0, 0), _fake_result(50.0, 400))))
+    m = stats.latency_mean()
+    # load 0: weighted (10·900 + 20·100)/1000 = 11, NOT the unweighted 15
+    assert np.isclose(m[0], 11.0), m
+    # load 1: the zero-count NaN seed drops out entirely
+    assert np.isclose(m[1], 50.0), m
+
+
+def test_sweepstats_latency_mean_all_nan_load_is_nan():
+    stats = SweepStats(loads=(0.1,), seeds=(0, 1),
+                       results=((_fake_result(float("nan"), 0),
+                                 _fake_result(float("nan"), 0)),))
+    assert np.isnan(stats.latency_mean()[0])
+
+
+def test_sweep_end_to_end_weighted_mean_matches_manual():
+    """The weighted mean through a real multi-seed sweep equals the
+    hand-pooled per-seed sums."""
+    st_ = simulate_sweep(_GRAPHS["PC2"], "uniform", [0.3, 0.7],
+                         slots=SLOTS, warmup=WARMUP, seed=0, seeds=3,
+                         tables=_TABLES["PC2"], hist_bins=BINS)
+    for li in range(2):
+        row = st_.results[li]
+        tot = sum(r.lat_count for r in row)
+        pooled = sum(r.avg_latency_cycles * r.lat_count for r in row) / tot
+        assert np.isclose(st_.latency_mean()[li], pooled)
+        # pooled histogram mass == pooled count
+        assert st_.latency_hist()[li].sum() == tot
+
+
+# ------------------------------------------------------- property tests
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)),
+       load=st.sampled_from([0.1, 0.4, 0.8]),
+       seed=st.integers(0, 4),
+       impl=st.sampled_from(["batched", "reference"]))
+def test_hist_total_equals_measured_count(name, load, seed, impl):
+    """Histogram mass == lat_count in every cell; with warmup=0 every
+    delivery is measured, so both equal `delivered`."""
+    r = _run(name, load, seed, impl=impl, hist_bins=BINS)
+    assert int(r.latency_hist.sum()) == r.lat_count
+    r0 = _run(name, load, seed, impl=impl, warmup=0, hist_bins=BINS)
+    assert int(r0.latency_hist.sum()) == r0.lat_count == r0.delivered
+
+
+@settings(max_examples=6)
+@given(name=st.sampled_from(sorted(_GRAPHS)),
+       seed=st.integers(0, 4),
+       pattern=st.sampled_from(["uniform", "antipodal"]))
+def test_min_latency_at_least_routed_distance(name, seed, pattern):
+    """Below saturation the youngest delivery still pays its route: one
+    injection slot + one slot per hop, so the smallest occupied bucket is
+    ≥ min routed distance + 1 (uniform) / diameter + 1 (antipodal — every
+    pair of these point-symmetric lattices sits at max distance)."""
+    g = _GRAPHS[name]
+    r = _run(name, 0.15, seed, pattern=pattern, hist_bins=BINS)
+    nz = np.flatnonzero(r.latency_hist)
+    assert nz.size > 0
+    d = g.distances_from_origin
+    bound = (g.diameter if pattern == "antipodal"
+             else int(d[d > 0].min())) + 1
+    assert nz.min() >= bound, (nz.min(), bound)
+
+
+_SCENARIOS = {
+    "trivial": None,
+    "links_dor": Scenario.random_link_faults(_GRAPHS["BCC2"], 3, seed=7),
+    "links_adapt": Scenario.random_link_faults(_GRAPHS["BCC2"], 3, seed=8,
+                                               policy="adaptive"),
+}
+
+
+@settings(max_examples=6)
+@given(load=st.sampled_from([0.3, 0.8]),
+       seed=st.integers(0, 4),
+       scen=st.sampled_from(sorted(_SCENARIOS)),
+       pattern=st.sampled_from(["uniform", "randompairings"]))
+def test_batched_fused_histograms_bitwise_equal(load, seed, scen, pattern):
+    """The fused Pallas wrapper reconstructs birth from the kernel's lat
+    output — its histogram must equal the batched one bit for bit, like
+    every other counter."""
+    kw = dict(pattern=pattern, scenario=_SCENARIOS[scen], hist_bins=BINS)
+    rb = _run("BCC2", load, seed, impl="batched", **kw)
+    rf = _run("BCC2", load, seed, impl="fused", **kw)
+    assert np.array_equal(rb.latency_hist, rf.latency_hist)
+    assert rb.lat_count == rf.lat_count
+    assert (np.isnan(rb.avg_latency_cycles)
+            and np.isnan(rf.avg_latency_cycles)) \
+        or rb.avg_latency_cycles == rf.avg_latency_cycles
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(0, 3),
+       scen=st.sampled_from(["links_dor", "links_adapt"]))
+def test_e1_schedule_hist_equals_static_scenario(seed, scen):
+    """A degenerate single-epoch schedule is bitwise the static scenario
+    run — including the histogram, and its timeline's cumulative
+    histogram must end at the run total."""
+    scenario = _SCENARIOS[scen]
+    rs = _run("BCC2", 0.5, seed, scenario=scenario, hist_bins=BINS)
+    rt = _run("BCC2", 0.5, seed,
+              schedule=FaultSchedule.from_scenario(scenario),
+              hist_bins=BINS)
+    assert np.array_equal(rs.latency_hist, rt.latency_hist)
+    assert np.array_equal(rt.timeline.lat_hist[-1], rt.latency_hist)
+    # cumulative: monotone non-decreasing per bucket
+    assert (np.diff(rt.timeline.lat_hist, axis=0) >= 0).all()
+
+
+# ----------------------------------------------- percentile oracle (exact)
+_CELLS = {
+    "T4444": Torus(4, 4, 4, 4),     # the acceptance 4-ary 4-cube
+    "RTT2": RTT(2),
+    "FCC2": FCC(2),
+    "BCC2": BCC(2),
+}
+
+
+@pytest.mark.parametrize("cell", sorted(_CELLS))
+def test_percentiles_cycle_exact_vs_oracle(cell):
+    """Nearest-rank percentiles read off the bucketed histogram equal the
+    ones computed from the oracle's per-packet ages EXACTLY (hist_bins
+    exceeds any possible age, so no overflow truncation)."""
+    g = _CELLS[cell]
+    slots, warmup = 96, 24
+    r, s = reference_latency_samples(g, "uniform", 0.3, slots=slots,
+                                     warmup=warmup, seed=0,
+                                     hist_bins=slots + 2)
+    m = s["measured"]
+    assert m.size == r.lat_count == int(r.latency_hist.sum())
+    assert m.size > 0
+    for q in (0.5, 0.99, 0.999):
+        rank = min(m.size, max(1, int(np.ceil(q * m.size))))
+        assert r.latency_percentile(q) == PACKET_PHITS * int(m[rank - 1]), \
+            (cell, q)
+    assert r.latency_p50 <= r.latency_p99 <= r.latency_p999
+    # the mean agrees with the per-packet mean too
+    assert np.isclose(r.avg_latency_cycles, PACKET_PHITS * m.mean())
+
+
+def test_percentile_edge_cases():
+    h = np.zeros(8, np.int64)
+    r = SimResult(accepted_load=0.0, avg_latency_cycles=float("nan"),
+                  delivered=0, injected=0, slots=1, latency_hist=h)
+    assert np.isnan(r.latency_p99)                    # empty hist
+    h2 = h.copy()
+    h2[-1] = 5                                        # all mass overflows
+    r2 = SimResult(accepted_load=0.0, avg_latency_cycles=0.0, delivered=5,
+                   injected=5, slots=1, lat_count=5, latency_hist=h2)
+    assert r2.latency_p50 == float("inf")
+    with pytest.raises(ValueError):
+        r2.latency_percentile(1.5)
+    rnone = SimResult(accepted_load=0.0, avg_latency_cycles=0.0,
+                      delivered=0, injected=0, slots=1)
+    with pytest.raises(ValueError):
+        rnone.latency_percentile(0.99)
+
+
+# ------------------------------------------------------ recovery metric
+def _synthetic_timeline(per_slot_hists):
+    cum = np.cumsum(per_slot_hists, axis=0)
+    z = np.zeros(len(per_slot_hists), np.int64)
+    return SimTimeline(delivered=z, injected=z, dropped=z, in_flight=z,
+                       dead_crossings=z, lat_hist=cum)
+
+
+def test_recovery_slots_synthetic_deterministic():
+    """Hand-built timeline: steady age-1 traffic, ages jump to 6 during
+    the fault epoch [3, 5], back to 1 from slot 6.  With window=2 the
+    windowed p99 stays elevated at the repair slot (its window still
+    contains fault-era deliveries) and recovers exactly one slot later."""
+    B = 8
+    per = []
+    for s in range(10):
+        h = np.zeros(B, np.int64)
+        h[6 if 3 <= s <= 5 else 1] = 5
+        per.append(h)
+    tl = _synthetic_timeline(per)
+    assert tl.recovery_slots(3, 6, q=0.99, window=2) == 1
+    # a wide-enough slack accepts the still-polluted repair-slot window
+    assert tl.recovery_slots(3, 6, q=0.99, window=2,
+                             slack_cycles=5 * PACKET_PHITS) == 0
+    # percentile trace: elevated exactly while fault deliveries are in
+    tr = tl.latency_percentile_trace(q=0.99, window=1)
+    assert tr[2] == PACKET_PHITS and tr[4] == 6 * PACKET_PHITS
+    with pytest.raises(ValueError):
+        tl.recovery_slots(0, 5)         # fault_slot must be > 0
+    with pytest.raises(ValueError):
+        tl.recovery_slots(5, 3)         # repair before fault
+
+
+def test_recovery_never_reached_is_none():
+    per = [np.array([0, 5, 0, 0], np.int64) for _ in range(3)]
+    per += [np.array([0, 0, 0, 5], np.int64) for _ in range(5)]
+    tl = _synthetic_timeline(per)
+    assert tl.recovery_slots(3, 4, q=0.99, window=2) is None
+
+
+def test_schedule_recovery_slots_end_to_end():
+    """A link flap on a real run: the metric comes back a non-negative
+    int (or None on a run too short to recover), and the helper rejects
+    schedules with no fault/repair pair and results without a
+    timeline."""
+    g = _GRAPHS["BCC2"]
+    flap = FaultSchedule.link_flap((0, 0), 80, 120, policy="adaptive")
+    r = simulate(g, "uniform", 0.6, slots=400, warmup=WARMUP, seed=5,
+                 tables=_TABLES["BCC2"], schedule=flap, hist_bins=BINS)
+    rec = schedule_recovery_slots(r, flap, q=0.99, window=48,
+                                  slack_cycles=2 * PACKET_PHITS)
+    assert rec is None or (isinstance(rec, int) and rec >= 0)
+    with pytest.raises(ValueError):
+        schedule_recovery_slots(r, FaultSchedule())
+    plain = _run("BCC2", 0.6, 5, hist_bins=BINS)
+    with pytest.raises(ValueError):
+        schedule_recovery_slots(plain, flap)
+
+
+def test_schedule_sweep_carries_histograms():
+    """K×L×S schedule sweep: every lane's SimResult carries its histogram
+    and the E=1 lane equals the static run bit for bit."""
+    g = _GRAPHS["PC2"]
+    scen = Scenario.random_link_faults(g, 2, seed=4, policy="adaptive")
+    flap = FaultSchedule.link_flap((0, 0), 60, 100, policy="adaptive")
+    out = simulate_schedule_sweep(g, "uniform", [scen, flap], [0.4, 0.8],
+                                  slots=SLOTS, warmup=WARMUP, seed=1,
+                                  tables=_TABLES["PC2"], hist_bins=BINS)
+    for lane in out:
+        for r in lane:
+            assert r.latency_hist is not None
+            assert int(r.latency_hist.sum()) == r.lat_count
+            assert np.array_equal(r.timeline.lat_hist[-1], r.latency_hist)
+    static = simulate(g, "uniform", 0.4, slots=SLOTS, warmup=WARMUP,
+                      seed=1, tables=_TABLES["PC2"], scenario=scen,
+                      hist_bins=BINS, fold=0)
+    assert np.array_equal(out[0][0].latency_hist, static.latency_hist)
