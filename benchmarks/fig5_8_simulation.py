@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core import FourD_BCC, FourD_FCC, Torus
+from repro.core import FourD_BCC, FourD_FCC, SimConfig, Torus
 from repro.core.simulation import build_tables, simulate_sweep
 
 from .util import emit
@@ -38,15 +38,14 @@ def peak(g, tables, pattern, loads, slots, warmup, seed=3, seeds=None,
     With `hist_bins` the sweep also collects latency histograms and the
     fourth return is the exact p99 latency (cycles, seed-pooled) at the
     peak load (NaN without hist_bins)."""
+    cfg = SimConfig(slots=slots, warmup=warmup, tables=tables, seed=seed,
+                    hist_bins=hist_bins)
     if seeds is None:
-        res = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
-                             tables=tables, seed=seed, hist_bins=hist_bins)
+        res = simulate_sweep(g, pattern, loads, config=cfg)
         best = max(res, key=lambda r: r.accepted_load)
         p99 = best.latency_p99 if hist_bins else float("nan")
         return best.accepted_load, 0.0, best.avg_latency_cycles, p99
-    st = simulate_sweep(g, pattern, loads, slots=slots, warmup=warmup,
-                        tables=tables, seed=seed, seeds=seeds,
-                        hist_bins=hist_bins)
+    st = simulate_sweep(g, pattern, loads, config=cfg, seeds=seeds)
     mean = st.accepted_mean()
     i = int(np.argmax(mean))
     p99 = float(st.latency_p99()[i]) if hist_bins else float("nan")

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import Torus
+from repro.core import SimConfig, Torus
 from repro.core.simulation import build_tables, simulate, simulate_sweep
 
 from .util import emit
@@ -41,10 +41,11 @@ def main(quick: bool = False) -> None:
     warmup = 48 if quick else 128
     loads = (0.3, 0.6, 1.0) if quick else (0.2, 0.4, 0.6, 0.8, 1.0)
     t = build_tables(g)
+    cfg = SimConfig(slots=slots, warmup=warmup, seed=1, tables=t)
 
     def run(bins):
-        return simulate(g, "uniform", 0.6, slots=slots, warmup=warmup,
-                        seed=1, tables=t, hist_bins=bins)
+        return simulate(g, "uniform", 0.6,
+                        config=cfg.replace(hist_bins=bins))
 
     arms = (0, BINS)
     for bins in arms:                               # compile both first
@@ -60,11 +61,9 @@ def main(quick: bool = False) -> None:
          f"overhead_ratio={best[0] / best[BINS]:.3f};bins={BINS}")
 
     # percentile-vs-load curve: L load points, one compile, histograms on
-    simulate_sweep(g, "uniform", loads, slots=slots, warmup=warmup, seed=1,
-                   tables=t, hist_bins=BINS)       # compile
-    dt = _best(lambda: simulate_sweep(g, "uniform", loads, slots=slots,
-                                      warmup=warmup, seed=1, tables=t,
-                                      hist_bins=BINS))
+    hcfg = cfg.replace(hist_bins=BINS)
+    simulate_sweep(g, "uniform", loads, config=hcfg)         # compile
+    dt = _best(lambda: simulate_sweep(g, "uniform", loads, config=hcfg))
     emit(f"latency/p99curve{len(loads)}/N={g.order}", dt * 1e6,
          f"p99curve_loadpoints_per_s={len(loads) / dt:.2f};"
          f"bins={BINS}")

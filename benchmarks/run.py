@@ -19,7 +19,7 @@ import traceback
 from . import (fig5_8_simulation, latency_telemetry, roofline,
                routing_throughput, scenario_sim, sim_throughput,
                table1_distances, table2_lattices, throughput_bounds,
-               topology_collectives, transient_sim, util)
+               topology_collectives, transient_sim, util, vc_router)
 from .util import header
 
 SECTIONS = {
@@ -31,6 +31,7 @@ SECTIONS = {
     "scenarios": scenario_sim.main,
     "transient": transient_sim.main,
     "latency": latency_telemetry.main,
+    "vc": vc_router.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,

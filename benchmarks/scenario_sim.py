@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (Scenario, Torus, fault_aware_next_hop,
+from repro.core import (Scenario, SimConfig, Torus, fault_aware_next_hop,
                         faulted_distance_sweep)
 from repro.core.simulation import (_RUNNER_CACHE, build_tables, simulate,
                                    simulate_scenario_sweep, simulate_sweep)
@@ -35,10 +35,11 @@ def main(quick: bool = False) -> None:
     warmup = 48 if quick else 128
     t = build_tables(g)
     scen = Scenario.random_link_faults(g, 8, seed=5, policy="adaptive")
+    cfg = SimConfig(slots=slots, warmup=warmup, seed=1, tables=t)
 
     def run(scenario):
-        return simulate(g, "uniform", 0.6, slots=slots, warmup=warmup,
-                        seed=1, tables=t, scenario=scenario)
+        return simulate(g, "uniform", 0.6,
+                        config=cfg.replace(scenario=scenario))
 
     # compile both, then alternate (fair under machine noise)
     run(None)
@@ -57,8 +58,7 @@ def main(quick: bool = False) -> None:
 
     # multi-seed sweep: (loads × seeds) error-bar program, cost per run
     loads, seeds = (0.3, 0.6, 1.0), 2
-    kw = dict(slots=slots, warmup=warmup, seed=1, seeds=seeds, tables=t,
-              scenario=scen)
+    kw = dict(config=cfg.replace(scenario=scen), seeds=seeds)
     simulate_sweep(g, "uniform", loads, **kw)          # compile
     best_sweep = float("inf")
     for _ in range(REPS):
@@ -87,7 +87,8 @@ def main(quick: bool = False) -> None:
     kscens = [Scenario.random_link_faults(gk, 6, seed=100 + i,
                                           policy="adaptive")
               for i in range(K)]
-    skw = dict(slots=192, warmup=48, seed=1, tables=tk)
+    kcfg = SimConfig(slots=192, warmup=48, seed=1, tables=tk)
+    skw = dict(config=kcfg)
     _RUNNER_CACHE.clear()
     t0 = time.perf_counter()
     simulate_scenario_sweep(gk, "uniform", kscens, loads=(0.6,), **skw)
@@ -100,7 +101,7 @@ def main(quick: bool = False) -> None:
     t0 = time.perf_counter()
     for s in kscens:
         _RUNNER_CACHE.clear()            # pre-traced-mask behavior
-        simulate(gk, "uniform", 0.6, scenario=s, **skw)
+        simulate(gk, "uniform", 0.6, config=kcfg.replace(scenario=s))
     seq_cold = time.perf_counter() - t0
     emit(f"scenarios/scen_sweep{K}/N={gk.order}", best_ksweep * 1e6,
          f"scen_sweep_loadpoints_per_s={K / best_ksweep:.2f};"

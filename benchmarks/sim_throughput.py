@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import Torus
+from repro.core import SimConfig, Torus
 from repro.core.simulation import build_tables, simulate, simulate_sweep
 
 from .util import emit
@@ -37,10 +37,10 @@ def main(quick: bool = False) -> None:
     warmup = 48 if quick else 128
     loads = (0.3, 0.6, 1.0) if quick else (0.2, 0.4, 0.6, 0.8, 1.0)
     t = build_tables(g)
+    cfg = SimConfig(slots=slots, warmup=warmup, seed=1, tables=t)
 
     def run(impl, load=0.6):
-        return simulate(g, "uniform", load, slots=slots, warmup=warmup,
-                        seed=1, tables=t, impl=impl)
+        return simulate(g, "uniform", load, config=cfg.replace(impl=impl))
 
     # compile all three before timing, then alternate (fair under machine
     # noise); "fused" is the Pallas kernel path — interpret mode off-TPU,
@@ -63,10 +63,8 @@ def main(quick: bool = False) -> None:
          f"ratio={best['batched'] / best['fused']:.2f}x")
 
     # whole load curve as one vmapped device program
-    simulate_sweep(g, "uniform", loads, slots=slots, warmup=warmup, seed=1,
-                   tables=t)                     # compile
-    dt = _best(lambda: simulate_sweep(g, "uniform", loads, slots=slots,
-                                      warmup=warmup, seed=1, tables=t))
+    simulate_sweep(g, "uniform", loads, config=cfg)          # compile
+    dt = _best(lambda: simulate_sweep(g, "uniform", loads, config=cfg))
     emit(f"sim/sweep{len(loads)}/N={g.order}", dt * 1e6,
          f"sweep_loadpoints_per_s={len(loads) / dt:.2f};"
          f"per_point_s={dt / len(loads):.2f}")

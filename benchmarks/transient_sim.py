@@ -21,8 +21,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (FaultSchedule, Scenario, Torus, fault_aware_next_hop,
-                        fault_aware_next_hop_device)
+from repro.core import (FaultSchedule, Scenario, SimConfig, Torus,
+                        fault_aware_next_hop, fault_aware_next_hop_device)
 from repro.core.simulation import (_RUNNER_CACHE, build_tables, simulate,
                                    simulate_schedule_sweep)
 
@@ -44,13 +44,14 @@ def main(quick: bool = False) -> None:
                 (slots // 2, "link_down", (40, 2)),
                 (3 * slots // 4, "link_up", (1, 0))),
         base=scen, name="bench_flap")
-    kw = dict(slots=slots, warmup=warmup, seed=1, tables=t)
+    cfg = SimConfig(slots=slots, warmup=warmup, seed=1, tables=t)
+    kw = dict(config=cfg)
 
     def run_static():
-        return simulate(g, "uniform", 0.6, scenario=scen, **kw)
+        return simulate(g, "uniform", 0.6, config=cfg.replace(scenario=scen))
 
     def run_sched():
-        return simulate(g, "uniform", 0.6, schedule=flap, **kw)
+        return simulate(g, "uniform", 0.6, config=cfg.replace(schedule=flap))
 
     run_static()
     run_sched()                                    # compile both
@@ -86,7 +87,7 @@ def main(quick: bool = False) -> None:
     t0 = time.perf_counter()
     for s in kscheds:
         _RUNNER_CACHE.clear()              # per-timeline compile behavior
-        simulate(g, "uniform", 0.6, schedule=s, **kw)
+        simulate(g, "uniform", 0.6, config=cfg.replace(schedule=s))
     seq_cold = time.perf_counter() - t0
     emit(f"transient/sched_sweep{K}/N={g.order}", best_ksweep * 1e6,
          f"sched_loadpoints_per_s={K / best_ksweep:.2f};"

@@ -1,0 +1,72 @@
+"""VC credit-flow router cost + the saturation win over escape misrouting.
+
+Two committed records of the ISSUE 7 router:
+
+  * `vc/overhead` — the SAME cell run with the single-FIFO V=1 batched
+    step and with the (N, 2n, V, Q) credit-flow router at `vcs=2`,
+    interleaved best-of-`REPS`.  `vc_slots_per_s` gates the absolute VC
+    throughput; `overhead_ratio` (v1_time / v2_time) is the committed
+    price of the credit machinery (≈0.5 means V=2 costs 2× per slot —
+    expected: the state is V× wider and arbitration spans (port, VC)).
+    Pinned at N=512 in both modes: the quantity is per-slot router cost,
+    not lattice scale.
+
+  * `vc/ring_escape` — the n=1-ring livelock cell (T(8), one dead link,
+    load 0.25).  The old `policy="escape"` misroute heuristic livelocks
+    packets trapped between the fault and their destination; the VC
+    router's restricted-DOR escape lane delivers them.  Both accepted
+    loads are emitted with the `_sat_phits` gate suffix — deterministic
+    given the seed, so the gate pins the win itself, not a timing.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Scenario, SimConfig, Torus
+from repro.core.simulation import build_tables, simulate
+
+from .util import emit
+
+REPS = 3
+
+
+def main(quick: bool = False) -> None:
+    # ---- V=2 credit router vs V=1 single-FIFO, same cell ----
+    g = Torus(8, 8, 4, 2)
+    slots, warmup = 192, 48
+    t = build_tables(g)
+    cfg = SimConfig(slots=slots, warmup=warmup, seed=1, tables=t)
+
+    def run(vcs):
+        return simulate(g, "uniform", 0.6, config=cfg.replace(vcs=vcs))
+
+    for v in (1, 2):                               # compile both first
+        run(v)
+    best = {1: float("inf"), 2: float("inf")}
+    for _ in range(REPS):
+        for v in (1, 2):
+            t0 = time.perf_counter()
+            run(v)
+            best[v] = min(best[v], time.perf_counter() - t0)
+    emit(f"vc/overhead/N={g.order}", best[2] * 1e6,
+         f"vc_slots_per_s={slots / best[2]:.1f};"
+         f"overhead_ratio={best[1] / best[2]:.3f};vcs=2")
+
+    # ---- escape-lane saturation vs the misroute heuristic ----
+    # the ROADMAP livelock cell: T(8) ring, dead link (0,0), load 0.25
+    ring = Torus(8)
+    rt = build_tables(ring)
+    rcfg = SimConfig(slots=256, warmup=0, seed=3, tables=rt)
+    esc = simulate(ring, "uniform", 0.25, config=rcfg.replace(
+        scenario=Scenario(dead_links=((0, 0),), policy="escape")))
+    vc = simulate(ring, "uniform", 0.25, config=rcfg.replace(
+        scenario=Scenario(dead_links=((0, 0),), policy="adaptive"), vcs=2))
+    emit(f"vc/ring_escape/N={ring.order}", 0.0,
+         f"vc_sat_phits={vc.accepted_load:.4f};"
+         f"escape_sat_phits={esc.accepted_load:.4f};"
+         f"delivered_gain={vc.delivered / max(esc.delivered, 1):.2f}x;"
+         f"in_flight_esc={esc.in_flight};in_flight_vc={vc.in_flight}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,10 +21,12 @@ from .routing import (HierarchicalRouter, fault_aware_next_hop,
                       minimal_record_bruteforce, norm1, route_bcc, route_fcc,
                       route_ring, route_rtt, route_torus)
 from .scenario import Scenario, scenario_connected
+from .sim_config import SimConfig
 try:
-    from .routing_engine import RoutingEngine
+    from .routing_engine import RoutingEngine, credit_vc_select
 except ImportError:           # jax absent — the numpy oracle stands alone
     RoutingEngine = None      # type: ignore[assignment,misc]
+    credit_vc_select = None   # type: ignore[assignment]
 from .symmetry import (bcc_lift_is_never_symmetric, is_linear_automorphism,
                        is_linearly_symmetric, linear_stabilizer,
                        signed_permutation_matrices,
@@ -69,4 +71,5 @@ __all__ = [
     "faulted_average_distance", "faulted_diameter",
     "FaultSchedule", "CompiledSchedule", "faulted_schedule_stats",
     "fault_aware_schedule_load", "fault_aware_schedule_saturation",
+    "SimConfig", "credit_vc_select",
 ]

@@ -24,7 +24,13 @@ The spec is deliberately declarative: a scenario is nothing but
       - ``"escape"``    adaptive with a non-minimal escape hop: when every
                         productive port is dead, the packet takes the
                         first live port of any dimension (its record grows
-                        by the misroute and shrinks again later).
+                        by the misroute and shrinks again later).  On
+                        odd/n=1 rings the misroute can livelock at load;
+                        the VC credit-flow router (``vcs >= 2`` on a
+                        `repro.core.SimConfig`) supersedes this heuristic
+                        with a restricted-DOR escape *lane* that is
+                        provably deadlock-free and livelock-free — prefer
+                        it when simulating faulted fabrics.
 
 Downstream consumers turn the spec into **masks and tables** (never
 Python branching in a hot loop): the simulator threads ``link_ok`` /

@@ -132,6 +132,7 @@ starts are excluded from the counters but still occupy queue slots).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -141,8 +142,9 @@ import numpy as np
 from .fault_schedule import CompiledSchedule, FaultSchedule, ensure_compiled
 from .lattice import LatticeGraph
 from .routing import make_router
-from .routing_engine import canonical_reduce, policy_ports
+from .routing_engine import canonical_reduce, credit_vc_select, policy_ports
 from .scenario import Scenario
+from .sim_config import SimConfig
 
 PACKET_PHITS = 16
 
@@ -371,6 +373,16 @@ class SimResult:
     link_use: np.ndarray | None = field(default=None, compare=False)
     # per-slot counter trace, only emitted by FaultSchedule runs
     timeline: SimTimeline | None = field(default=None, compare=False)
+    # per-VC telemetry of the credit-flow router (vcs > 1 runs only):
+    # (V,) deliveries attributed to the winner's SOURCE lane, (V,)
+    # injections by the lane the packet was admitted into, and (V,)
+    # occupied queue slots at run end.  Packets may switch lanes at each
+    # hop, so only the V-SUMS obey conservation:
+    # sum(vc_injected) == injected, sum(vc_delivered) == delivered,
+    # sum(vc_in_flight) == in_flight.  None for vcs=1.
+    vc_delivered: np.ndarray | None = field(default=None, compare=False)
+    vc_injected: np.ndarray | None = field(default=None, compare=False)
+    vc_in_flight: np.ndarray | None = field(default=None, compare=False)
 
     def latency_percentile(self, q: float) -> float:
         """EXACT nearest-rank percentile-q latency in cycles from the
@@ -486,6 +498,7 @@ def _make_traffic(ctx, state, key, slots: int):
     gather the CURRENT epoch's masks per slot.  With E = 1 every gather
     reproduces the static values bitwise."""
     N, P, Q = ctx["N"], ctx["P"], ctx["Q"]
+    V = ctx.get("V", 1)
     scheduled = ctx.get("scheduled", False)
     ku, kd, kc, kp = jax.random.split(jax.random.fold_in(key, 2), 4)
     u = jax.random.uniform(ku, (slots, N))
@@ -513,8 +526,12 @@ def _make_traffic(ctx, state, key, slots: int):
     else:
         di = jax.random.randint(kd, (slots, N), 1, N)
     r = ctx["rec_ab"][di, coin]                            # (slots, N, n)
-    if ctx["trivial"] or ctx["policy"] == "dor":
-        # DOR ignores liveness, so the precomputed port table stays valid
+    if V > 1 or ctx["trivial"] or ctx["policy"] == "dor":
+        # DOR ignores liveness, so the precomputed port table stays valid.
+        # The VC router also takes this branch for EVERY policy: its
+        # injection (port, VC) choice depends on the per-slot credit
+        # counters, so it is recomputed inside the scan
+        # (`credit_vc_select`) and tr["p"] only seeds the DOR fallback.
         p = ctx["port_ab"][di, coin]
     elif scheduled:
         p = policy_ports(r, state["link_ok"][state["slot2epoch"]],
@@ -528,8 +545,10 @@ def _make_traffic(ctx, state, key, slots: int):
         p=p,
         v=jnp.broadcast_to(di != 0, (slots, N)),
         # arbitration priorities for every queue slot of every slot time,
-        # one bulk threefry draw (~5× cheaper than hashing in the scan)
-        prio=jax.random.bits(kp, (slots, N, P * Q), jnp.uint8))
+        # one bulk threefry draw (~5× cheaper than hashing in the scan);
+        # the VC router draws per (port, VC, slot) — V=1 is the exact
+        # pre-VC shape
+        prio=jax.random.bits(kp, (slots, N, P * V * Q), jnp.uint8))
 
 
 def _finish_slot(state, counted_from, delivered, lat_sum, lat_cnt, can,
@@ -1082,6 +1101,412 @@ def _make_slot_step_reference(ctx, warmup: int):
     return slot_step
 
 
+def _make_slot_step_vc_batched(ctx, warmup: int):
+    """The credit-flow virtual-channel router (vcs > 1), vectorised with
+    the same no-scatter discipline as `_make_slot_step_batched`:
+
+      * state generalizes the per-port FIFO to (N, 2n, V, Q) lanes plus a
+        carried (N, 2n, V) CREDIT array — `credit[w, p, v]` is the
+        advertised free window of queue (w, p, v), initialized to
+        `credits` (or Q) and kept exact incrementally (+1 per departure,
+        −1 per acceptance/injection into the lane),
+      * every occupied slot re-evaluates its (out-port, lane) request
+        per slot via `routing_engine.credit_vc_select`: lanes 1..V−1 are
+        credit-gated minimal-adaptive (max downstream credits, rotating
+        tie-break), lane 0 is the restricted-DOR ESCAPE lane with bubble
+        flow control — the Duato construction, so the router is
+        deadlock-free by the escape-CDG acyclicity argument
+        (tests/test_vc_router.py enumerates it).  No per-packet port is
+        carried: the choice depends on the live credit state,
+      * winner per (node, out-port) is the same segmented min, now over
+        N·2nVQ encoded keys (lanes share the physical link — one packet
+        per channel per slot),
+      * acceptance needs: escape-lane entry (turn/injection) 2 free
+        credits, in-lane continuation 1 (the bubble rule per lane-ring);
+        adaptive lanes need 1 — their eligibility is already credit>0 at
+        selection, and deadlock recovery is the escape lane's job.  Under
+        policy "dor" every lane runs the bubble rule (no credit gate in
+        selection), which keeps plain DOR deadlock-free per lane-ring.
+
+    V=1 never reaches this builder — `_get_runner` dispatches to the
+    pre-VC `_make_slot_step_batched`, keeping the vcs=1 program bitwise
+    identical.  Schedules and the fused kernel are V=1-only (rejected in
+    `SimConfig`)."""
+    n, N, P, Q, V = ctx["n"], ctx["N"], ctx["P"], ctx["Q"], ctx["V"]
+    nbr = ctx["nbr"]
+    rec_dtype = ctx["rec_dtype"]
+    trivial = ctx["trivial"]
+    policy = ctx["policy"]
+    adaptive = policy in ("adaptive", "escape")
+    PV, PVQ = P * V, P * V * Q
+    key_dtype = jnp.int16 if PVQ <= 127 else jnp.int32
+    BIG = key_dtype(np.iinfo(np.dtype(key_dtype)).max)
+    ports = jnp.arange(P)
+    opp = jnp.arange(P) ^ 1
+    sender = nbr[:, opp]                           # (N, P): src of in-port p
+    receiver = nbr                                 # (N, P): dst of out-port p
+    dim_p = ports // 2
+    sgn_p = 1 - 2 * (ports % 2)
+    hop = np.zeros((P, n), np.int64)
+    hop[np.arange(P), np.asarray(dim_p)] = np.asarray(sgn_p)
+    hop = jnp.asarray(hop, rec_dtype)
+    pvq32 = jnp.arange(PVQ, dtype=jnp.int32)
+    qids = jnp.arange(PV, dtype=jnp.int32)
+    varange = jnp.arange(V, dtype=jnp.int32)
+
+    def gather_port(per_port, fill, port_flat):
+        padded = jnp.concatenate(
+            [per_port, jnp.full((N, 1), fill, per_port.dtype)], axis=1)
+        return jnp.take_along_axis(padded, port_flat.astype(jnp.int32),
+                                   axis=1)
+
+    def take_q(arr_flat, qidx):
+        """(N, PV) per-lane values gathered at a (N,) queue id each."""
+        return jnp.take_along_axis(arr_flat, qidx[:, None], axis=1)[:, 0]
+
+    def slot_step(state, tr):
+        rec, birth, credit = state["rec"], state["birth"], state["credit"]
+        link_ok = None if trivial else state["link_ok"]
+        slot = state["slot"]
+        occ = birth >= 0                                   # (N, P, V, Q)
+
+        # ---- per-packet (out-port, lane) request, credit-aware ----
+        # downstream credit view: what u sees for out-port p is the
+        # credit of ITS OWN queue at the receiver, (nbr[u,p], p, ·)
+        cd = credit[nbr, ports[None, :]]                   # (N, P, V)
+        lok = (jnp.ones((N, P), bool) if trivial else link_ok)
+        sel_port, sel_vc = credit_vc_select(
+            rec, lok[:, None, None, None, :],
+            cd[:, None, None, None, :, :], policy, rot=slot)
+        sel_port = jnp.where(occ, sel_port, P)             # sentinel if free
+        port_flat = sel_port.reshape(N, PVQ)
+        vc_flat = sel_vc.reshape(N, PVQ)
+
+        # ---- winner per (node, out-port): segmented min over lanes ----
+        rot = (pvq32[None, :] + jnp.int32(slot)) % PVQ
+        enc = tr["prio"].astype(key_dtype) * key_dtype(PVQ) \
+            + rot.astype(key_dtype)                        # (N, PVQ)
+        w_enc = jnp.stack(
+            [jnp.min(jnp.where(port_flat == p, enc, BIG), axis=1)
+             for p in range(P)], axis=1)                   # (N, P)
+        if link_ok is not None:
+            w_enc = jnp.where(link_ok, w_enc, BIG)
+        whas = w_enc < BIG
+        widx = jnp.where(
+            whas, (w_enc.astype(jnp.int32) % PVQ - jnp.int32(slot)) % PVQ,
+            0)
+        w_srcq = widx // Q                                 # queue id p·V+v
+        is_winner = gather_port(w_enc, BIG, port_flat) == enc
+
+        flat_rec = rec.reshape(N, PVQ, n)
+        flat_birth = birth.reshape(N, PVQ)
+        rows = jnp.arange(N)[:, None]
+        w_vc = jnp.take_along_axis(vc_flat, widx, axis=1)  # target lane
+
+        # ---- per-link view at the receiver of in-port p ----
+        in_has = whas[sender, ports]                       # (N, P)
+        in_widx = widx[sender, ports]
+        in_rec = flat_rec[sender, in_widx]                 # (N, P, n)
+        in_birth = flat_birth[sender, in_widx]
+        in_srcq = w_srcq[sender, ports]                    # source queue id
+        in_vc = w_vc[sender, ports]                        # target lane
+        rec_after = in_rec - hop[None]
+        done = jnp.abs(rec_after.astype(jnp.int32)).sum(-1) == 0
+        deliver = in_has & done
+        tgt_q = ports[None, :] * V + in_vc                 # target queue id
+        # bubble rule per lane-ring: continuing in the SAME (port, lane)
+        # needs 1 free credit, entering (turn, lane switch) needs 2;
+        # credit-gated adaptive lanes need only 1 (Duato)
+        need = jnp.where(in_srcq == tgt_q, 1, 2)
+        if adaptive:
+            need = jnp.where(in_vc > 0, 1, need)
+
+        # ---- acceptance: sequential-sweep fixed point over channels ----
+        # same recurrence as V=1, with a queue-granular (N, P·V) vacancy
+        # carry: each channel p writes only queue (w, p, lane), so lanes
+        # never collide and the carry stays tiny
+        credit_flat = credit.reshape(N, PV)
+        lvl_xs = dict(h=in_has.T, dn=done.T, nd=need.T, dl=deliver.T,
+                      rx=receiver.T, wq=w_srcq.T, wh=whas.T, tq=tgt_q.T)
+
+        def level(vac, x):
+            freeq = take_q(credit_flat, x["tq"]) + take_q(vac, x["tq"])
+            acc_p = x["h"] & ~x["dn"] & (freeq >= x["nd"])
+            dep_w = (x["dl"] | acc_p)[x["rx"]] & x["wh"]
+            vac = vac + jnp.where(
+                dep_w[:, None] & (x["wq"][:, None] == qids[None, :]), 1, 0)
+            return vac, acc_p
+
+        _, accT = jax.lax.scan(level, jnp.zeros((N, PV), jnp.int32), lvl_xs)
+        acc = accT.T                                       # (N, P)
+        moved = deliver | acc
+
+        delivered = deliver.sum()
+        age = slot + 1 - in_birth
+        meas = deliver & (in_birth >= warmup)
+        lat_sum = jnp.where(meas, age, 0).sum()
+        lat_cnt = meas.sum()
+
+        # ---- apply: clears + one-hot transit/injection writes ----
+        dep_port = moved[receiver, ports] & whas
+        dep_slot = is_winner & gather_port(dep_port, False, port_flat)
+        birth_cleared = jnp.where(dep_slot, -1,
+                                  flat_birth).reshape(N, P, V, Q)
+        free_mask = birth_cleared < 0
+        qi = jnp.arange(Q)[None, None, None, :]
+        slot_f = jnp.argmax(free_mask, axis=3)             # (N, P, V)
+        slot_l = (Q - 1) - jnp.argmax(free_mask[..., ::-1], axis=3)
+        accv = acc[:, :, None] & (varange[None, None, :] == in_vc[:, :, None])
+        wmask = accv[..., None] & (qi == slot_f[..., None])
+
+        # ---- injection (after transit; local credits gate admission) --
+        want_new = tr["u"] < state["load"]
+        if not trivial:
+            want_new = want_new & state["inj_ok"]
+        want = want_new | (state["backlog"] > 0)
+        depcnt = dep_slot.reshape(N, P, V, Q).sum(axis=3)  # (N, P, V)
+        credit_post = credit + depcnt - accv.astype(jnp.int32)
+        inj_port, inj_vc = credit_vc_select(tr["r"], lok, credit_post,
+                                            policy, rot=slot)
+        ipc = jnp.minimum(inj_port, P - 1)                 # clamp P sentinel
+        freesel = take_q(credit_post.reshape(N, PV), ipc * V + inj_vc)
+        can = want & (freesel >= 2) & tr["v"] & (inj_port < P)
+        if trivial:
+            drop = None
+        else:
+            drop = want & ~state["dst_live_fixed"]
+            can = can & ~drop
+        imask = (can[:, None, None, None]
+                 & (ports[None, :, None, None] == ipc[:, None, None, None])
+                 & (varange[None, None, :, None]
+                    == inj_vc[:, None, None, None])
+                 & (qi == slot_l[..., None]))
+        backlog = state["backlog"] + want_new - can
+        if drop is not None:
+            backlog = backlog - drop
+        backlog = jnp.clip(backlog, 0, 1 << 30)
+
+        new_rec = jnp.where(
+            imask[..., None], tr["r"][:, None, None, None, :],
+            jnp.where(wmask[..., None], rec_after[:, :, None, None, :],
+                      rec))
+        new_birth = jnp.where(
+            imask, slot.astype(birth.dtype),
+            jnp.where(wmask, in_birth[:, :, None, None], birth_cleared))
+        new_credit = credit_post - imask.sum(axis=3)
+
+        # per-lane telemetry: deliveries by the winner's SOURCE lane,
+        # injections (incl. drops — they count as injected) by the
+        # admitted lane; warmup-gated like the scalar counters
+        counted = slot >= warmup
+        src_vc = in_srcq % V
+        vc_del = (deliver[..., None]
+                  & (src_vc[..., None] == varange)).sum((0, 1))
+        injm = can if drop is None else (can | drop)
+        vc_inj = (injm[:, None] & (inj_vc[:, None] == varange)).sum(0)
+
+        updates = dict(
+            rec=new_rec, birth=new_birth, credit=new_credit,
+            backlog=backlog,
+            vc_delivered=state["vc_delivered"] + jnp.where(counted, vc_del,
+                                                           0),
+            vc_injected=state["vc_injected"] + jnp.where(counted, vc_inj,
+                                                         0))
+        if ctx["hist_bins"]:
+            updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
+                age, meas, ctx["hist_bins"])
+        if not trivial:
+            updates["link_use"] = state["link_use"] + dep_port.astype(
+                jnp.int32)
+        out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
+                           drop, **updates)
+        return out, None
+
+    return slot_step
+
+
+def _make_slot_step_vc_reference(ctx, warmup: int):
+    """Per-(port, lane) sweep oracle of the VC credit-flow router: the
+    same macro-semantics as `_make_slot_step_vc_batched` (credit-gated
+    `credit_vc_select` requests, one winner per physical channel, the
+    per-lane bubble/credit acceptance rule, exact incremental credit
+    bookkeeping) with the reference arbitration style — i.i.d. uniform
+    per-slot scores and scatter writes in channel order.  Validated
+    statistically against the batched VC path, like the V=1 oracle."""
+    n, N, P, Q, V = ctx["n"], ctx["N"], ctx["P"], ctx["Q"], ctx["V"]
+    nbr = ctx["nbr"]
+    opp = [p ^ 1 for p in range(P)]
+    trivial = ctx["trivial"]
+    policy = ctx["policy"]
+    adaptive = policy in ("adaptive", "escape")
+    PV, PVQ = P * V, P * V * Q
+    varange = jnp.arange(V, dtype=jnp.int32)
+
+    def slot_step(state, key):
+        dst, rec, birth = state["dst"], state["rec"], state["birth"]
+        credit = state["credit"]
+        slot = state["slot"]
+        link_ok = None if trivial else ctx["link_ok"]
+        occ = dst >= 0                                     # (N, P, V, Q)
+        lok = jnp.ones((N, P), bool) if trivial else link_ok
+        cd = credit[nbr, jnp.arange(P)[None, :]]           # (N, P, V)
+        sel_port, sel_vc = credit_vc_select(
+            rec, lok[:, None, None, None, :],
+            cd[:, None, None, None, :, :], policy, rot=slot)
+        sel_port = jnp.where(occ, sel_port, -1)
+
+        # ---- arbitration: one winner per (node, out-port) ----
+        rand = jax.random.uniform(jax.random.fold_in(key, 1), (N, P, V, Q))
+        requested = sel_port[..., None] == jnp.arange(P)
+        if not trivial:
+            requested = requested & link_ok[:, None, None, None, :]
+        flat = jnp.where(requested, rand[..., None], -1.0).reshape(
+            N, PVQ, P)
+        widx = jnp.argmax(flat, axis=1)                    # (N, P)
+        whas = jnp.take_along_axis(flat, widx[:, None, :],
+                                   axis=1)[:, 0, :] >= 0.0
+        rows = jnp.arange(N)[:, None]
+        flat_dst = dst.reshape(N, PVQ)
+        flat_rec = rec.reshape(N, PVQ, n)
+        flat_birth = birth.reshape(N, PVQ)
+        w_dst = flat_dst[rows, widx]
+        w_rec = flat_rec[rows, widx]
+        w_birth = flat_birth[rows, widx]
+        w_srcq = widx // Q                                 # queue id p·V+v
+        w_vc = jnp.take_along_axis(sel_vc.reshape(N, PVQ), widx, axis=1)
+
+        delivered = jnp.int32(0)
+        lat_sum = jnp.int32(0)
+        lat_cnt = jnp.int32(0)
+        vc_del = jnp.zeros((V,), jnp.int32)
+        age_l, meas_l = [], []
+        new_dst, new_rec, new_birth = dst, rec, birth
+        credit_work = credit                               # (N, P, V)
+        link_use = None if trivial else state["link_use"]
+        r_ = jnp.arange(N)
+        for p in range(P):
+            d_p = p // 2
+            s_p = 1 - 2 * (p % 2)
+            u = nbr[:, opp[p]]                             # sender for recv w
+            has = whas[u, p]
+            pk_dst = w_dst[u, p]
+            pk_rec = w_rec[u, p]
+            pk_birth = w_birth[u, p]
+            pk_srcq = w_srcq[u, p]
+            pk_vc = w_vc[u, p]                             # target lane
+            rec_after = pk_rec.at[:, d_p].add(-s_p)
+            done = jnp.abs(rec_after.astype(jnp.int32)).sum(-1) == 0
+            will_deliver = has & done
+            need = jnp.where(pk_srcq == p * V + pk_vc, 1, 2)
+            if adaptive:
+                need = jnp.where(pk_vc > 0, 1, need)
+            freeq = jnp.take_along_axis(credit_work[:, p], pk_vc[:, None],
+                                        axis=1)[:, 0]
+            ok = has & ~done & (freeq >= need)
+            moved = will_deliver | ok
+            age_p = slot + 1 - pk_birth
+            meas_p = will_deliver & (pk_birth >= warmup)
+            delivered += will_deliver.sum()
+            lat_sum += jnp.where(meas_p, age_p, 0).sum()
+            lat_cnt += meas_p.sum()
+            vc_del = vc_del + (will_deliver[:, None]
+                               & ((pk_srcq % V)[:, None] == varange)).sum(0)
+            if ctx["hist_bins"]:
+                age_l.append(age_p)
+                meas_l.append(meas_p)
+            if link_use is not None:
+                link_use = link_use.at[u, p].add(moved.astype(jnp.int32))
+            # clear the winner slot at the sender; its lane regains a credit
+            sel = widx[:, p]
+            fd = new_dst.reshape(N, PVQ)
+            fd = fd.at[u, sel[u]].set(jnp.where(moved, -1, fd[u, sel[u]]))
+            new_dst = fd.reshape(N, P, V, Q)
+            credit_work = credit_work.reshape(N, PV).at[u, pk_srcq].add(
+                moved.astype(jnp.int32)).reshape(N, P, V)
+            # write into receiver queue (w, p, lane), first free slot
+            lane_dst = new_dst[r_, p, pk_vc]               # (N, Q)
+            slot_idx = jnp.argmax(lane_dst < 0, axis=1)
+            new_dst = new_dst.at[r_, p, pk_vc, slot_idx].set(
+                jnp.where(ok, pk_dst, new_dst[r_, p, pk_vc, slot_idx]))
+            new_rec = new_rec.at[r_, p, pk_vc, slot_idx].set(
+                jnp.where(ok[:, None], rec_after,
+                          new_rec[r_, p, pk_vc, slot_idx]))
+            new_birth = new_birth.at[r_, p, pk_vc, slot_idx].set(
+                jnp.where(ok, pk_birth, new_birth[r_, p, pk_vc, slot_idx]))
+            credit_work = credit_work.at[r_, p, pk_vc].add(
+                -ok.astype(jnp.int32))
+
+        # ---- injection: credit-aware lane admission (bubble cost 2) ----
+        m = ctx
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
+        want_new = jax.random.uniform(k1, (N,)) < state["load"]
+        if not trivial:
+            want_new = want_new & m["inj_ok"]
+        want = want_new | (state["backlog"] > 0)
+        if ctx["fixed_dst"]:
+            d = state["dst_table"]
+        elif not trivial and ctx["has_dead_nodes"]:
+            d = m["live_tbl"][jax.random.randint(k2, (N,), 0, m["n_live"])]
+        else:
+            d = jax.random.randint(k2, (N,), 0, N - 1)
+            d = jnp.where(d >= jnp.arange(N), d + 1, d)
+        di = _delta_idx(ctx["labels"], ctx["labels"][d], ctx["hermite"],
+                        ctx["strides"])
+        coin = jax.random.uniform(k3, (N,)) < 0.5
+        r = jnp.where(coin[:, None], ctx["rec_a"][di], ctx["rec_b"][di])
+        inj_port, inj_vc = credit_vc_select(r, lok, credit_work, policy,
+                                            rot=slot)
+        ipc = jnp.minimum(inj_port, P - 1)
+        freesel = jnp.take_along_axis(
+            credit_work.reshape(N, PV), (ipc * V + inj_vc)[:, None],
+            axis=1)[:, 0]
+        can = (want & (freesel >= 2) & (jnp.abs(r).sum(-1) > 0)
+               & (inj_port < P))
+        if trivial:
+            drop = None
+        else:
+            drop = want & ~m["dst_ok"][d]
+            can = can & ~drop
+        r = r.astype(new_rec.dtype)
+        lane_dst = new_dst[r_, ipc, inj_vc]
+        slot_idx = jnp.argmax(lane_dst < 0, axis=1)
+        new_dst = new_dst.at[r_, ipc, inj_vc, slot_idx].set(
+            jnp.where(can, d, new_dst[r_, ipc, inj_vc, slot_idx]))
+        new_rec = new_rec.at[r_, ipc, inj_vc, slot_idx].set(
+            jnp.where(can[:, None], r, new_rec[r_, ipc, inj_vc, slot_idx]))
+        new_birth = new_birth.at[r_, ipc, inj_vc, slot_idx].set(
+            jnp.where(can, slot, new_birth[r_, ipc, inj_vc, slot_idx]))
+        credit_work = credit_work.reshape(N, PV).at[
+            r_, ipc * V + inj_vc].add(-can.astype(jnp.int32)).reshape(
+                N, P, V)
+        backlog = state["backlog"] + want_new - can
+        if drop is not None:
+            backlog = backlog - drop
+        backlog = jnp.clip(backlog, 0, 1 << 30)
+
+        counted = slot >= warmup
+        injm = can if drop is None else (can | drop)
+        vc_inj = (injm[:, None] & (inj_vc[:, None] == varange)).sum(0)
+        updates = dict(
+            dst=new_dst, rec=new_rec, birth=new_birth, backlog=backlog,
+            credit=credit_work,
+            vc_delivered=state["vc_delivered"] + jnp.where(counted, vc_del,
+                                                           0),
+            vc_injected=state["vc_injected"] + jnp.where(counted, vc_inj,
+                                                         0))
+        if ctx["hist_bins"]:
+            updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
+                jnp.stack(age_l, 1), jnp.stack(meas_l, 1),
+                ctx["hist_bins"])
+        if link_use is not None:
+            updates["link_use"] = link_use
+        out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
+                           drop, **updates)
+        return out, None
+
+    return slot_step
+
+
 def _scenario_mask_fields(scenario: Scenario, g: LatticeGraph, N: int,
                           dst_np, force_dead_nodes: bool = False) -> dict:
     """The scenario-DEPENDENT traced arrays of a mask-threaded context —
@@ -1140,7 +1565,8 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
               force_masks: bool = False, force_dead_nodes: bool = False,
               schedule: CompiledSchedule | None = None,
               pad_epochs: int | None = None, *, hist_bins: int = 0,
-              lat_trace: bool = False):
+              lat_trace: bool = False, vcs: int = 1,
+              credits: int | None = None):
     """`force_masks=True` builds the mask-threaded (non-trivial) context
     even for the pristine scenario — used by `simulate_scenario_sweep`,
     where a pristine pattern may ride the traced-mask program alongside
@@ -1161,6 +1587,13 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
         raise ValueError("lat_trace is exclusive with schedule=")
     if hist_bins < 0:
         raise ValueError(f"hist_bins must be >= 0, got {hist_bins}")
+    if vcs > 1:
+        # SimConfig raises these with friendlier wording; the internal
+        # guards keep direct _make_ctx callers honest too
+        if schedule is not None:
+            raise ValueError("FaultSchedule timelines are V=1-only")
+        if lat_trace:
+            raise ValueError("lat_trace is V=1-only")
     policy = schedule.policy if schedule is not None else scenario.policy
     trivial = (schedule is None and scenario.is_trivial
                and not force_masks)
@@ -1169,10 +1602,13 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     # records are tiny for every pod-sized lattice — int8 state quarters the
     # memory traffic of the biggest per-slot tensors (int32 kept as a
     # fallback for enormous single-dimension graphs; escape misrouting can
-    # grow records past the minimal bound, so it gets the wide dtype)
+    # grow records past the minimal bound, so it gets the wide dtype —
+    # only for V=1: the VC router's escape lane is restricted DOR, which
+    # never grows a record)
     rec_max = max(int(np.abs(t.records_a).max(initial=0)),
                   int(np.abs(t.records_b).max(initial=0)))
-    rec_dtype = (jnp.int32 if policy == "escape" or rec_max > 120
+    rec_dtype = (jnp.int32
+                 if (policy == "escape" and vcs == 1) or rec_max > 120
                  else jnp.int8)
     # per-delta-index injection tables: record (Remark-30 pair) + its first
     # DOR port, so traffic generation is two gathers instead of routing work
@@ -1218,6 +1654,7 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
                 force_dead_nodes))
     return dict(
         n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype,
+        V=int(vcs), credit_init=int(queue if credits is None else credits),
         hist_bins=int(hist_bins), lat_trace=bool(lat_trace), **scen,
         nbr=jnp.asarray(t.neighbors),
         rec_a=jnp.asarray(t.records_a),
@@ -1235,12 +1672,17 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
 
 def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
     n, N, P, Q = ctx["n"], ctx["N"], ctx["P"], ctx["Q"]
+    V = ctx.get("V", 1)
     birth_dtype = jnp.int16 if slots < (1 << 15) - 1 else jnp.int32
+    # the VC router (V > 1) widens every per-port queue to V lanes and
+    # carries the (N, P, V) credit array + per-lane counters in the scan
+    # state; V = 1 keeps the exact pre-VC layout (no credit, no lane axis)
+    qshape = (N, P, V, Q) if V > 1 else (N, P, Q)
     state = dict(
         load=jnp.float32(load),
         dst_table=ctx["dst_table"],
-        rec=jnp.zeros((N, P, Q, n), dtype=ctx["rec_dtype"]),
-        birth=jnp.full((N, P, Q), -1, dtype=birth_dtype),
+        rec=jnp.zeros(qshape + (n,), dtype=ctx["rec_dtype"]),
+        birth=jnp.full(qshape, -1, dtype=birth_dtype),
         backlog=jnp.zeros((N,), dtype=jnp.int32),
         slot=jnp.int32(0),
         delivered=jnp.int32(0),
@@ -1248,13 +1690,21 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
         lat_cnt=jnp.int32(0),
         injected=jnp.int32(0),
         dropped=jnp.int32(0))
+    if V > 1:
+        state["credit"] = jnp.full((N, P, V), ctx["credit_init"],
+                                   jnp.int32)
+        state["vc_delivered"] = jnp.zeros((V,), jnp.int32)
+        state["vc_injected"] = jnp.zeros((V,), jnp.int32)
     if ctx["hist_bins"]:
         state["lat_hist"] = jnp.zeros((ctx["hist_bins"],), jnp.int32)
     if not ctx["trivial"]:
         state["link_use"] = jnp.zeros((N, P), dtype=jnp.int32)
     if impl in ("batched", "fused"):
-        # birth < 0 marks free slots; each packet carries its next DOR port
-        state["port"] = jnp.zeros((N, P, Q), dtype=jnp.int8)
+        if V == 1:
+            # birth < 0 marks free slots; each packet carries its next
+            # DOR port (the VC router re-selects per slot instead — its
+            # choice depends on the live credit counters)
+            state["port"] = jnp.zeros((N, P, Q), dtype=jnp.int8)
         state["di_fixed"] = ctx["di_fixed"]
         if not ctx["trivial"]:
             # scenario masks are TRACED inputs: they ride in the state so
@@ -1276,8 +1726,8 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
         del state["dst_table"]
     else:
         # the reference keeps the original dst-as-occupancy layout
-        state["dst"] = jnp.full((N, P, Q), -1, dtype=jnp.int32)
-        state["birth"] = jnp.zeros((N, P, Q), dtype=jnp.int32)
+        state["dst"] = jnp.full(qshape, -1, dtype=jnp.int32)
+        state["birth"] = jnp.zeros(qshape, dtype=jnp.int32)
     return state
 
 
@@ -1311,12 +1761,18 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
                 else ctx["scen_structure"])
     scheduled = ctx.get("scheduled", False)
     tracing = ctx["lat_trace"] and impl == "reference"
+    V = ctx.get("V", 1)
+    if V > 1 and impl == "fused":
+        raise ValueError(
+            "impl='fused' (the Pallas slot-step kernel) is V=1-only; run "
+            "vcs>1 with impl='batched' or 'reference'")
     key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
            ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key,
-           ctx["hist_bins"], tracing)
+           ctx["hist_bins"], tracing, V, ctx.get("credit_init"))
     if key not in _RUNNER_CACHE:
         if impl == "reference":
-            step = _make_slot_step_reference(ctx, warmup)
+            step = (_make_slot_step_vc_reference(ctx, warmup) if V > 1
+                    else _make_slot_step_reference(ctx, warmup))
 
             def runner(st, key):
                 TRACE_COUNTS[impl] += 1
@@ -1328,7 +1784,8 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
                     return dict(final, lat_trace=ys)
                 return final
         else:
-            step = (_make_slot_step_batched(ctx, warmup)
+            step = (_make_slot_step_vc_batched(ctx, warmup) if V > 1
+                    else _make_slot_step_batched(ctx, warmup)
                     if impl == "batched"
                     else _make_slot_step_fused(ctx, warmup))
 
@@ -1382,6 +1839,7 @@ def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
     lu = out.get("link_use")
     tl = out.get("timeline")
     lh = out.get("lat_hist")
+    vcd = out.get("vc_delivered")
     return SimResult(
         accepted_load=delivered / max(measured * N, 1),
         # mean over MEASURED deliveries (born at/after warmup); NaN — not
@@ -1397,7 +1855,14 @@ def _result(out, *, slots: int, warmup: int, N: int) -> SimResult:
         latency_hist=None if lh is None else np.asarray(lh),
         link_use=None if lu is None else np.asarray(lu),
         timeline=None if tl is None else SimTimeline(
-            **{k: np.asarray(v) for k, v in tl.items()}))
+            **{k: np.asarray(v) for k, v in tl.items()}),
+        # per-lane telemetry only exists for vcs>1 runs; occupancy is
+        # (N, P, V, Q) there, so the lane axis is axis 2
+        vc_delivered=None if vcd is None else np.asarray(vcd),
+        vc_injected=(None if vcd is None
+                     else np.asarray(out["vc_injected"])),
+        vc_in_flight=(None if vcd is None
+                      else (np.asarray(occ) >= 0).sum(axis=(0, 1, 3))))
 
 
 def _result_grid(out, axes_sizes: tuple, impl: str, *, slots: int,
@@ -1410,7 +1875,7 @@ def _result_grid(out, axes_sizes: tuple, impl: str, *, slots: int,
     normalization cannot drift between them."""
     occ_key = "dst" if impl == "reference" else "birth"
     keep = ("delivered", "lat_sum", "lat_cnt", "lat_hist", "injected",
-            "dropped", "link_use", occ_key)
+            "dropped", "link_use", "vc_delivered", "vc_injected", occ_key)
     out_np = {k: np.asarray(v) for k, v in out.items() if k in keep}
     tl = out.get("timeline")
     tl_np = (None if tl is None
@@ -1510,7 +1975,8 @@ def _seed_list(seed: int, seeds) -> list[int] | None:
 
 def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
                 queue, seed, seed_list, tables, impl, scenario,
-                scenarios=None, schedules=None, hist_bins=0):
+                scenarios=None, schedules=None, hist_bins=0, vcs=1,
+                credits=None):
     """Build (runner, broadcast initial state, (L[, S]) key grid) for one
     sweep device program.  Key derivation: run (ℓ, s) of a multi-load
     sweep uses `fold_in(PRNGKey(seeds[s] + 17), ℓ)` — every load point
@@ -1535,7 +2001,7 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
         fdn = any(c.has_dead_nodes for c in schedules)
         ctx = _make_ctx(t, g, pattern, seed, queue, schedule=schedules[0],
                         pad_epochs=E, force_dead_nodes=fdn,
-                        hist_bins=hist_bins)
+                        hist_bins=hist_bins, vcs=vcs, credits=credits)
         dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
                   else None)
         sched_keys = ["link_ok", "inj_ok", "dst_live_fixed", "slot2epoch"]
@@ -1546,13 +2012,13 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
             for c in schedules[1:]]
     elif scenarios is None:
         ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
-                        hist_bins=hist_bins)
+                        hist_bins=hist_bins, vcs=vcs, credits=credits)
         masks = None
     else:
         fdn = any(s.dead_nodes for s in scenarios)
         ctx = _make_ctx(t, g, pattern, seed, queue, scenarios[0],
                         force_masks=True, force_dead_nodes=fdn,
-                        hist_bins=hist_bins)
+                        hist_bins=hist_bins, vcs=vcs, credits=credits)
         dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
                   else None)
         masks = [{k: ctx[k] for k in ("link_ok", "inj_ok", "live_tbl",
@@ -1604,14 +2070,23 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
 
 
 def simulate(g: LatticeGraph, pattern: str, load: float, *,
-             slots: int = 512, warmup: int = 128, queue: int = 4,
-             seed: int = 0, tables: SimTables | None = None,
-             impl: str = "batched", scenario: Scenario | None = None,
-             fold: int | None = None,
+             config: SimConfig | None = None,
+             slots: int | None = None, warmup: int | None = None,
+             queue: int | None = None, seed: int | None = None,
+             tables: SimTables | None = None, impl: str | None = None,
+             scenario: Scenario | None = None, fold: int | None = None,
              schedule: FaultSchedule | None = None,
-             hist_bins: int = 0) -> SimResult:
+             hist_bins: int | None = None, vcs: int | None = None,
+             credits: int | None = None) -> SimResult:
     """Run `slots` packet-slots (16 cycles each) at offered load `load`
     (phits/cycle/node) and measure accepted throughput + latency.
+
+    Every run-shaping parameter can arrive EITHER as a `SimConfig` via
+    `config=` or as the historical kwargs (a thin shim over
+    `SimConfig.from_kwargs`; mixing both raises).  `fold` stays a
+    per-call argument — it names *which* sweep point to reproduce, not
+    how to run: `simulate_sweep(loads)[i]` equals
+    `simulate(loads[i], fold=i)`.
 
     impl="batched" is the port-batched single-pass simulator;
     impl="reference" is the per-port-sweep oracle it is validated against.
@@ -1622,8 +2097,6 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     runs a TRANSIENT-fault timeline: per-epoch mask stacks ride the state
     as traced inputs, the result carries a per-slot `SimTimeline`, and a
     single-epoch schedule is bitwise-equal to the static scenario run.
-    `fold` reproduces one point of a multi-load sweep:
-    `simulate_sweep(loads)[i]` equals `simulate(loads[i], fold=i)`.
 
     impl="fused" routes the slot update through the Pallas kernel
     (`repro.kernels.sim_step`): same state layout and pre-drawn traffic as
@@ -1633,39 +2106,56 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     `hist_bins=B` additionally collects the (B,)-bucket latency histogram
     in the scan carry (`SimResult.latency_hist` /
     `latency_p50/p99/p999`); 0 (the default) compiles the exact
-    histogram-free program."""
-    if impl not in ("batched", "reference", "fused"):
-        raise ValueError(f"unknown simulator impl {impl!r}")
-    t = tables or build_tables(g, seed)
-    if schedule is not None:
-        if scenario is not None:
-            raise ValueError("pass either scenario= or schedule=, not both")
-        ctx = _make_ctx(t, g, pattern, seed, queue,
-                        schedule=ensure_compiled(schedule, g, slots),
-                        hist_bins=hist_bins)
+    histogram-free program.
+
+    `vcs=V` (> 1) switches to the credit-flow VIRTUAL-CHANNEL router:
+    (N, 2n, V, queue) lanes per port, downstream credit counters in the
+    scan carry, lanes 1..V−1 credit-gated minimal-adaptive and lane 0
+    the restricted-DOR escape lane (deadlock-free by CDG acyclicity —
+    see docs/simulator.md).  `credits` caps the per-lane window (None =
+    full queue depth).  vcs=1 (default) compiles the EXACT pre-VC
+    program; vcs>1 requires impl in (batched | reference) and a static
+    scenario (no schedule=)."""
+    cfg = SimConfig.from_kwargs(
+        config, slots=slots, warmup=warmup, queue=queue, seed=seed,
+        tables=tables, impl=impl, scenario=scenario, schedule=schedule,
+        hist_bins=hist_bins, vcs=vcs, credits=credits)
+    t = cfg.tables or build_tables(g, cfg.seed)
+    if cfg.schedule is not None:
+        ctx = _make_ctx(t, g, pattern, cfg.seed, cfg.queue,
+                        schedule=ensure_compiled(cfg.schedule, g,
+                                                 cfg.slots),
+                        hist_bins=cfg.hist_bins)
     else:
-        ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
-                        hist_bins=hist_bins)
-    runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
-                         n_loads=1)
-    key = jax.random.PRNGKey(seed + 17)
+        ctx = _make_ctx(t, g, pattern, cfg.seed, cfg.queue, cfg.scenario,
+                        hist_bins=cfg.hist_bins, vcs=cfg.vcs,
+                        credits=cfg.credits)
+    runner = _get_runner(t, ctx, slots=cfg.slots, warmup=cfg.warmup,
+                         impl=cfg.impl, n_loads=1)
+    key = jax.random.PRNGKey(cfg.seed + 17)
     if fold is not None:
         key = jax.random.fold_in(key, fold)
-    out = runner(_init_state(ctx, load, impl, slots), key)
-    return _result(out, slots=slots, warmup=warmup, N=t.N)
+    out = runner(_init_state(ctx, load, cfg.impl, cfg.slots), key)
+    return _result(out, slots=cfg.slots, warmup=cfg.warmup, N=t.N)
 
 
 def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
-                   slots: int = 512, warmup: int = 128, queue: int = 4,
-                   seed: int = 0, seeds=None,
-                   tables: SimTables | None = None,
-                   impl: str = "batched", scenario: Scenario | None = None,
+                   config: SimConfig | None = None,
+                   slots: int | None = None, warmup: int | None = None,
+                   queue: int | None = None, seed: int | None = None,
+                   seeds=None, tables: SimTables | None = None,
+                   impl: str | None = None,
+                   scenario: Scenario | None = None,
                    schedule: FaultSchedule | None = None,
-                   hist_bins: int = 0):
+                   hist_bins: int | None = None, vcs: int | None = None,
+                   credits: int | None = None):
     """An entire offered-load curve (Figs. 5–8) as ONE device program: the
     per-slot update is vmapped over the load axis and — when `seeds` is
     given — over a nested seed axis, so the whole sweep JITs once and runs
-    without host round-trips between runs.
+    without host round-trips between runs.  Run-shaping parameters come
+    from `config=` (a `SimConfig`) or the legacy kwargs (not both —
+    `SimConfig.from_kwargs` raises on conflicts); `seeds` stays a
+    per-call argument (it names the replication axis, not the router).
 
     seeds=None returns list[SimResult] (one per load; run ℓ uses
     `fold_in(PRNGKey(seed+17), ℓ)`, so distinct sweep points are
@@ -1674,26 +2164,25 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
     seed-axis slice s is bitwise-identical to the single-seed sweep with
     seed=seeds[s].  A single-load, single-seed sweep delegates to
     `simulate` (same key, pre-PR-3 compatible)."""
+    cfg = SimConfig.from_kwargs(
+        config, slots=slots, warmup=warmup, queue=queue, seed=seed,
+        tables=tables, impl=impl, scenario=scenario, schedule=schedule,
+        hist_bins=hist_bins, vcs=vcs, credits=credits)
     loads = [float(l) for l in np.asarray(loads).ravel()]
-    sl = _seed_list(seed, seeds)
-    if schedule is not None and scenario is not None:
-        raise ValueError("pass either scenario= or schedule=, not both")
+    sl = _seed_list(cfg.seed, seeds)
     if sl is None and len(loads) == 1:
-        return [simulate(g, pattern, loads[0], slots=slots, warmup=warmup,
-                         queue=queue, seed=seed, tables=tables, impl=impl,
-                         scenario=scenario, schedule=schedule,
-                         hist_bins=hist_bins)]
+        return [simulate(g, pattern, loads[0], config=cfg)]
     runner, state, keys, t, _ = _sweep_plan(
-        g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
-        seed=seed, seed_list=sl, tables=tables, impl=impl,
-        scenario=scenario,
-        schedules=(None if schedule is None
-                   else [ensure_compiled(schedule, g, slots)]),
-        hist_bins=hist_bins)
+        g, pattern, loads, slots=cfg.slots, warmup=cfg.warmup,
+        queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
+        impl=cfg.impl, scenario=cfg.scenario,
+        schedules=(None if cfg.schedule is None
+                   else [ensure_compiled(cfg.schedule, g, cfg.slots)]),
+        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits)
     out = runner(state, keys)
-    L, S = len(loads), len(sl or [seed])
-    res = _result_grid(out, (L, S), impl, slots=slots, warmup=warmup,
-                       N=t.N)
+    L, S = len(loads), len(sl or [cfg.seed])
+    res = _result_grid(out, (L, S), cfg.impl, slots=cfg.slots,
+                       warmup=cfg.warmup, N=t.N)
     if sl is None:
         return [res[li, 0] for li in range(L)]
     return SweepStats(loads=tuple(loads), seeds=tuple(sl),
@@ -1701,10 +2190,17 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
 
 
 def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
-                            loads=(0.6,), *, slots: int = 512,
-                            warmup: int = 128, queue: int = 4, seed: int = 0,
-                            seeds=None, tables: SimTables | None = None,
-                            impl: str = "batched", hist_bins: int = 0):
+                            loads=(0.6,), *,
+                            config: SimConfig | None = None,
+                            slots: int | None = None,
+                            warmup: int | None = None,
+                            queue: int | None = None,
+                            seed: int | None = None, seeds=None,
+                            tables: SimTables | None = None,
+                            impl: str | None = None,
+                            hist_bins: int | None = None,
+                            vcs: int | None = None,
+                            credits: int | None = None):
     """K fault patterns × (loads × seeds) as ONE device program: the
     scenario masks are traced state inputs, so the compiled slot update is
     vmapped over an outermost scenario axis — K patterns cost one trace
@@ -1726,13 +2222,21 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
     Returns a list of length K mirroring `simulate_sweep`'s return for
     each scenario: list[SimResult] per load when `seeds is None`, else a
     `SweepStats`."""
+    cfg = SimConfig.from_kwargs(
+        config, slots=slots, warmup=warmup, queue=queue, seed=seed,
+        tables=tables, impl=impl, hist_bins=hist_bins, vcs=vcs,
+        credits=credits)
+    if cfg.scenario is not None or cfg.schedule is not None:
+        raise ValueError(
+            "simulate_scenario_sweep takes its fault patterns from the "
+            "`scenarios` list; leave config.scenario/config.schedule unset")
     scenarios = [s if s is not None else Scenario() for s in scenarios]
     if not scenarios:
         raise ValueError("simulate_scenario_sweep needs >= 1 scenario")
-    if impl not in ("batched", "fused"):
+    if cfg.impl not in ("batched", "fused"):
         raise ValueError(
             "simulate_scenario_sweep needs a traced-mask implementation "
-            f"(batched | fused), got {impl!r}")
+            f"(batched | fused), got {cfg.impl!r}")
     policies = sorted({s.policy for s in scenarios if not s.is_trivial})
     if len(policies) > 1:
         raise ValueError(
@@ -1749,15 +2253,16 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
             "scenario sweep mixes dead-node and link-only fault patterns; "
             "destination sampling differs structurally — sweep separately")
     loads = [float(l) for l in np.asarray(loads).ravel()]
-    sl = _seed_list(seed, seeds)
+    sl = _seed_list(cfg.seed, seeds)
     runner, state, keys, t, _ = _sweep_plan(
-        g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
-        seed=seed, seed_list=sl, tables=tables, impl=impl, scenario=None,
-        scenarios=scenarios, hist_bins=hist_bins)
+        g, pattern, loads, slots=cfg.slots, warmup=cfg.warmup,
+        queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
+        impl=cfg.impl, scenario=None, scenarios=scenarios,
+        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits)
     out = runner(state, keys)
-    K, L, S = len(scenarios), len(loads), len(sl or [seed])
-    res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
-                       N=t.N)
+    K, L, S = len(scenarios), len(loads), len(sl or [cfg.seed])
+    res = _result_grid(out, (K, L, S), cfg.impl, slots=cfg.slots,
+                       warmup=cfg.warmup, N=t.N)
     results = []
     for ki in range(K):
         if sl is None:
@@ -1770,10 +2275,15 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
 
 
 def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
-                            loads=(0.6,), *, slots: int = 512,
-                            warmup: int = 128, queue: int = 4, seed: int = 0,
-                            seeds=None, tables: SimTables | None = None,
-                            impl: str = "batched", hist_bins: int = 0):
+                            loads=(0.6,), *,
+                            config: SimConfig | None = None,
+                            slots: int | None = None,
+                            warmup: int | None = None,
+                            queue: int | None = None,
+                            seed: int | None = None, seeds=None,
+                            tables: SimTables | None = None,
+                            impl: str | None = None,
+                            hist_bins: int | None = None):
     """K transient-fault TIMELINES × (loads × seeds) as ONE device
     program — `simulate_scenario_sweep` generalized along the time axis.
     Each schedule compiles to per-epoch mask stacks + a slot→epoch map;
@@ -1796,14 +2306,25 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
     timeline is bitwise-equal to the STATIC `Scenario` run.  Returns a
     list of length K mirroring `simulate_sweep`'s return; every
     `SimResult` carries its per-slot `SimTimeline`."""
+    cfg = SimConfig.from_kwargs(
+        config, slots=slots, warmup=warmup, queue=queue, seed=seed,
+        tables=tables, impl=impl, hist_bins=hist_bins)
+    if cfg.scenario is not None or cfg.schedule is not None:
+        raise ValueError(
+            "simulate_schedule_sweep takes its timelines from the "
+            "`schedules` list; leave config.scenario/config.schedule unset")
+    if cfg.vcs > 1:
+        raise ValueError(
+            "transient FaultSchedule timelines are V=1-only for now; run "
+            "vcs>1 with a static scenario= instead")
     schedules = [s if isinstance(s, FaultSchedule)
                  else FaultSchedule.from_scenario(s) for s in schedules]
     if not schedules:
         raise ValueError("simulate_schedule_sweep needs >= 1 schedule")
-    if impl not in ("batched", "fused"):
+    if cfg.impl not in ("batched", "fused"):
         raise ValueError(
             "simulate_schedule_sweep needs a traced-mask implementation "
-            f"(batched | fused), got {impl!r}")
+            f"(batched | fused), got {cfg.impl!r}")
     policies = sorted({s.policy for s in schedules
                        if not (s.is_static and s.base.is_trivial)})
     if len(policies) > 1:
@@ -1815,16 +2336,17 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
                      if s.is_static and s.base.is_trivial else s
                      for s in schedules]
     loads = [float(l) for l in np.asarray(loads).ravel()]
-    sl = _seed_list(seed, seeds)
-    compiled = [ensure_compiled(s, g, slots) for s in schedules]
+    sl = _seed_list(cfg.seed, seeds)
+    compiled = [ensure_compiled(s, g, cfg.slots) for s in schedules]
     runner, state, keys, t, _ = _sweep_plan(
-        g, pattern, loads, slots=slots, warmup=warmup, queue=queue,
-        seed=seed, seed_list=sl, tables=tables, impl=impl, scenario=None,
-        schedules=compiled, hist_bins=hist_bins)
+        g, pattern, loads, slots=cfg.slots, warmup=cfg.warmup,
+        queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
+        impl=cfg.impl, scenario=None, schedules=compiled,
+        hist_bins=cfg.hist_bins)
     out = runner(state, keys)
-    K, L, S = len(compiled), len(loads), len(sl or [seed])
-    res = _result_grid(out, (K, L, S), impl, slots=slots, warmup=warmup,
-                       N=t.N)
+    K, L, S = len(compiled), len(loads), len(sl or [cfg.seed])
+    res = _result_grid(out, (K, L, S), cfg.impl, slots=cfg.slots,
+                       warmup=cfg.warmup, N=t.N)
     results = []
     for ki in range(K):
         if sl is None:
@@ -1837,14 +2359,17 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
 
 
 def simulate_load_sweep(g: LatticeGraph, pattern: str, loads, **kw):
-    """Accepted-vs-offered load curve (one build of the static tables, one
-    compiled+vmapped device program for the whole sweep)."""
-    # when tables are supplied a `seed` kwarg stays in kw for the sweep
-    t = kw.pop("tables", None) or build_tables(g, kw.pop("seed", 0))
-    return simulate_sweep(g, pattern, loads, tables=t, **kw)
+    """DEPRECATED pre-PR-3 alias of `simulate_sweep` — identical
+    signature and return; new code should call `simulate_sweep` (or pass
+    a `SimConfig` via `config=`) directly."""
+    warnings.warn(
+        "simulate_load_sweep is deprecated; call simulate_sweep (same "
+        "arguments) or pass a SimConfig via config=",
+        DeprecationWarning, stacklevel=2)
+    return simulate_sweep(g, pattern, loads, **kw)
 
 
-# backwards-compatible name (pre-sweep API)
+# backwards-compatible name (pre-sweep API); deprecated like the alias
 throughput_curve = simulate_load_sweep
 
 
@@ -1852,7 +2377,7 @@ def peak_throughput(g: LatticeGraph, pattern: str, loads=None, **kw):
     """Max accepted load over an offered-load sweep (the paper's
     'throughput peak')."""
     loads = loads if loads is not None else np.linspace(0.1, 1.0, 10)
-    res = simulate_load_sweep(g, pattern, loads, **kw)
+    res = simulate_sweep(g, pattern, loads, **kw)
     best = max(res, key=lambda r: r.accepted_load)
     return best, res
 

@@ -171,6 +171,24 @@ def measured_saturation_throughput(g: LatticeGraph, pairs: int = 20_000,
     return float(1.0 / channel_load_uniform(g, pairs, seed, backend).max())
 
 
+def simulated_saturation_load(g: LatticeGraph, loads, *, pattern="uniform",
+                              config=None, seeds: int = 1) -> float:
+    """Dynamic counterpart of `measured_saturation_throughput`: sweep the
+    slot-level simulator over `loads` offered phits/cycle/node and return
+    the peak ACCEPTED load — saturation as the router actually realises it
+    (queue contention, bubble rule, and with ``config.vcs > 1`` the VC
+    credit-flow router) rather than the static 1/max-link-load proxy.
+    `config` is a `repro.core.SimConfig`; None uses the defaults."""
+    from .simulation import simulate_sweep
+    if seeds == 1:
+        seeds = None          # list[SimResult] path; no replication axis
+    results = simulate_sweep(g, pattern, list(loads), seeds=seeds,
+                             config=config)
+    if isinstance(results, list):
+        return max(float(r.accepted_load) for r in results)
+    return float(results.accepted_mean().max())
+
+
 # ---------------------------------------------------------------------------
 # degraded-graph (scenario) loads: fault-aware table rebuild
 # ---------------------------------------------------------------------------

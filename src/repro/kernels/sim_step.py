@@ -28,6 +28,15 @@ porting pass (2-D iota shims, gather → dynamic-slice loops, halo-tiled
 phases) the first time `interpret=False` runs on hardware.  See the
 ROADMAP fused-kernel frontier item.
 
+VIRTUAL CHANNELS — this kernel is V=1-only.  The VC credit-flow router
+(``SimConfig(vcs>=2)``) carries an (N, 2n, V, Q) state plus per-(port,
+VC) credit counters that this kernel's flat (N, 2nQ) layout does not
+model; `repro.core.simulation._get_runner` rejects `impl="fused"` with
+`vcs > 1` with a clear error.  Run VC configurations with
+`impl="batched"` (vectorized credit router) or `impl="reference"` (the
+per-(port, VC) oracle) — see docs/simulator.md, "Virtual channels &
+credit flow".
+
 Transient faults (`repro.core.fault_schedule.FaultSchedule`) need NO
 kernel changes: the kernel is epoch-oblivious by design.  The fused slot
 step in `repro.core.simulation` resolves the current epoch inside the

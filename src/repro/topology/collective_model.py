@@ -93,6 +93,9 @@ class PodTopologyReport:
     # degraded-graph capacity under a fault scenario (1/max-link-load with
     # traffic rerouted around the faults) — None when no scenario given
     faulted_capacity: float | None = None
+    # peak ACCEPTED load from the slot-level simulator (queue contention,
+    # bubble rule, VC credit flow) — None unless a SimConfig was given
+    simulated_capacity: float | None = None
 
 
 def analyze_pod(name: str, g: LatticeGraph,
@@ -100,7 +103,9 @@ def analyze_pod(name: str, g: LatticeGraph,
                 measure_routed: bool = False,
                 routed_pairs: int = 20_000,
                 routed_backend: str = "auto",
-                scenario=None) -> PodTopologyReport:
+                scenario=None,
+                sim_config=None,
+                sim_loads=(0.2, 0.4, 0.6, 0.8)) -> PodTopologyReport:
     """Price a pod topology.  With `measure_routed=True` the analytic
     capacity bound is accompanied by an empirical saturation throughput:
     `routed_pairs` uniform pairs routed through the batched engine and
@@ -109,7 +114,11 @@ def analyze_pod(name: str, g: LatticeGraph,
     host oracle end-to-end).  With a `repro.core.scenario.Scenario` the
     report also carries the degraded capacity: uniform live-pair traffic
     walked over fault-aware rebuilt routing tables — how much all-to-all
-    headroom the pod keeps after losing links or chips."""
+    headroom the pod keeps after losing links or chips.  With a
+    `repro.core.SimConfig` in `sim_config` the report additionally carries
+    the slot-level simulator's peak accepted load over `sim_loads` — the
+    dynamic saturation point under queue contention (and, for
+    ``sim_config.vcs > 1``, the VC credit-flow router)."""
     sym = torus_sides is None
     test_bytes = 256 * 2**20
     cap = (symmetric_throughput_bound(g) if sym
@@ -119,6 +128,11 @@ def analyze_pod(name: str, g: LatticeGraph,
         from repro.core.throughput import fault_aware_saturation_throughput
         faulted = fault_aware_saturation_throughput(g, scenario,
                                                     pairs=routed_pairs)
+    simulated = None
+    if sim_config is not None:
+        from repro.core.throughput import simulated_saturation_load
+        simulated = simulated_saturation_load(g, sim_loads,
+                                              config=sim_config)
     return PodTopologyReport(
         name=name,
         chips=g.order,
@@ -132,7 +146,8 @@ def analyze_pod(name: str, g: LatticeGraph,
         routed_capacity=(measured_saturation_throughput(
             g, routed_pairs, backend=routed_backend)
             if measure_routed else None),
-        faulted_capacity=faulted)
+        faulted_capacity=faulted,
+        simulated_capacity=simulated)
 
 
 def bisection_links(g: LatticeGraph) -> int:

@@ -1,0 +1,156 @@
+"""The unified `SimConfig` surface (ISSUE 7 api_redesign): one frozen
+value object accepted by every `simulate*` entry point, a strict
+config-vs-legacy-kwarg conflict rule, validation centralized in
+`__post_init__`, and the deprecation of `simulate_load_sweep`.
+"""
+import warnings
+
+import pytest
+
+from repro.core import FaultSchedule, Scenario, SimConfig, Torus
+from repro.core.simulation import (SweepStats, build_tables, simulate,
+                                   simulate_load_sweep,
+                                   simulate_scenario_sweep,
+                                   simulate_schedule_sweep, simulate_sweep,
+                                   throughput_curve)
+
+G = Torus(4, 4)
+TAB = build_tables(G)
+CFG = SimConfig(slots=96, warmup=16, seed=1, tables=TAB)
+
+
+# ---------------------------------------------------------------------------
+# construction & validation (the one shared home of every check)
+# ---------------------------------------------------------------------------
+
+def test_defaults_match_legacy_signature():
+    c = SimConfig()
+    assert (c.slots, c.warmup, c.queue, c.seed) == (512, 128, 4, 0)
+    assert (c.impl, c.hist_bins, c.vcs, c.credits) == ("batched", 0, 1, None)
+    assert c.scenario is None and c.schedule is None
+
+
+def test_replace_revalidates():
+    assert CFG.replace(vcs=2).vcs == 2
+    with pytest.raises(ValueError, match="unknown simulator impl"):
+        CFG.replace(impl="gpu")
+
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(slots=0), "slots must be positive"),
+    (dict(warmup=200, slots=100), "warmup <= slots"),
+    (dict(queue=1), "queue must be >= 2"),
+    (dict(hist_bins=-1), "hist_bins"),
+    (dict(vcs=0), "vcs must be >= 1"),
+    (dict(credits=2), "needs vcs >= 2"),
+    (dict(vcs=2, credits=1), "2 <= credits"),
+    (dict(vcs=2, credits=5, queue=4), "credits <= queue"),
+    (dict(vcs=2, impl="fused"), "V=1-only"),
+    (dict(scenario=Scenario(), schedule=FaultSchedule(events=())),
+     "not both"),
+])
+def test_post_init_validation(bad, match):
+    with pytest.raises(ValueError, match=match):
+        SimConfig(**bad)
+
+
+def test_vcs_rejects_schedule():
+    sched = FaultSchedule(events=((10, "link_down", (0, 0)),))
+    with pytest.raises(ValueError, match="V=1-only"):
+        SimConfig(vcs=2, schedule=sched)
+
+
+def test_from_kwargs_conflict_and_unknown():
+    with pytest.raises(ValueError, match="both config= and legacy"):
+        SimConfig.from_kwargs(CFG, slots=128)
+    with pytest.raises(TypeError, match="unknown simulate kwargs"):
+        SimConfig.from_kwargs(None, slotz=128)
+    with pytest.raises(TypeError, match="expects a SimConfig"):
+        SimConfig.from_kwargs({"slots": 128})
+    # None-valued kwargs mean "not passed" — no conflict
+    assert SimConfig.from_kwargs(CFG, slots=None) is CFG
+    assert SimConfig.from_kwargs(None, slots=640).slots == 640
+
+
+# ---------------------------------------------------------------------------
+# all five entry points accept config= (and reject mixing)
+# ---------------------------------------------------------------------------
+
+def test_simulate_accepts_config():
+    a = simulate(G, "uniform", 0.4, config=CFG)
+    b = simulate(G, "uniform", 0.4, slots=96, warmup=16, seed=1, tables=TAB)
+    assert (a.delivered, a.injected, a.accepted_load) == \
+        (b.delivered, b.injected, b.accepted_load)
+    with pytest.raises(ValueError, match="both config= and legacy"):
+        simulate(G, "uniform", 0.4, config=CFG, slots=96)
+
+
+def test_simulate_sweep_accepts_config():
+    res = simulate_sweep(G, "uniform", (0.3, 0.5), config=CFG)
+    assert len(res) == 2
+    st = simulate_sweep(G, "uniform", (0.3,), config=CFG, seeds=2)
+    assert isinstance(st, SweepStats)
+    with pytest.raises(ValueError, match="both config= and legacy"):
+        simulate_sweep(G, "uniform", (0.3,), config=CFG, seed=2)
+
+
+def test_simulate_scenario_sweep_accepts_config():
+    scens = [Scenario(), Scenario(dead_links=((1, 0),), policy="adaptive")]
+    rows = simulate_scenario_sweep(G, "uniform", scens, loads=(0.4,),
+                                   config=CFG)
+    assert len(rows) == 2 and all(len(r) == 1 for r in rows)
+    # the scenario axis comes from the list, never from the config
+    with pytest.raises(ValueError, match="scenarios` list"):
+        simulate_scenario_sweep(G, "uniform", scens,
+                                config=CFG.replace(scenario=scens[1]))
+
+
+def test_simulate_schedule_sweep_accepts_config():
+    scheds = [FaultSchedule(events=((24, "link_down", (0, 0)),)),
+              FaultSchedule(events=((12, "node_down", 3),))]
+    rows = simulate_schedule_sweep(G, "uniform", scheds, loads=(0.4,),
+                                   config=CFG)
+    assert len(rows) == 2
+    with pytest.raises(ValueError, match="V=1-only"):
+        simulate_schedule_sweep(G, "uniform", scheds,
+                                config=CFG.replace(vcs=2))
+
+
+def test_scenario_schedule_exclusion_same_error_everywhere():
+    """The centralized __post_init__ check fires with ONE message on
+    every path that used to duplicate it."""
+    sched = FaultSchedule(events=((10, "link_down", (0, 0)),))
+    for call in (
+        lambda: simulate(G, "uniform", 0.4, slots=96, warmup=16,
+                         tables=TAB, scenario=Scenario(), schedule=sched),
+        lambda: simulate_sweep(G, "uniform", (0.4,), slots=96, warmup=16,
+                               tables=TAB, scenario=Scenario(),
+                               schedule=sched),
+        lambda: SimConfig(scenario=Scenario(), schedule=sched),
+    ):
+        with pytest.raises(ValueError, match="not both"):
+            call()
+
+
+# ---------------------------------------------------------------------------
+# the deprecated alias
+# ---------------------------------------------------------------------------
+
+def test_simulate_load_sweep_warns_and_delegates():
+    with pytest.warns(DeprecationWarning, match="simulate_load_sweep is "
+                      "deprecated"):
+        old = simulate_load_sweep(G, "uniform", (0.4,), config=CFG)
+    new = simulate_sweep(G, "uniform", (0.4,), config=CFG)
+    assert old[0].accepted_load == new[0].accepted_load
+    with pytest.warns(DeprecationWarning):
+        throughput_curve(G, "uniform", (0.4,), config=CFG)
+
+
+def test_vc_kwargs_reach_the_router_via_config():
+    r = simulate(G, "uniform", 0.4, config=CFG.replace(vcs=2, credits=3))
+    assert r.vc_delivered is not None and r.vc_delivered.shape == (2,)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # no stray deprecation noise
+        r2 = simulate(G, "uniform", 0.4, slots=96, warmup=16, seed=1,
+                      tables=TAB, vcs=2, credits=3)
+    assert r2.delivered == r.delivered
