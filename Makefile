@@ -11,9 +11,10 @@ BENCH_NIGHTLY_JSON ?= /tmp/bench_nightly.json
 BENCH_TOLERANCE ?= 0.30
 # sections whose numbers the regression gate tracks (routing Mrec/s +
 # simulator, scenario-engine & transient-timeline slots/s + the latency
-# histogram overhead ratio + the VC router's overhead/saturation rows);
+# histogram overhead ratio + the VC router's overhead/saturation rows +
+# the heterogeneous-link overhead/express-saturation rows);
 # keep in sync with BENCH_baseline.json
-BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency,vc
+BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency,vc,hetero
 
 .PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
         bench-nightly bench-check bench-baseline lint
@@ -53,7 +54,7 @@ bench-routing:
 # histogram-overhead rows); exercises the whole bench plumbing
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
-	    --only table1,table2,throughput,sim,scenarios,transient,latency,vc
+	    --only table1,table2,throughput,sim,scenarios,transient,latency,vc,hetero
 
 # the nightly CI job: FULL mode, every section (incl. the fused-parity
 # differential cells in `sim` and the N=4096 sweeps), JSON for the

@@ -26,10 +26,12 @@ import sys
 # both fall under the loadpoints marker (the PR 3 suffix-matching fix).
 # epochs_per_s covers the transient-engine epoch-stacked BFS rows;
 # overhead_ratio gates the latency-histogram cost (plain/hist run time —
-# higher is better, 1.0 means the telemetry is free) and the VC router's
-# V=2-vs-V=1 per-slot price; _sat_phits gates the VC section's accepted
+# higher is better, 1.0 means the telemetry is free), the VC router's
+# V=2-vs-V=1 per-slot price and the hetero section's weighted-vs-trivial
+# step cost; _sat_phits gates the VC and hetero sections' accepted
 # saturation loads (deterministic given the seed — the gate pins the
-# escape-lane delivery win itself, not a timing).
+# escape-lane delivery and express-overlay wins themselves, not a
+# timing).
 GATED_SUFFIXES = ("_Mrec_s", "slots_per_s", "loadpoints_per_s",
                   "scenarios_per_s", "epochs_per_s", "overhead_ratio",
                   "_sat_phits")

@@ -16,7 +16,7 @@ import platform
 import sys
 import traceback
 
-from . import (fig5_8_simulation, latency_telemetry, roofline,
+from . import (fig5_8_simulation, hetero_links, latency_telemetry, roofline,
                routing_throughput, scenario_sim, sim_throughput,
                table1_distances, table2_lattices, throughput_bounds,
                topology_collectives, transient_sim, util, vc_router)
@@ -32,6 +32,7 @@ SECTIONS = {
     "transient": transient_sim.main,
     "latency": latency_telemetry.main,
     "vc": vc_router.main,
+    "hetero": hetero_links.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,

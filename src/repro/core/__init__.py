@@ -13,9 +13,12 @@ from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
                         faulted_distance_sweep, faulted_schedule_stats,
                         fcc_average_distance, fcc_diameter,
                         mixed_torus_diameter, pc_average_distance,
-                        pc_diameter, summarize, torus_average_distance)
+                        pc_diameter, summarize, torus_average_distance,
+                        weighted_average_distance, weighted_diameter,
+                        weighted_distance_matrix)
 from .fault_schedule import CompiledSchedule, FaultSchedule
 from .lattice import LatticeGraph
+from .link_spec import LinkSpec
 from .routing import (HierarchicalRouter, fault_aware_next_hop,
                       fault_aware_next_hop_device, make_router,
                       minimal_record_bruteforce, norm1, route_bcc, route_fcc,
@@ -40,7 +43,8 @@ from .throughput import (bcc_throughput_bound, channel_load,
                          fault_aware_schedule_saturation,
                          fcc_throughput_bound, measured_saturation_throughput,
                          mixed_torus_throughput_bound, pc_throughput_bound,
-                         symmetric_throughput_bound)
+                         symmetric_throughput_bound, weighted_channel_load,
+                         weighted_saturation_throughput)
 
 __all__ = [
     "intmat", "LatticeGraph",
@@ -71,5 +75,8 @@ __all__ = [
     "faulted_average_distance", "faulted_diameter",
     "FaultSchedule", "CompiledSchedule", "faulted_schedule_stats",
     "fault_aware_schedule_load", "fault_aware_schedule_saturation",
-    "SimConfig", "credit_vc_select",
+    "SimConfig", "credit_vc_select", "LinkSpec",
+    "weighted_distance_matrix", "weighted_average_distance",
+    "weighted_diameter", "weighted_channel_load",
+    "weighted_saturation_throughput",
 ]

@@ -236,6 +236,48 @@ def faulted_diameter(g: LatticeGraph, scenario,
     return int(dist.max())
 
 
+# -- heterogeneous-link (LinkSpec) metrics ----------------------------------
+
+def weighted_distance_matrix(g: LatticeGraph, link_spec,
+                             scenario=None) -> np.ndarray:
+    """(N, N) weighted shortest-path COSTS (slots) of a heterogeneous
+    fabric: per-dimension/express slot costs and the pillar mask of a
+    `core.link_spec.LinkSpec`, optionally composed with a fault
+    `Scenario`.  Runs the per-port-cost min-plus relaxation of
+    `routing.fault_aware_next_hop_device` over the extended (base +
+    express) port axis; −1 marks unreachable pairs (possible once
+    pillars or faults cut the graph).  A trivial spec reproduces
+    `faulted_distance_matrix` / the hop-count matrix exactly."""
+    from .routing import fault_aware_next_hop_device
+    if scenario is not None:
+        link_ok, node_ok = scenario.link_ok(g), scenario.node_ok(g)
+    else:
+        link_ok = np.ones((g.order, 2 * g.n), dtype=bool)
+        node_ok = None
+    return fault_aware_next_hop_device(
+        g, link_ok, node_ok, link_spec=link_spec)[0]
+
+
+def weighted_average_distance(g: LatticeGraph, link_spec,
+                              dist: np.ndarray | None = None) -> float:
+    """Mean weighted cost over ordered reachable pairs — the k̄ entering
+    the Δ/k̄ saturation intuition once slot costs are non-uniform."""
+    if dist is None:
+        dist = weighted_distance_matrix(g, link_spec)
+    d = dist[dist > 0]
+    if d.size == 0:
+        raise ValueError("no reachable pairs under this LinkSpec")
+    return float(d.mean())
+
+
+def weighted_diameter(g: LatticeGraph, link_spec,
+                      dist: np.ndarray | None = None) -> int:
+    """Max weighted pair cost (slots) of the heterogeneous fabric."""
+    if dist is None:
+        dist = weighted_distance_matrix(g, link_spec)
+    return int(dist.max())
+
+
 @dataclass(frozen=True)
 class DistanceSummary:
     name: str

@@ -325,17 +325,28 @@ _FAULT_BFS_CACHE: dict = {}
 _BFS_INF = 1 << 30
 
 
-def _get_fault_bfs(N: int, P: int, with_next_hop: bool = True):
+def _get_fault_bfs(N: int, P: int, with_next_hop: bool = True,
+                   weights: tuple[int, ...] | None = None):
     """Compiled min-plus BFS relaxation for an (N, P)-shaped fabric:
     all-pairs distances (+ first-live-port next hops unless
     `with_next_hop=False` — the sweep path skips them) on a masked
     adjacency, iterated to the fixed point under `lax.while_loop`
     (~diameter iterations, each a batch of 2n neighbor gathers over the
-    (N, N) distance front — no scatters, no host loop)."""
-    key = (N, P, with_next_hop)
+    (N, N) distance front — no scatters, no host loop).
+
+    `weights` (static per-port slot costs, heterogeneous `LinkSpec`
+    fabrics) turns the relaxation min-plus over ``cand + w[p]`` — the
+    fixed point is then the weighted shortest-path cost, and the
+    next-hop rule becomes ``dn == dist - w[p]``.  None keeps the
+    unit-cost program (same cache entry as before this axis existed)."""
+    key = (N, P, with_next_hop, weights)
     if key not in _FAULT_BFS_CACHE:
         import jax
         import jax.numpy as jnp
+
+        # per-port costs baked as Python ints: the unit-cost program is
+        # literally `cand + 1`, unchanged from the pre-weighted build
+        w_of = [1] * P if weights is None else [int(w) for w in weights]
 
         def relax(nbr, eff_ok, link_ok, src_live):
             # dist[u, d]: length of the shortest all-live path u → d.
@@ -350,7 +361,7 @@ def _get_fault_bfs(N: int, P: int, with_next_hop: bool = True):
                 for p in range(P):      # static, 2n small
                     cand = jnp.where(eff_ok[:, p][:, None],
                                      dist[nbr[:, p]], _BFS_INF)
-                    new = jnp.minimum(new, cand + 1)
+                    new = jnp.minimum(new, cand + w_of[p])
                 return new, jnp.any(new != dist)
 
             dist, _ = jax.lax.while_loop(
@@ -364,7 +375,7 @@ def _get_fault_bfs(N: int, P: int, with_next_hop: bool = True):
             nh = jnp.full((N, N), -1, jnp.int8)
             for p in range(P - 1, -1, -1):
                 dn = dist[nbr[:, p]]
-                ok = (link_ok[:, p][:, None] & (dn == dist - 1)
+                ok = (link_ok[:, p][:, None] & (dn == dist - w_of[p])
                       & (dn < _BFS_INF) & reach)
                 nh = jnp.where(ok, jnp.int8(p), nh)
             return out, nh
@@ -373,16 +384,17 @@ def _get_fault_bfs(N: int, P: int, with_next_hop: bool = True):
     return _FAULT_BFS_CACHE[key]
 
 
-def _get_fault_bfs_stacked(N: int, P: int):
+def _get_fault_bfs_stacked(N: int, P: int,
+                           weights: tuple[int, ...] | None = None):
     """`lax.map` of the min-plus relaxation over a leading epoch/scenario
     axis of stacked masks: the relaxation body compiles ONCE and the map
     runs it sequentially per mask set, so the (N, N) distance front is
     resident once — the epoch-stacked mode `fault_aware_next_hop_device`
     exposes for per-epoch curves of a `FaultSchedule`."""
-    key = (N, P, "stacked")
+    key = (N, P, "stacked", weights)
     if key not in _FAULT_BFS_CACHE:
         import jax
-        relax = _get_fault_bfs(N, P)
+        relax = _get_fault_bfs(N, P, weights=weights)
 
         def stacked(nbr, eff_ok, link_ok, node_ok):
             return jax.lax.map(
@@ -394,7 +406,8 @@ def _get_fault_bfs_stacked(N: int, P: int):
 
 
 def fault_aware_next_hop_device(g: LatticeGraph, link_ok: np.ndarray,
-                                node_ok: np.ndarray | None = None
+                                node_ok: np.ndarray | None = None,
+                                *, link_spec=None
                                 ) -> tuple[np.ndarray, np.ndarray]:
     """`fault_aware_next_hop` computed ON DEVICE: the per-destination BFS
     layers become a multi-source min-plus relaxation — all N distance
@@ -412,27 +425,48 @@ def fault_aware_next_hop_device(g: LatticeGraph, link_ok: np.ndarray,
     `lax.map` over the E mask sets in ONE compiled program, returning
     (E, N, N) dist / next-hop stacks.  `distances.faulted_schedule_stats`
     and `throughput.fault_aware_schedule_load` build their per-epoch
-    curves on this path."""
+    curves on this path.
+
+    HETEROGENEOUS fabrics: pass `link_spec=` (a non-trivial
+    `core.link_spec.LinkSpec`) and the relaxation runs over the EXTENDED
+    port axis with per-port slot costs — `dist` becomes the weighted
+    shortest-path cost, `next_hop` indexes the P = 2n + 2·X extended
+    ports.  The (…, N, 2n) `link_ok` input keeps its base shape: express
+    columns are appended all-live (overlay channels have no fault axis
+    yet) and a pillar mask is AND-ed into the base columns."""
     import jax.numpy as jnp
 
     N, P = g.order, 2 * g.n
     link_ok = np.asarray(link_ok, dtype=bool)
     nbr = g.neighbor_indices.astype(np.int32)
-    if link_ok.ndim == 3:                                  # (E, N, 2n)
+    weights = None
+    if link_spec is not None and not link_spec.is_trivial:
+        link_spec.validate(g.n)
+        P = link_spec.num_ports(g.n)
+        nbr = link_spec.extended_neighbors(g).astype(np.int32)
+        if link_spec.weighted:
+            weights = tuple(int(w) for w in link_spec.port_weights(g.n))
+        structural = link_spec.structural_mask(g)
+        if structural is not None:
+            link_ok = link_ok & structural
+        if P > 2 * g.n:
+            ext = np.ones(link_ok.shape[:-1] + (P - 2 * g.n,), dtype=bool)
+            link_ok = np.concatenate([link_ok, ext], axis=-1)
+    if link_ok.ndim == 3:                                  # (E, N, P)
         E = link_ok.shape[0]
         node_ok = (np.ones((E, N), dtype=bool) if node_ok is None
                    else np.asarray(node_ok, dtype=bool))
         if node_ok.ndim == 1:
             node_ok = np.broadcast_to(node_ok, (E, N))
         eff_ok = link_ok & node_ok[:, :, None] & node_ok[:, nbr]
-        dist, nh = _get_fault_bfs_stacked(N, P)(
+        dist, nh = _get_fault_bfs_stacked(N, P, weights=weights)(
             jnp.asarray(nbr), jnp.asarray(eff_ok), jnp.asarray(link_ok),
             jnp.asarray(node_ok))
         return np.asarray(dist), np.asarray(nh)
     node_ok = (np.ones(N, dtype=bool) if node_ok is None
                else np.asarray(node_ok, dtype=bool))
     eff_ok = link_ok & node_ok[:, None] & node_ok[nbr]
-    dist, nh = _get_fault_bfs(N, P)(
+    dist, nh = _get_fault_bfs(N, P, weights=weights)(
         jnp.asarray(nbr), jnp.asarray(eff_ok), jnp.asarray(link_ok),
         jnp.asarray(node_ok))
     return np.asarray(dist), np.asarray(nh)

@@ -36,6 +36,7 @@ from __future__ import annotations
 from dataclasses import dataclass, fields, replace
 
 from .fault_schedule import FaultSchedule
+from .link_spec import LinkSpec
 from .scenario import Scenario
 
 SIM_IMPLS = ("batched", "reference", "fused")
@@ -44,7 +45,7 @@ SIM_IMPLS = ("batched", "reference", "fused")
 # `from_kwargs` to build the config and to name conflicts precisely
 _FIELD_NAMES: tuple[str, ...] = (
     "slots", "warmup", "queue", "seed", "tables", "impl", "scenario",
-    "schedule", "hist_bins", "vcs", "credits")
+    "schedule", "hist_bins", "vcs", "credits", "links")
 
 
 @dataclass(frozen=True)
@@ -64,6 +65,7 @@ class SimConfig:
     hist_bins: int = 0
     vcs: int = 1
     credits: int | None = None
+    links: LinkSpec | None = None
 
     def __post_init__(self):
         if self.impl not in SIM_IMPLS:
@@ -110,6 +112,32 @@ class SimConfig:
                 raise ValueError(
                     "transient FaultSchedule timelines are V=1-only for "
                     "now; run vcs>1 with a static scenario= instead")
+        if self.links is not None:
+            if not isinstance(self.links, LinkSpec):
+                raise TypeError(
+                    f"links= expects a LinkSpec, got "
+                    f"{type(self.links).__name__}")
+            if not self.links.is_trivial:
+                if self.impl == "fused":
+                    raise ValueError(
+                        "impl='fused' (the Pallas slot-step kernel) is "
+                        "weight-1/no-overlay-only; run heterogeneous "
+                        "LinkSpecs with impl='batched' or 'reference' "
+                        "(see docs/simulator.md, 'Heterogeneous links')")
+                if self.links.express:
+                    if self.vcs > 1:
+                        raise ValueError(
+                            "express-channel overlays are vcs=1-only "
+                            "(credit_vc_select scores the 2n base ports "
+                            "only); drop express= or run vcs=1")
+                    if self.schedule is not None or (
+                            self.scenario is not None
+                            and not self.scenario.is_trivial):
+                        raise ValueError(
+                            "express-channel overlays require a pristine "
+                            "fabric (no Scenario faults, no FaultSchedule)"
+                            " — the fault policies route over the 2n base "
+                            "ports only")
 
     # -- the legacy-kwarg shim ---------------------------------------------
     @classmethod

@@ -141,6 +141,7 @@ import numpy as np
 
 from .fault_schedule import CompiledSchedule, FaultSchedule, ensure_compiled
 from .lattice import LatticeGraph
+from .link_spec import LinkSpec
 from .routing import make_router
 from .routing_engine import canonical_reduce, credit_vc_select, policy_ports
 from .scenario import Scenario
@@ -417,6 +418,21 @@ def _next_port(rec):
     return 2 * dim + (sgn < 0), dim, sgn
 
 
+def _next_port_ext(rec, pdim, psgn, pspan):
+    """Greedy weighted DOR over an express-extended port set: among the
+    ports of the record's first nonzero dimension whose sign matches and
+    whose span FITS the remaining offset (no overshoot — the minimal-
+    record invariant survives), take the largest span.  With no express
+    entries this selects exactly `_next_port`'s 2·dim + (sgn<0)."""
+    nz = jnp.abs(rec) > 0
+    dim = jnp.argmax(nz, axis=-1)
+    val = jnp.take_along_axis(rec, dim[..., None], -1)[..., 0]
+    val = val.astype(jnp.int32)
+    ok = ((pdim == dim[..., None]) & (psgn * val[..., None] > 0)
+          & (pspan <= jnp.abs(val)[..., None]))
+    return jnp.argmax(jnp.where(ok, pspan, -1), axis=-1)
+
+
 def _inject(state, key, new_dst, new_rec, new_birth, ctx, masks=None):
     """Reference injection stage (per-slot PRNG draws + scatter writes,
     bitwise-stable vs the pre-batching simulator for trivial scenarios).
@@ -453,8 +469,12 @@ def _inject(state, key, new_dst, new_rec, new_birth, ctx, masks=None):
     coin = jax.random.uniform(k3, (N,)) < 0.5
     r = jnp.where(coin[:, None], rec_a[di], rec_b[di])
     if trivial:
-        inj_port, _, _ = _next_port(r[:, None, :])
-        inj_port = inj_port[:, 0]
+        if ctx.get("express"):
+            inj_port = _next_port_ext(r, ctx["pdim"], ctx["psgn"],
+                                      ctx["pspan"])
+        else:
+            inj_port, _, _ = _next_port(r[:, None, :])
+            inj_port = inj_port[:, 0]
         drop = None
         ipc = inj_port
     else:
@@ -613,6 +633,10 @@ def _make_slot_step_batched(ctx, warmup: int):
     nbr = ctx["nbr"]
     rec_dtype = ctx["rec_dtype"]
     trivial = ctx["trivial"]
+    weighted = ctx.get("weighted", False)
+    express = ctx.get("express", False)
+    if weighted:
+        wgt = ctx["wgt"]                           # (P,) int32 slot costs
     PQ = P * Q
     # arbitration key = prio(8 bit)·PQ + rot(<PQ): int16 fits exactly up
     # to PQ=127 (256·PQ − 1 < 0x7FFF); wider queues fall back to int32
@@ -622,12 +646,16 @@ def _make_slot_step_batched(ctx, warmup: int):
     opp = jnp.arange(P) ^ 1                        # paired ±e_i ports
     sender = nbr[:, opp]                           # (N, P): src of in-port p
     receiver = nbr                                 # (N, P): dst of out-port p
-    dim_p = ports // 2
-    sgn_p = 1 - 2 * (ports % 2)
-    # hop of out-port p subtracted from the record: sgn_p · e_{dim_p}
-    hop = np.zeros((P, n), np.int64)
-    hop[np.arange(P), np.asarray(dim_p)] = np.asarray(sgn_p)
-    hop = jnp.asarray(hop, rec_dtype)
+    if express:
+        # overlay ports hop span·e_dim; the table already carries signs
+        hop = ctx["hop_tab"].astype(rec_dtype)
+    else:
+        dim_p = ports // 2
+        sgn_p = 1 - 2 * (ports % 2)
+        # hop of out-port p subtracted from the record: sgn_p · e_{dim_p}
+        hop = np.zeros((P, n), np.int64)
+        hop[np.arange(P), np.asarray(dim_p)] = np.asarray(sgn_p)
+        hop = jnp.asarray(hop, rec_dtype)
     pq32 = jnp.arange(PQ, dtype=jnp.int32)
     ports8 = jnp.arange(P, dtype=jnp.int8)
     NO_PORT = jnp.int8(P)
@@ -669,6 +697,14 @@ def _make_slot_step_batched(ctx, warmup: int):
             backlog0 = state["backlog"]
         slot = state["slot"]
         occ = birth >= 0                                   # (N, P, Q)
+        if weighted:
+            # a packet still paying a multi-slot crossing (wait > 0) sits
+            # in its queue slot — occupying space and in_flight — but is
+            # not yet eligible to request an output port
+            busy, wait = state["busy"], state["wait"]
+            elig = occ & (wait == 0)
+        else:
+            elig = occ
         if scheduled and ctx["policy"] != "dor":
             # adaptive/escape re-consult policy_ports against the CURRENT
             # epoch's masks: a carried port can go stale when the world
@@ -681,7 +717,13 @@ def _make_slot_step_batched(ctx, warmup: int):
                              ctx["policy"]).astype(jnp.int8), NO_PORT)
         else:
             port = jnp.where(occ, port, NO_PORT)
-        port_flat = port.reshape(N, PQ)
+        if weighted:
+            # the state-carried port survives the wait (the packet still
+            # wants the same hop once eligible); only the ARBITRATION view
+            # hides waiting packets
+            port_flat = jnp.where(elig, port, NO_PORT).reshape(N, PQ)
+        else:
+            port_flat = port.reshape(N, PQ)
 
         # ---- winner per (node, out-port): segmented min over encoded keys --
         # segment id = node·2n + requested_port, key = prio·PQ + rot —
@@ -707,6 +749,11 @@ def _make_slot_step_batched(ctx, warmup: int):
             # a dead channel moves nothing: mask its winner away (packets
             # requesting it — DOR through a fault — block in place)
             w_enc = jnp.where(link_ok, w_enc, BIG)
+        if weighted:
+            # a weight-w channel stays held for w slots after a crossing:
+            # mask it out of arbitration exactly like a dead link while
+            # its busy countdown runs
+            w_enc = jnp.where(busy == 0, w_enc, BIG)
         whas = w_enc < BIG
         widx = jnp.where(
             whas, (w_enc.astype(jnp.int32) % PQ - jnp.int32(slot)) % PQ, 0)
@@ -765,6 +812,11 @@ def _make_slot_step_batched(ctx, warmup: int):
         # implies delivery slot > warmup, so these sums need no extra
         # counted gate.
         age = slot + 1 - in_birth                          # (N, P)
+        if weighted:
+            # delivery is counted at the win slot, but the packet still
+            # pays the final crossing: its true arrival is wgt[p]−1
+            # slots later (weight-1 adds 0 — identical arithmetic)
+            age = age + (wgt - 1)[None, :]
         meas = deliver & (in_birth >= warmup)
         lat_sum = jnp.where(meas, age, 0).sum()
         lat_cnt = meas.sum()
@@ -783,7 +835,10 @@ def _make_slot_step_batched(ctx, warmup: int):
         slot_f = jnp.argmax(free_mask, axis=2)             # (N, P) first free
         slot_l = (Q - 1) - jnp.argmax(free_mask[:, :, ::-1], axis=2)
         wmask = acc[:, :, None] & (qi == slot_f[:, :, None])
-        if trivial:
+        if express:
+            port_in = _next_port_ext(rec_after, ctx["pdim"], ctx["psgn"],
+                                     ctx["pspan"])         # (N, P) next hop
+        elif trivial:
             port_in, _, _ = _next_port(rec_after)          # (N, P) next hop
         else:
             port_in = policy_ports(rec_after, link_ok[:, None, :],
@@ -834,6 +889,19 @@ def _make_slot_step_batched(ctx, warmup: int):
 
         updates = dict(rec=new_rec, birth=new_birth, port=new_port,
                        backlog=backlog)
+        if weighted:
+            # countdown bookkeeping: a departed slot's wait clears with
+            # it, an arriving packet starts at wgt[in-port]−1 (the write
+            # masks never collide with injection, which starts at 0 —
+            # crossing no link costs nothing), and the crossed channel's
+            # busy restarts at wgt−1 (blocked for the w−1 FOLLOWING slots)
+            wait_dec = jnp.where(dep_slot.reshape(N, P, Q), 0,
+                                 jnp.maximum(wait - 1, 0))
+            updates["wait"] = jnp.where(
+                imask, 0,
+                jnp.where(wmask, (wgt - 1)[None, :, None], wait_dec))
+            updates["busy"] = jnp.where(dep_port, wgt[None, :] - 1,
+                                        jnp.maximum(busy - 1, 0))
         if ctx["hist_bins"]:
             updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
                 age, meas, ctx["hist_bins"])
@@ -965,6 +1033,17 @@ def _make_slot_step_reference(ctx, warmup: int):
     opp = [p ^ 1 for p in range(P)]
     trivial = ctx["trivial"]
     scheduled = ctx.get("scheduled", False)
+    weighted = ctx.get("weighted", False)
+    express = ctx.get("express", False)
+    if express:
+        dim_of = np.asarray(ctx["pdim"]).tolist()
+        sgn_of = np.asarray(ctx["psgn"]).tolist()
+        span_of = np.asarray(ctx["pspan"]).tolist()
+    else:
+        dim_of = [p // 2 for p in range(P)]
+        sgn_of = [1 - 2 * (p % 2) for p in range(P)]
+        span_of = [1] * P
+    wgt_of = (np.asarray(ctx["wgt"]).tolist() if weighted else [1] * P)
 
     def slot_step(state, key):
         dst, rec, birth = state["dst"], state["rec"], state["birth"]
@@ -988,12 +1067,20 @@ def _make_slot_step_reference(ctx, warmup: int):
             link_ok = None if trivial else ctx["link_ok"]
             masks, qdrop = None, None
         occ = dst >= 0                                     # (N, P, Q)
-        if trivial:
+        if express:
+            port = _next_port_ext(rec, ctx["pdim"], ctx["psgn"],
+                                  ctx["pspan"])             # (N, P, Q)
+        elif trivial:
             port, _, _ = _next_port(rec)                   # (N, P, Q)
         else:
             port = policy_ports(rec, link_ok[:, None, None, :],
                                 ctx["policy"])
-        port = jnp.where(occ, port, -1)
+        if weighted:
+            # packets still paying a multi-slot crossing are ineligible
+            busy, wait = state["busy"], state["wait"]
+            port = jnp.where(occ & (wait == 0), port, -1)
+        else:
+            port = jnp.where(occ, port, -1)
 
         # ---- arbitration: one winner packet per (node, out-port) ----
         rand = jax.random.uniform(jax.random.fold_in(key, 1), (N, P, Q))
@@ -1001,6 +1088,9 @@ def _make_slot_step_reference(ctx, warmup: int):
         if not trivial:
             # dead channels never arbitrate: packets aimed at them block
             requested = requested & link_ok[:, None, None, :]
+        if weighted:
+            # a busy (multi-slot-held) channel moves nothing this slot
+            requested = requested & (busy == 0)[:, None, None, :]
         flatscore = jnp.where(requested, rand[..., None], -1.0)
         flat = flatscore.reshape(N, P * Q, P)
         widx = jnp.argmax(flat, axis=1)                    # (N, P) flat pq index
@@ -1022,10 +1112,15 @@ def _make_slot_step_reference(ctx, warmup: int):
         dead_crossings = jnp.int32(0)
         age_l, meas_l, del_l = [], [], []
         new_dst, new_rec, new_birth = dst, rec, birth
+        if weighted:
+            # countdowns tick once per slot; crossings below re-arm them
+            new_busy = jnp.maximum(busy - 1, 0)
+            new_wait = jnp.maximum(wait - 1, 0)
         link_use = None if trivial else state["link_use"]
         for p in range(P):
-            d_p = p // 2
-            s_p = 1 - 2 * (p % 2)                          # +1 / −1
+            d_p = dim_of[p]
+            s_p = sgn_of[p] * span_of[p]                   # signed hop span
+            w_p = wgt_of[p]                                # slot cost
             u = nbr[:, opp[p]]                             # sender for recv w
             has = whas[u, p]
             pk_dst = w_dst[u, p]
@@ -1041,8 +1136,12 @@ def _make_slot_step_reference(ctx, warmup: int):
             moved = will_deliver | ok
             # stats — latency over measured deliveries only (birth >=
             # warmup, the PR-6 warmup-bias fix; identical to the batched
-            # step's filter)
+            # step's filter).  Weighted channels add their final-crossing
+            # cost: delivery is counted at the win slot, arrival is w−1
+            # slots later.
             age_p = slot + 1 - pk_birth
+            if weighted:
+                age_p = age_p + (w_p - 1)
             meas_p = will_deliver & (pk_birth >= warmup)
             delivered += will_deliver.sum()
             lat_sum += jnp.where(meas_p, age_p, 0).sum()
@@ -1071,11 +1170,25 @@ def _make_slot_step_reference(ctx, warmup: int):
                 jnp.where(ok[:, None], rec_after, new_rec[r_, p, slot_idx]))
             new_birth = new_birth.at[r_, p, slot_idx].set(
                 jnp.where(ok, pk_birth, new_birth[r_, p, slot_idx]))
+            if weighted:
+                # crossed channel (u, p) re-arms its hold; the accepted
+                # packet starts its own eligibility countdown at w−1
+                new_busy = new_busy.at[u, p].set(
+                    jnp.where(moved, w_p - 1, new_busy[u, p]))
+                new_wait = new_wait.at[r_, p, slot_idx].set(
+                    jnp.where(ok, w_p - 1, new_wait[r_, p, slot_idx]))
 
+        if weighted:
+            # free slots carry no countdown: zero them so injection (which
+            # crosses no link) always starts eligible
+            new_wait = jnp.where(new_dst >= 0, new_wait, 0)
         new_dst, new_rec, new_birth, backlog, can, drop = _inject(
             state, key, new_dst, new_rec, new_birth, ctx, masks)
         updates = dict(dst=new_dst, rec=new_rec, birth=new_birth,
                        backlog=backlog)
+        if weighted:
+            updates["busy"] = new_busy
+            updates["wait"] = new_wait
         if ctx["hist_bins"]:
             updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
                 jnp.stack(age_l, 1), jnp.stack(meas_l, 1),
@@ -1093,9 +1206,12 @@ def _make_slot_step_reference(ctx, warmup: int):
             if ctx["hist_bins"]:
                 y["lat_hist"] = out["lat_hist"]
         elif ctx.get("lat_trace"):
-            # the per-packet oracle: every delivery's age + flag, per slot
-            # (test-scale only — slots×N×2n device→host traffic)
-            y = dict(age=jnp.stack(age_l, 1), deliv=jnp.stack(del_l, 1))
+            # the per-packet oracle: every delivery's age + flags, per slot
+            # (test-scale only — slots×N×P device→host traffic).  The meas
+            # flag travels too: weighted ages carry the +w−1 final-crossing
+            # term, so the host cannot reconstruct birth from slot+1−age.
+            y = dict(age=jnp.stack(age_l, 1), deliv=jnp.stack(del_l, 1),
+                     meas=jnp.stack(meas_l, 1))
         return out, y
 
     return slot_step
@@ -1153,6 +1269,9 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
     pvq32 = jnp.arange(PVQ, dtype=jnp.int32)
     qids = jnp.arange(PV, dtype=jnp.int32)
     varange = jnp.arange(V, dtype=jnp.int32)
+    weighted = ctx.get("weighted", False)   # express is vcs=1-only
+    if weighted:
+        wgt = ctx["wgt"]                    # (P,) int32 slot costs
 
     def gather_port(per_port, fill, port_flat):
         padded = jnp.concatenate(
@@ -1178,7 +1297,12 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
         sel_port, sel_vc = credit_vc_select(
             rec, lok[:, None, None, None, :],
             cd[:, None, None, None, :, :], policy, rot=slot)
-        sel_port = jnp.where(occ, sel_port, P)             # sentinel if free
+        if weighted:
+            # multi-slot crossings: waiting packets are ineligible
+            busy, wait = state["busy"], state["wait"]
+            sel_port = jnp.where(occ & (wait == 0), sel_port, P)
+        else:
+            sel_port = jnp.where(occ, sel_port, P)         # sentinel if free
         port_flat = sel_port.reshape(N, PVQ)
         vc_flat = sel_vc.reshape(N, PVQ)
 
@@ -1191,6 +1315,9 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
              for p in range(P)], axis=1)                   # (N, P)
         if link_ok is not None:
             w_enc = jnp.where(link_ok, w_enc, BIG)
+        if weighted:
+            # a held (busy) physical channel arbitrates nothing this slot
+            w_enc = jnp.where(busy == 0, w_enc, BIG)
         whas = w_enc < BIG
         widx = jnp.where(
             whas, (w_enc.astype(jnp.int32) % PVQ - jnp.int32(slot)) % PVQ,
@@ -1243,6 +1370,9 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
 
         delivered = deliver.sum()
         age = slot + 1 - in_birth
+        if weighted:
+            # final-crossing cost: arrival is wgt[p]−1 slots after the win
+            age = age + (wgt - 1)[None, :]
         meas = deliver & (in_birth >= warmup)
         lat_sum = jnp.where(meas, age, 0).sum()
         lat_cnt = meas.sum()
@@ -1312,6 +1442,14 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
                                                            0),
             vc_injected=state["vc_injected"] + jnp.where(counted, vc_inj,
                                                          0))
+        if weighted:
+            wait_dec = jnp.where(dep_slot.reshape(N, P, V, Q), 0,
+                                 jnp.maximum(wait - 1, 0))
+            updates["wait"] = jnp.where(
+                imask, 0, jnp.where(wmask, (wgt - 1)[None, :, None, None],
+                                    wait_dec))
+            updates["busy"] = jnp.where(dep_port, wgt[None, :] - 1,
+                                        jnp.maximum(busy - 1, 0))
         if ctx["hist_bins"]:
             updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
                 age, meas, ctx["hist_bins"])
@@ -1341,6 +1479,8 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
     adaptive = policy in ("adaptive", "escape")
     PV, PVQ = P * V, P * V * Q
     varange = jnp.arange(V, dtype=jnp.int32)
+    weighted = ctx.get("weighted", False)   # express is vcs=1-only
+    wgt_of = (np.asarray(ctx["wgt"]).tolist() if weighted else [1] * P)
 
     def slot_step(state, key):
         dst, rec, birth = state["dst"], state["rec"], state["birth"]
@@ -1353,13 +1493,19 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
         sel_port, sel_vc = credit_vc_select(
             rec, lok[:, None, None, None, :],
             cd[:, None, None, None, :, :], policy, rot=slot)
-        sel_port = jnp.where(occ, sel_port, -1)
+        if weighted:
+            busy, wait = state["busy"], state["wait"]
+            sel_port = jnp.where(occ & (wait == 0), sel_port, -1)
+        else:
+            sel_port = jnp.where(occ, sel_port, -1)
 
         # ---- arbitration: one winner per (node, out-port) ----
         rand = jax.random.uniform(jax.random.fold_in(key, 1), (N, P, V, Q))
         requested = sel_port[..., None] == jnp.arange(P)
         if not trivial:
             requested = requested & link_ok[:, None, None, None, :]
+        if weighted:
+            requested = requested & (busy == 0)[:, None, None, None, :]
         flat = jnp.where(requested, rand[..., None], -1.0).reshape(
             N, PVQ, P)
         widx = jnp.argmax(flat, axis=1)                    # (N, P)
@@ -1379,14 +1525,18 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
         lat_sum = jnp.int32(0)
         lat_cnt = jnp.int32(0)
         vc_del = jnp.zeros((V,), jnp.int32)
-        age_l, meas_l = [], []
+        age_l, meas_l, del_l = [], [], []
         new_dst, new_rec, new_birth = dst, rec, birth
+        if weighted:
+            new_busy = jnp.maximum(busy - 1, 0)
+            new_wait = jnp.maximum(wait - 1, 0)
         credit_work = credit                               # (N, P, V)
         link_use = None if trivial else state["link_use"]
         r_ = jnp.arange(N)
         for p in range(P):
             d_p = p // 2
             s_p = 1 - 2 * (p % 2)
+            w_p = wgt_of[p]
             u = nbr[:, opp[p]]                             # sender for recv w
             has = whas[u, p]
             pk_dst = w_dst[u, p]
@@ -1405,15 +1555,18 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
             ok = has & ~done & (freeq >= need)
             moved = will_deliver | ok
             age_p = slot + 1 - pk_birth
+            if weighted:
+                age_p = age_p + (w_p - 1)
             meas_p = will_deliver & (pk_birth >= warmup)
             delivered += will_deliver.sum()
             lat_sum += jnp.where(meas_p, age_p, 0).sum()
             lat_cnt += meas_p.sum()
             vc_del = vc_del + (will_deliver[:, None]
                                & ((pk_srcq % V)[:, None] == varange)).sum(0)
-            if ctx["hist_bins"]:
+            if ctx["hist_bins"] or ctx.get("lat_trace"):
                 age_l.append(age_p)
                 meas_l.append(meas_p)
+                del_l.append(will_deliver)
             if link_use is not None:
                 link_use = link_use.at[u, p].add(moved.astype(jnp.int32))
             # clear the winner slot at the sender; its lane regains a credit
@@ -1435,6 +1588,16 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
                 jnp.where(ok, pk_birth, new_birth[r_, p, pk_vc, slot_idx]))
             credit_work = credit_work.at[r_, p, pk_vc].add(
                 -ok.astype(jnp.int32))
+            if weighted:
+                new_busy = new_busy.at[u, p].set(
+                    jnp.where(moved, w_p - 1, new_busy[u, p]))
+                new_wait = new_wait.at[r_, p, pk_vc, slot_idx].set(
+                    jnp.where(ok, w_p - 1,
+                              new_wait[r_, p, pk_vc, slot_idx]))
+
+        if weighted:
+            # free slots carry no countdown (injection crosses no link)
+            new_wait = jnp.where(new_dst >= 0, new_wait, 0)
 
         # ---- injection: credit-aware lane admission (bubble cost 2) ----
         m = ctx
@@ -1494,6 +1657,9 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
                                                            0),
             vc_injected=state["vc_injected"] + jnp.where(counted, vc_inj,
                                                          0))
+        if weighted:
+            updates["busy"] = new_busy
+            updates["wait"] = new_wait
         if ctx["hist_bins"]:
             updates["lat_hist"] = state["lat_hist"] + _bucket_counts(
                 jnp.stack(age_l, 1), jnp.stack(meas_l, 1),
@@ -1502,7 +1668,13 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
             updates["link_use"] = link_use
         out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
                            drop, **updates)
-        return out, None
+        y = None
+        if ctx.get("lat_trace"):
+            # the per-packet oracle, VC flavour: ages/flags per physical
+            # in-port — same (slots, N, P) trace shape as the V=1 oracle
+            y = dict(age=jnp.stack(age_l, 1), deliv=jnp.stack(del_l, 1),
+                     meas=jnp.stack(meas_l, 1))
+        return out, y
 
     return slot_step
 
@@ -1566,7 +1738,7 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
               schedule: CompiledSchedule | None = None,
               pad_epochs: int | None = None, *, hist_bins: int = 0,
               lat_trace: bool = False, vcs: int = 1,
-              credits: int | None = None):
+              credits: int | None = None, links: LinkSpec | None = None):
     """`force_masks=True` builds the mask-threaded (non-trivial) context
     even for the pristine scenario — used by `simulate_scenario_sweep`,
     where a pristine pattern may ride the traced-mask program alongside
@@ -1581,19 +1753,36 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     the in-carry latency histogram (age buckets 0..B−2 exact, B−1
     overflow); `lat_trace=True` makes the REFERENCE runner additionally
     emit per-slot delivery traces (the per-packet latency oracle —
-    test-scale only, exclusive with `schedule`)."""
+    test-scale only, exclusive with `schedule`).  `links` (a `LinkSpec`)
+    adds heterogeneous-link semantics: per-port slot weights (a weight-w
+    channel is held for w slots), a pillar structural mask AND-ed into
+    the link_ok masks, and express overlay ports extending P past 2n; a
+    trivial/None spec compiles the identical pre-heterogeneous program."""
     scenario = scenario or Scenario()
     if lat_trace and schedule is not None:
         raise ValueError("lat_trace is exclusive with schedule=")
     if hist_bins < 0:
         raise ValueError(f"hist_bins must be >= 0, got {hist_bins}")
     if vcs > 1:
-        # SimConfig raises these with friendlier wording; the internal
-        # guards keep direct _make_ctx callers honest too
+        # SimConfig raises this with friendlier wording; the internal
+        # guard keeps direct _make_ctx callers honest too
         if schedule is not None:
             raise ValueError("FaultSchedule timelines are V=1-only")
-        if lat_trace:
-            raise ValueError("lat_trace is V=1-only")
+    ls = links if links is not None and not links.is_trivial else None
+    if ls is not None:
+        ls.validate(t.n)
+        if ls.express:
+            # SimConfig mirrors these; direct callers hit them here
+            if vcs > 1:
+                raise ValueError("express overlays are vcs=1-only")
+            if (schedule is not None or not scenario.is_trivial
+                    or force_masks or force_dead_nodes):
+                raise ValueError(
+                    "express overlays require a pristine fabric (no "
+                    "Scenario faults, no FaultSchedule, no forced masks)")
+        # a pillar spec removes links: even a pristine Scenario must ride
+        # the mask-threaded program so the structural mask is enforced
+        force_masks = force_masks or ls.has_pillar
     policy = schedule.policy if schedule is not None else scenario.policy
     trivial = (schedule is None and scenario.is_trivial
                and not force_masks)
@@ -1616,7 +1805,18 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     nz = np.abs(rec_ab) > 0
     dim = np.argmax(nz, axis=-1)
     sgn = np.take_along_axis(rec_ab, dim[..., None], axis=-1)[..., 0]
-    port_ab = 2 * dim + (sgn < 0)                          # (N, 2)
+    if ls is not None and ls.express:
+        # greedy weighted-DOR first hop over the extended port set: among
+        # ports of the record's first nonzero dimension whose sign matches
+        # and whose span fits the remaining offset, take the largest span
+        pdim_np = ls.port_dims(t.n)
+        psgn_np = ls.port_signs(t.n)
+        pspan_np = ls.port_spans(t.n)
+        ok = ((pdim_np == dim[..., None]) & (psgn_np * sgn[..., None] > 0)
+              & (pspan_np <= np.abs(sgn)[..., None]))
+        port_ab = np.argmax(np.where(ok, pspan_np, -1), axis=-1)  # (N, 2)
+    else:
+        port_ab = 2 * dim + (sgn < 0)                      # (N, 2)
     if fixed_dst:
         g_strides = t.strides.astype(np.int64)
         lab = t.labels.astype(np.int64)
@@ -1652,11 +1852,38 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
             scen.update(_scenario_mask_fields(
                 scenario, g, t.N, dst_np if fixed_dst else None,
                 force_dead_nodes))
+    # heterogeneous-link context: per-port weights, pillar structural
+    # mask (AND-ed into every link_ok, so the dead-channel audit covers
+    # missing pillars), express-extended neighbour/port-geometry tables
+    if ls is not None:
+        nbr_np = ls.extended_neighbors(g)
+        wgt_np = ls.port_weights(t.n)
+        structural_np = ls.structural_mask(g)
+        if structural_np is not None:
+            scen["link_ok"] = scen["link_ok"] & jnp.asarray(structural_np)
+        link = dict(
+            link_fp=ls.fingerprint(),
+            weighted=bool((wgt_np > 1).any()),
+            express=bool(ls.express),
+            wgt=jnp.asarray(wgt_np),
+            structural=(None if structural_np is None
+                        else jnp.asarray(structural_np)),
+            pdim=jnp.asarray(ls.port_dims(t.n)),
+            psgn=jnp.asarray(ls.port_signs(t.n)),
+            pspan=jnp.asarray(ls.port_spans(t.n)),
+            hop_tab=jnp.asarray(ls.hop_table(t.n)))
+        P = ls.num_ports(t.n)
+    else:
+        nbr_np = t.neighbors
+        link = dict(link_fp=None, weighted=False, express=False,
+                    structural=None)
+        P = 2 * t.n
     return dict(
-        n=t.n, N=t.N, P=2 * t.n, Q=queue, rec_dtype=rec_dtype,
+        n=t.n, N=t.N, P=P, Q=queue, rec_dtype=rec_dtype,
         V=int(vcs), credit_init=int(queue if credits is None else credits),
-        hist_bins=int(hist_bins), lat_trace=bool(lat_trace), **scen,
-        nbr=jnp.asarray(t.neighbors),
+        hist_bins=int(hist_bins), lat_trace=bool(lat_trace),
+        **scen, **link,
+        nbr=jnp.asarray(nbr_np),
         rec_a=jnp.asarray(t.records_a),
         rec_b=jnp.asarray(t.records_b),
         rec_ab=jnp.asarray(rec_ab.astype(np.int64), rec_dtype),
@@ -1695,6 +1922,13 @@ def _init_state(ctx, load: float, impl: str, slots: int = 1 << 14):
                                    jnp.int32)
         state["vc_delivered"] = jnp.zeros((V,), jnp.int32)
         state["vc_injected"] = jnp.zeros((V,), jnp.int32)
+    if ctx.get("weighted"):
+        # heterogeneous links: `busy` counts down the remaining slots a
+        # weight-w channel stays held after a crossing; `wait` counts
+        # down the slots before an in-queue packet becomes eligible (it
+        # occupies buffer space — and in_flight — the whole time)
+        state["busy"] = jnp.zeros((N, P), dtype=jnp.int32)
+        state["wait"] = jnp.zeros(qshape, dtype=jnp.int32)
     if ctx["hist_bins"]:
         state["lat_hist"] = jnp.zeros((ctx["hist_bins"],), jnp.int32)
     if not ctx["trivial"]:
@@ -1766,9 +2000,15 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
         raise ValueError(
             "impl='fused' (the Pallas slot-step kernel) is V=1-only; run "
             "vcs>1 with impl='batched' or 'reference'")
+    if impl == "fused" and ctx.get("link_fp") is not None:
+        raise ValueError(
+            "impl='fused' (the Pallas slot-step kernel) is weight-1/"
+            "no-overlay-only; run heterogeneous LinkSpecs with "
+            "impl='batched' or 'reference'")
     key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
            ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key,
-           ctx["hist_bins"], tracing, V, ctx.get("credit_init"))
+           ctx["hist_bins"], tracing, V, ctx.get("credit_init"),
+           ctx.get("link_fp"))
     if key not in _RUNNER_CACHE:
         if impl == "reference":
             step = (_make_slot_step_vc_reference(ctx, warmup) if V > 1
@@ -1976,7 +2216,7 @@ def _seed_list(seed: int, seeds) -> list[int] | None:
 def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
                 queue, seed, seed_list, tables, impl, scenario,
                 scenarios=None, schedules=None, hist_bins=0, vcs=1,
-                credits=None):
+                credits=None, links=None):
     """Build (runner, broadcast initial state, (L[, S]) key grid) for one
     sweep device program.  Key derivation: run (ℓ, s) of a multi-load
     sweep uses `fold_in(PRNGKey(seeds[s] + 17), ℓ)` — every load point
@@ -2001,7 +2241,8 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
         fdn = any(c.has_dead_nodes for c in schedules)
         ctx = _make_ctx(t, g, pattern, seed, queue, schedule=schedules[0],
                         pad_epochs=E, force_dead_nodes=fdn,
-                        hist_bins=hist_bins, vcs=vcs, credits=credits)
+                        hist_bins=hist_bins, vcs=vcs, credits=credits,
+                        links=links)
         dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
                   else None)
         sched_keys = ["link_ok", "inj_ok", "dst_live_fixed", "slot2epoch"]
@@ -2012,19 +2253,27 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
             for c in schedules[1:]]
     elif scenarios is None:
         ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
-                        hist_bins=hist_bins, vcs=vcs, credits=credits)
+                        hist_bins=hist_bins, vcs=vcs, credits=credits,
+                        links=links)
         masks = None
     else:
         fdn = any(s.dead_nodes for s in scenarios)
         ctx = _make_ctx(t, g, pattern, seed, queue, scenarios[0],
                         force_masks=True, force_dead_nodes=fdn,
-                        hist_bins=hist_bins, vcs=vcs, credits=credits)
+                        hist_bins=hist_bins, vcs=vcs, credits=credits,
+                        links=links)
         dst_np = (np.asarray(ctx["dst_table"]) if ctx["fixed_dst"]
                   else None)
         masks = [{k: ctx[k] for k in ("link_ok", "inj_ok", "live_tbl",
                                       "n_live", "dst_live_fixed")}] + [
             _scenario_mask_fields(s, g, t.N, dst_np, fdn)
             for s in scenarios[1:]]
+    if masks is not None and ctx.get("structural") is not None:
+        # pillar structural mask: ctx lane 0 already has it AND-ed in
+        # (_make_ctx); compose it into every other sweep lane's link_ok
+        # (broadcasts over the (E, ...) epoch axis of schedule stacks)
+        for m in masks[1:]:
+            m["link_ok"] = m["link_ok"] & ctx["structural"]
     sl = seed_list if seed_list is not None else [seed]
     L, S = len(loads), len(sl)
     runner = _get_runner(t, ctx, slots=slots, warmup=warmup, impl=impl,
@@ -2077,7 +2326,8 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
              scenario: Scenario | None = None, fold: int | None = None,
              schedule: FaultSchedule | None = None,
              hist_bins: int | None = None, vcs: int | None = None,
-             credits: int | None = None) -> SimResult:
+             credits: int | None = None,
+             links: LinkSpec | None = None) -> SimResult:
     """Run `slots` packet-slots (16 cycles each) at offered load `load`
     (phits/cycle/node) and measure accepted throughput + latency.
 
@@ -2115,21 +2365,27 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     see docs/simulator.md).  `credits` caps the per-lane window (None =
     full queue depth).  vcs=1 (default) compiles the EXACT pre-VC
     program; vcs>1 requires impl in (batched | reference) and a static
-    scenario (no schedule=)."""
+    scenario (no schedule=).
+
+    `links` (a `repro.core.LinkSpec`) turns on heterogeneous-link
+    semantics — per-dimension slot weights, pillar Z-masks, express
+    overlay channels (docs/simulator.md "Heterogeneous links"); a
+    trivial/None spec compiles the identical pre-heterogeneous
+    program."""
     cfg = SimConfig.from_kwargs(
         config, slots=slots, warmup=warmup, queue=queue, seed=seed,
         tables=tables, impl=impl, scenario=scenario, schedule=schedule,
-        hist_bins=hist_bins, vcs=vcs, credits=credits)
+        hist_bins=hist_bins, vcs=vcs, credits=credits, links=links)
     t = cfg.tables or build_tables(g, cfg.seed)
     if cfg.schedule is not None:
         ctx = _make_ctx(t, g, pattern, cfg.seed, cfg.queue,
                         schedule=ensure_compiled(cfg.schedule, g,
                                                  cfg.slots),
-                        hist_bins=cfg.hist_bins)
+                        hist_bins=cfg.hist_bins, links=cfg.links)
     else:
         ctx = _make_ctx(t, g, pattern, cfg.seed, cfg.queue, cfg.scenario,
                         hist_bins=cfg.hist_bins, vcs=cfg.vcs,
-                        credits=cfg.credits)
+                        credits=cfg.credits, links=cfg.links)
     runner = _get_runner(t, ctx, slots=cfg.slots, warmup=cfg.warmup,
                          impl=cfg.impl, n_loads=1)
     key = jax.random.PRNGKey(cfg.seed + 17)
@@ -2148,7 +2404,8 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
                    scenario: Scenario | None = None,
                    schedule: FaultSchedule | None = None,
                    hist_bins: int | None = None, vcs: int | None = None,
-                   credits: int | None = None):
+                   credits: int | None = None,
+                   links: LinkSpec | None = None):
     """An entire offered-load curve (Figs. 5–8) as ONE device program: the
     per-slot update is vmapped over the load axis and — when `seeds` is
     given — over a nested seed axis, so the whole sweep JITs once and runs
@@ -2167,7 +2424,7 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
     cfg = SimConfig.from_kwargs(
         config, slots=slots, warmup=warmup, queue=queue, seed=seed,
         tables=tables, impl=impl, scenario=scenario, schedule=schedule,
-        hist_bins=hist_bins, vcs=vcs, credits=credits)
+        hist_bins=hist_bins, vcs=vcs, credits=credits, links=links)
     loads = [float(l) for l in np.asarray(loads).ravel()]
     sl = _seed_list(cfg.seed, seeds)
     if sl is None and len(loads) == 1:
@@ -2178,7 +2435,8 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
         impl=cfg.impl, scenario=cfg.scenario,
         schedules=(None if cfg.schedule is None
                    else [ensure_compiled(cfg.schedule, g, cfg.slots)]),
-        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits)
+        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits,
+        links=cfg.links)
     out = runner(state, keys)
     L, S = len(loads), len(sl or [cfg.seed])
     res = _result_grid(out, (L, S), cfg.impl, slots=cfg.slots,
@@ -2200,7 +2458,8 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
                             impl: str | None = None,
                             hist_bins: int | None = None,
                             vcs: int | None = None,
-                            credits: int | None = None):
+                            credits: int | None = None,
+                            links: LinkSpec | None = None):
     """K fault patterns × (loads × seeds) as ONE device program: the
     scenario masks are traced state inputs, so the compiled slot update is
     vmapped over an outermost scenario axis — K patterns cost one trace
@@ -2225,11 +2484,16 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
     cfg = SimConfig.from_kwargs(
         config, slots=slots, warmup=warmup, queue=queue, seed=seed,
         tables=tables, impl=impl, hist_bins=hist_bins, vcs=vcs,
-        credits=credits)
+        credits=credits, links=links)
     if cfg.scenario is not None or cfg.schedule is not None:
         raise ValueError(
             "simulate_scenario_sweep takes its fault patterns from the "
             "`scenarios` list; leave config.scenario/config.schedule unset")
+    if cfg.links is not None and cfg.links.express:
+        raise ValueError(
+            "express overlays require a pristine fabric; "
+            "simulate_scenario_sweep rides the traced-mask program — "
+            "drop links.express or use simulate/simulate_sweep")
     scenarios = [s if s is not None else Scenario() for s in scenarios]
     if not scenarios:
         raise ValueError("simulate_scenario_sweep needs >= 1 scenario")
@@ -2258,7 +2522,8 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
         g, pattern, loads, slots=cfg.slots, warmup=cfg.warmup,
         queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
         impl=cfg.impl, scenario=None, scenarios=scenarios,
-        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits)
+        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits,
+        links=cfg.links)
     out = runner(state, keys)
     K, L, S = len(scenarios), len(loads), len(sl or [cfg.seed])
     res = _result_grid(out, (K, L, S), cfg.impl, slots=cfg.slots,
@@ -2283,7 +2548,8 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
                             seed: int | None = None, seeds=None,
                             tables: SimTables | None = None,
                             impl: str | None = None,
-                            hist_bins: int | None = None):
+                            hist_bins: int | None = None,
+                            links: LinkSpec | None = None):
     """K transient-fault TIMELINES × (loads × seeds) as ONE device
     program — `simulate_scenario_sweep` generalized along the time axis.
     Each schedule compiles to per-epoch mask stacks + a slot→epoch map;
@@ -2308,11 +2574,16 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
     `SimResult` carries its per-slot `SimTimeline`."""
     cfg = SimConfig.from_kwargs(
         config, slots=slots, warmup=warmup, queue=queue, seed=seed,
-        tables=tables, impl=impl, hist_bins=hist_bins)
+        tables=tables, impl=impl, hist_bins=hist_bins, links=links)
     if cfg.scenario is not None or cfg.schedule is not None:
         raise ValueError(
             "simulate_schedule_sweep takes its timelines from the "
             "`schedules` list; leave config.scenario/config.schedule unset")
+    if cfg.links is not None and cfg.links.express:
+        raise ValueError(
+            "express-channel overlays require a pristine fabric (no "
+            "FaultSchedule timelines) — drop links.express or use "
+            "simulate/simulate_sweep")
     if cfg.vcs > 1:
         raise ValueError(
             "transient FaultSchedule timelines are V=1-only for now; run "
@@ -2342,7 +2613,7 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
         g, pattern, loads, slots=cfg.slots, warmup=cfg.warmup,
         queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
         impl=cfg.impl, scenario=None, schedules=compiled,
-        hist_bins=cfg.hist_bins)
+        hist_bins=cfg.hist_bins, links=cfg.links)
     out = runner(state, keys)
     K, L, S = len(compiled), len(loads), len(sl or [cfg.seed])
     res = _result_grid(out, (K, L, S), cfg.impl, slots=cfg.slots,
@@ -2387,7 +2658,9 @@ def reference_latency_samples(g: LatticeGraph, pattern: str, load: float,
                               queue: int = 4, seed: int = 0,
                               tables: SimTables | None = None,
                               scenario: Scenario | None = None,
-                              hist_bins: int = 0):
+                              hist_bins: int = 0, vcs: int = 1,
+                              credits: int | None = None,
+                              links: LinkSpec | None = None):
     """The per-packet latency ORACLE: one reference-impl run that, on top
     of the usual counters (and histogram, when `hist_bins` is given),
     records every delivery's exact age in slots.  Returns
@@ -2407,7 +2680,8 @@ def reference_latency_samples(g: LatticeGraph, pattern: str, load: float,
     """
     t = tables or build_tables(g, seed)
     ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
-                    hist_bins=hist_bins, lat_trace=True)
+                    hist_bins=hist_bins, lat_trace=True, vcs=vcs,
+                    credits=credits, links=links)
     runner = _get_runner(t, ctx, slots=slots, warmup=warmup,
                          impl="reference", n_loads=1)
     out = dict(runner(_init_state(ctx, load, "reference", slots),
@@ -2416,10 +2690,14 @@ def reference_latency_samples(g: LatticeGraph, pattern: str, load: float,
     res = _result(out, slots=slots, warmup=warmup, N=t.N)
     age = np.asarray(tr["age"])                        # (slots, N, P)
     deliv = np.asarray(tr["deliv"]).astype(bool)
+    # `meas` is the counted flag from the slot step itself (birth >= warmup
+    # at delivery).  It can't be reconstructed host-side as slot+1−age:
+    # weighted links fold their +w−1 crossing cost into the age, which
+    # would shift reconstructed births across the warmup boundary.
+    meas = np.asarray(tr["meas"]).astype(bool)
     slot_idx = np.arange(slots)[:, None, None]
-    birth = slot_idx + 1 - age
     samples = dict(
-        measured=np.sort(age[deliv & (birth >= warmup)]),
+        measured=np.sort(age[meas]),
         window=np.sort(age[deliv & (slot_idx >= warmup)]))
     return res, samples
 

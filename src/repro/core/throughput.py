@@ -282,3 +282,69 @@ def fault_aware_schedule_saturation(g: LatticeGraph, schedule,
     nodes die/return."""
     loads = fault_aware_schedule_load(g, schedule, slots, pairs, seed)
     return 1.0 / loads.reshape(loads.shape[0], -1).max(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-link (LinkSpec) loads: weighted tables over extended ports
+# ---------------------------------------------------------------------------
+
+def weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
+                          seed: int = 0, scenario=None) -> np.ndarray:
+    """Monte-Carlo channel loads on a HETEROGENEOUS fabric: `pairs`
+    uniform pairs walked along weighted-shortest-path next-hop tables
+    over the extended (base + express) port axis — express channels
+    attract the traffic whose weighted cost they lower, pillar masks
+    divert Z-traffic through the pillar columns.  Returns (N, P) with
+    P = 2n + 2·X (the base (N, 2n) block keeps the `channel_load`
+    convention; express columns follow).  Scaled to one packet per live
+    node.  An optional fault `scenario` composes — its masks restrict
+    the base columns exactly as in `fault_aware_channel_load`."""
+    from .routing import fault_aware_next_hop_device
+    if scenario is not None:
+        link_ok = scenario.link_ok(g)
+        node_ok = np.asarray(scenario.node_ok(g), dtype=bool)
+    else:
+        link_ok = np.ones((g.order, 2 * g.n), dtype=bool)
+        node_ok = np.ones(g.order, dtype=bool)
+    dist, next_hop = fault_aware_next_hop_device(
+        g, link_ok, node_ok, link_spec=link_spec)
+    if link_spec is not None and not link_spec.is_trivial:
+        P = link_spec.num_ports(g.n)
+        nbr = link_spec.extended_neighbors(g)
+    else:
+        P = 2 * g.n
+        nbr = g.neighbor_indices
+    live = np.flatnonzero(node_ok)
+    if live.size < 2:
+        raise ValueError("scenario leaves fewer than 2 live nodes")
+    rng = np.random.default_rng(seed)
+    srcs = live[rng.integers(0, live.size, pairs)]
+    dsts = live[rng.integers(0, live.size, pairs)]
+    use = dist[srcs, dsts] > 0                   # reachable, not self
+    pos, dst = srcs[use].copy(), dsts[use]
+    n_used = pos.size
+    load = np.zeros((g.order, P), dtype=np.float64)
+    while pos.size:
+        p = next_hop[pos, dst]
+        assert (p >= 0).all(), "weighted walk hit an unreachable pair"
+        np.add.at(load, (pos, p), 1.0)
+        pos = nbr[pos, p]
+        alive = pos != dst
+        pos, dst = pos[alive], dst[alive]
+    return load * (live.size / max(n_used, 1))
+
+
+def weighted_saturation_throughput(g: LatticeGraph, link_spec,
+                                   pairs: int = 20_000,
+                                   seed: int = 0) -> float:
+    """Saturation bound of the heterogeneous fabric (phits/cycle/node):
+    ``1 / max_c(load_c · w_c)`` — a weight-w channel serves one packet
+    every w slots, so its effective service demand is its Monte-Carlo
+    load times its slot cost.  With a trivial spec this is exactly the
+    unweighted 1/max-link-load bound."""
+    load = weighted_channel_load(g, link_spec, pairs, seed)
+    if link_spec is not None and not link_spec.is_trivial:
+        w = link_spec.port_weights(g.n).astype(np.float64)
+    else:
+        w = np.ones(2 * g.n)
+    return float(1.0 / (load * w[None, :]).max())

@@ -96,6 +96,10 @@ class PodTopologyReport:
     # peak ACCEPTED load from the slot-level simulator (queue contention,
     # bubble rule, VC credit flow) — None unless a SimConfig was given
     simulated_capacity: float | None = None
+    # heterogeneous-fabric capacity: 1/max(load·weight) over the extended
+    # (base + express) port axis under a LinkSpec — express overlays RAISE
+    # it, slow Z-weights lower it.  None when no link_spec given.
+    hetero_capacity: float | None = None
 
 
 def analyze_pod(name: str, g: LatticeGraph,
@@ -105,7 +109,8 @@ def analyze_pod(name: str, g: LatticeGraph,
                 routed_backend: str = "auto",
                 scenario=None,
                 sim_config=None,
-                sim_loads=(0.2, 0.4, 0.6, 0.8)) -> PodTopologyReport:
+                sim_loads=(0.2, 0.4, 0.6, 0.8),
+                link_spec=None) -> PodTopologyReport:
     """Price a pod topology.  With `measure_routed=True` the analytic
     capacity bound is accompanied by an empirical saturation throughput:
     `routed_pairs` uniform pairs routed through the batched engine and
@@ -118,7 +123,12 @@ def analyze_pod(name: str, g: LatticeGraph,
     `repro.core.SimConfig` in `sim_config` the report additionally carries
     the slot-level simulator's peak accepted load over `sim_loads` — the
     dynamic saturation point under queue contention (and, for
-    ``sim_config.vcs > 1``, the VC credit-flow router)."""
+    ``sim_config.vcs > 1``, the VC credit-flow router).  With a
+    `repro.core.LinkSpec` in `link_spec` the report carries the
+    heterogeneous capacity — uniform traffic walked over weighted
+    shortest-path tables across the extended port axis, reduced to
+    ``1/max(load·weight)`` — pricing express-augmented or slow-Z pods
+    against their uniform peers."""
     sym = torus_sides is None
     test_bytes = 256 * 2**20
     cap = (symmetric_throughput_bound(g) if sym
@@ -133,6 +143,11 @@ def analyze_pod(name: str, g: LatticeGraph,
         from repro.core.throughput import simulated_saturation_load
         simulated = simulated_saturation_load(g, sim_loads,
                                               config=sim_config)
+    hetero = None
+    if link_spec is not None and not link_spec.is_trivial:
+        from repro.core.throughput import weighted_saturation_throughput
+        hetero = weighted_saturation_throughput(g, link_spec,
+                                                pairs=routed_pairs)
     return PodTopologyReport(
         name=name,
         chips=g.order,
@@ -147,7 +162,8 @@ def analyze_pod(name: str, g: LatticeGraph,
             g, routed_pairs, backend=routed_backend)
             if measure_routed else None),
         faulted_capacity=faulted,
-        simulated_capacity=simulated)
+        simulated_capacity=simulated,
+        hetero_capacity=hetero)
 
 
 def bisection_links(g: LatticeGraph) -> int:

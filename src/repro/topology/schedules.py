@@ -41,17 +41,64 @@ class RingSchedule:
     node_order: np.ndarray          # (k,) lattice node indices, ring order
     edge_paths: list[list[tuple[int, int]]]   # per logical edge: [(node, port)]
     dilation: float                 # mean physical hops per logical edge
+    # heterogeneous fabrics (ring_schedule(link_spec=...)): per logical
+    # edge, the weighted slot cost of its path; and the (P,) per-port slot
+    # costs so contention accounting can price weight-w links at 1/w
+    # bandwidth.  None on the uniform weight-1 fabric (the historical
+    # schedule, unchanged).
+    edge_costs: np.ndarray | None = None
+    port_weights: np.ndarray | None = None
 
 
-def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray) -> RingSchedule:
+def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray,
+                  link_spec=None) -> RingSchedule:
     """ring_labels: (k, n) lattice labels of the chips of one logical axis,
     in ring order.  Paths follow DOR over minimal routing records (all k
-    logical edges routed in one batched engine call)."""
-    router = make_router(g.matrix)
+    logical edges routed in one batched engine call).
+
+    `link_spec=` (a non-trivial `repro.core.LinkSpec`) lifts the standing
+    pristine-uniform-ring constraint: each logical edge is instead routed
+    along WEIGHTED shortest paths over the extended (base + express) port
+    axis — express channels shorten edges whose offset they span, pillar
+    masks force Z-traffic through pillar columns, and per-dimension
+    weights steer paths onto cheap dimensions.  The returned schedule
+    then carries `edge_costs` (weighted slots per logical edge) and
+    `port_weights`, which `verify_contention_free` /
+    `effective_ring_bandwidth` fold into their contention accounting."""
+    ls = (link_spec if link_spec is not None
+          and not link_spec.is_trivial else None)
     k = ring_labels.shape[0]
     order = g.label_to_index(ring_labels)
+    if ls is not None:
+        from repro.core.routing import fault_aware_next_hop_device
+        link_ok = np.ones((g.order, 2 * g.n), dtype=bool)
+        dist, nh = fault_aware_next_hop_device(g, link_ok, link_spec=ls)
+        nbr = ls.extended_neighbors(g)
+        dsts = np.roll(np.asarray(order), -1)
+        paths = []
+        costs = []
+        for t in range(k):
+            u, d = int(order[t]), int(dsts[t])
+            if u != d and dist[u, d] < 0:
+                raise ValueError(
+                    f"ring edge {u} -> {d} is unreachable under this "
+                    "LinkSpec (pillar mask cut the fabric)")
+            path = []
+            pos = u
+            while pos != d:
+                p = int(nh[pos, d])
+                path.append((pos, p))
+                pos = int(nbr[pos, p])
+            paths.append(path)
+            costs.append(int(dist[u, d]) if u != d else 0)
+        hops = [len(p) for p in paths]
+        return RingSchedule(node_order=order, edge_paths=paths,
+                            dilation=float(np.mean(hops)),
+                            edge_costs=np.asarray(costs, dtype=np.int64),
+                            port_weights=ls.port_weights(g.n))
+    router = make_router(g.matrix)
     recs = np.asarray(router(np.roll(ring_labels, -1, axis=0) - ring_labels))
-    paths: list[list[tuple[int, int]]] = []
+    paths = []
     for t in range(k):
         src = ring_labels[t]
         rec = recs[t]
@@ -67,26 +114,39 @@ def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray) -> RingSchedule:
         paths.append(path)
     hops = [len(p) for p in paths]
     return RingSchedule(node_order=order, edge_paths=paths,
-                        dilation=float(np.mean(hops)))
+                        dilation=float(np.mean(hops)),
+                        edge_costs=np.asarray(hops, dtype=np.int64))
 
 
 def verify_contention_free(sched: RingSchedule) -> dict:
     """In a ring collective step every logical edge is active simultaneously;
     full bandwidth requires each directional physical link to appear in at
-    most one logical edge's path."""
+    most one logical edge's path.  On a weighted schedule the serialization
+    unit is SERVICE slots, not crossings: a weight-w link needs w slots per
+    packet, so `max_link_service` = max over links of use·w (equal to
+    `max_link_use` on uniform fabrics)."""
     use: dict[tuple[int, int], int] = {}
     for path in sched.edge_paths:
         for link in path:
             use[link] = use.get(link, 0) + 1
     max_use = max(use.values()) if use else 0
+    if sched.port_weights is not None:
+        w = np.asarray(sched.port_weights)
+        max_service = max((c * int(w[p]) for (_, p), c in use.items()),
+                          default=0)
+    else:
+        max_service = max_use
     return {"contention_free": max_use <= 1, "max_link_use": max_use,
+            "max_link_service": max_service,
             "links_used": len(use), "dilation": sched.dilation}
 
 
 def effective_ring_bandwidth(sched: RingSchedule, link_bw: float = 50e9) -> float:
-    """Per-step ring bandwidth after contention: the busiest link serializes."""
+    """Per-step ring bandwidth after contention: the busiest link serializes
+    (weight-aware — a weight-w link delivers link_bw/w, so the serialization
+    denominator is the max per-link SERVICE load use·w)."""
     stats = verify_contention_free(sched)
-    return link_bw / max(stats["max_link_use"], 1)
+    return link_bw / max(stats["max_link_service"], 1)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,86 @@
+"""Property tests for heterogeneous links (ISSUE 8, satellite 3).
+
+Runs under the offline `tests/_propcheck.py` shim (only `integers`,
+`sampled_from`, `@given`, `@settings` from the shimmed subset), so the
+properties hold in the hypothesis-free CI image too.
+
+The three properties:
+
+  * ``delivered + in_flight + dropped == injected`` at EVERY slot
+    (warmup=0) under random mixed-weight links composed with a random
+    `FaultSchedule` link flap — the weighted multi-slot channel hold
+    must never mint or lose a packet, even while links die and revive;
+  * a pillar mask means ZERO crossings of the masked channels, whatever
+    the routing policy — structural holes are dead links to the audit;
+  * no delivery is faster than physics: the minimum occupied latency
+    bucket is at least the weighted routed distance + 1 injection slot.
+
+Weight/flap values are drawn from small grids so the property run
+compiles a handful of programs, not one per example.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FaultSchedule, LinkSpec, Scenario, SimConfig, Torus,
+                        weighted_distance_matrix)
+from repro.core.simulation import build_tables, simulate
+
+G = Torus(4, 4)
+TABLES = build_tables(G)
+G3 = Torus(4, 4, 4)
+TABLES3 = build_tables(G3)
+
+
+@settings(max_examples=10)
+@given(w0=st.sampled_from([1, 2, 3]), w1=st.sampled_from([1, 2, 3]),
+       down=st.sampled_from([8, 16, 24]), up=st.sampled_from([40, 56]),
+       policy=st.sampled_from(["dor", "adaptive"]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_conservation_every_slot_weights_times_schedule(w0, w1, down, up,
+                                                        policy, seed):
+    sched = FaultSchedule.link_flap((1, 0), down_at=down, up_at=up,
+                                    policy=policy)
+    r = simulate(G, "uniform", 0.6,
+                 config=SimConfig(slots=72, warmup=0, seed=seed,
+                                  links=LinkSpec(dim_weights=(w0, w1)),
+                                  schedule=sched, tables=TABLES))
+    tl = r.timeline
+    assert tl is not None
+    assert tl.conservation_ok(), (w0, w1, down, up, policy,
+                                  tl.conservation_violations())
+    assert tl.dead_crossings.sum() == 0
+    assert tl.delivered[-1] == r.delivered
+    assert tl.injected[-1] == r.injected
+
+
+@settings(max_examples=8)
+@given(every=st.sampled_from([2, 4]),
+       policy=st.sampled_from(["dor", "adaptive"]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_pillar_channels_never_crossed(every, policy, seed):
+    ls = LinkSpec(pillar_dim=2, pillar_every=every)
+    r = simulate(G3, "uniform", 0.4,
+                 config=SimConfig(slots=64, warmup=0, seed=seed, links=ls,
+                                  scenario=Scenario(policy=policy),
+                                  tables=TABLES3))
+    assert r.delivered + r.in_flight + r.dropped == r.injected
+    mask = ls.structural_mask(G3)
+    assert r.link_use is not None
+    assert int(r.link_use[~mask].sum()) == 0, (every, policy, seed)
+
+
+@settings(max_examples=8)
+@given(w0=st.sampled_from([1, 2]), w1=st.sampled_from([2, 3]),
+       seed=st.integers(min_value=0, max_value=3),
+       impl=st.sampled_from(["batched", "reference"]))
+def test_min_latency_bucket_respects_weighted_distance(w0, w1, seed, impl):
+    ls = LinkSpec(dim_weights=(w0, w1))
+    r = simulate(G, "uniform", 0.3,
+                 config=SimConfig(slots=96, warmup=16, seed=seed, impl=impl,
+                                  links=ls, hist_bins=98, tables=TABLES))
+    hist = np.asarray(r.latency_hist)
+    assert hist.sum() > 0
+    d = weighted_distance_matrix(G, ls)
+    min_age = int(np.nonzero(hist)[0][0])
+    assert min_age >= int(d[d > 0].min()) + 1, (w0, w1, seed, impl, min_age)

@@ -1,0 +1,105 @@
+"""Per-packet latency oracle for the VC credit-flow router (ISSUE 8,
+satellite 1 — the ROADMAP-flagged VC telemetry gap).
+
+PR 6's `reference_latency_samples` oracle recorded every delivery's exact
+age, but only for the V=1 single-FIFO router: `_make_ctx` rejected
+`lat_trace` at `vcs >= 2`, so the VC router's histogram percentiles were
+validated only against themselves.  This module closes the gap: the
+vc_reference slot step now emits the same (slots, N, P) age/deliv trace
+(one channel per port per slot — V lanes share the link, so at most one
+delivery per (node, port) per slot, exactly the V=1 trace shape), and the
+nearest-rank percentile accessors are validated CYCLE-EXACTLY against the
+per-packet ages on the acceptance cells T(4,4,4,4) + RTT/FCC/BCC.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BCC, FCC, RTT, LinkSpec, SimConfig, Torus
+from repro.core.simulation import (PACKET_PHITS, reference_latency_samples,
+                                   simulate)
+
+_CELLS = {
+    "T4444": Torus(4, 4, 4, 4),     # the acceptance 4-ary 4-cube
+    "RTT4": RTT(4),
+    "FCC2": FCC(2),
+    "BCC2": BCC(2),
+}
+SLOTS, WARMUP = 96, 24
+
+
+@pytest.mark.parametrize("cell", sorted(_CELLS))
+def test_vc_percentiles_cycle_exact_vs_oracle(cell):
+    """vcs=2 run: nearest-rank percentiles read off the bucketed histogram
+    equal the oracle's per-packet ages EXACTLY (hist_bins exceeds any
+    possible age, so no overflow truncation)."""
+    g = _CELLS[cell]
+    r, s = reference_latency_samples(g, "uniform", 0.3, slots=SLOTS,
+                                     warmup=WARMUP, seed=0, vcs=2,
+                                     hist_bins=SLOTS + 2)
+    m = s["measured"]
+    assert m.size == r.lat_count == int(r.latency_hist.sum())
+    assert m.size > 0
+    # the histogram is the exact bincount of the per-packet ages
+    assert np.array_equal(
+        np.asarray(r.latency_hist),
+        np.bincount(m, minlength=SLOTS + 2))
+    for q in (0.5, 0.99, 0.999):
+        rank = min(m.size, max(1, int(np.ceil(q * m.size))))
+        assert r.latency_percentile(q) == PACKET_PHITS * int(m[rank - 1]), \
+            (cell, q)
+    assert r.latency_p50 <= r.latency_p99 <= r.latency_p999
+    assert np.isclose(r.avg_latency_cycles, PACKET_PHITS * m.mean())
+
+
+def test_vc_oracle_describes_the_simulate_run():
+    """The oracle uses `simulate(..., impl="reference", vcs=2)`'s exact
+    key derivation: the standalone run's histogram and counters must
+    match the oracle's bit for bit."""
+    g = _CELLS["FCC2"]
+    r, s = reference_latency_samples(g, "uniform", 0.35, slots=SLOTS,
+                                     warmup=WARMUP, seed=0, vcs=2,
+                                     hist_bins=32)
+    r2 = simulate(g, "uniform", 0.35,
+                  config=SimConfig(slots=SLOTS, warmup=WARMUP, seed=0,
+                                   impl="reference", vcs=2, hist_bins=32))
+    assert np.array_equal(np.asarray(r.latency_hist),
+                          np.asarray(r2.latency_hist))
+    assert (r.delivered, r.injected, r.lat_count) == \
+        (r2.delivered, r2.injected, r2.lat_count)
+
+
+def test_vc_oracle_credits_axis_threads_through():
+    """A tighter credit window changes the run (credits gate the adaptive
+    lanes' selection — under plain DOR they never bite) — the oracle
+    accepts the credits axis and stays self-consistent on both runs."""
+    from repro.core import Scenario
+    g = _CELLS["BCC2"]
+    adaptive = Scenario(policy="adaptive")
+    r_full, s_full = reference_latency_samples(
+        g, "uniform", 0.6, slots=SLOTS, warmup=0, seed=2, vcs=2,
+        queue=6, scenario=adaptive, hist_bins=SLOTS + 2)
+    r_tight, s_tight = reference_latency_samples(
+        g, "uniform", 0.6, slots=SLOTS, warmup=0, seed=2, vcs=2,
+        queue=6, credits=2, scenario=adaptive, hist_bins=SLOTS + 2)
+    assert s_full["measured"].size == r_full.lat_count
+    assert s_tight["measured"].size == r_tight.lat_count
+    # both self-consistent; the runs themselves differ (the window bites)
+    assert (r_full.delivered, r_full.lat_count) != \
+        (r_tight.delivered, r_tight.lat_count)
+
+
+def test_vc_oracle_composes_with_weighted_links():
+    """vcs=2 × weighted LinkSpec: the oracle still reproduces the
+    histogram exactly, and no measured age beats the weighted minimum
+    (cheapest weighted pair cost + 1 injection slot)."""
+    from repro.core import weighted_distance_matrix
+    g = Torus(4, 4)
+    ls = LinkSpec(dim_weights=(1, 3))
+    r, s = reference_latency_samples(g, "uniform", 0.25, slots=SLOTS,
+                                     warmup=WARMUP, seed=1, vcs=2,
+                                     links=ls, hist_bins=SLOTS + 2)
+    m = s["measured"]
+    assert m.size == r.lat_count == int(r.latency_hist.sum())
+    assert m.size > 0
+    d = weighted_distance_matrix(g, ls)
+    assert m.min() >= int(d[d > 0].min()) + 1
