@@ -12,9 +12,10 @@ BENCH_TOLERANCE ?= 0.30
 # sections whose numbers the regression gate tracks (routing Mrec/s +
 # simulator, scenario-engine & transient-timeline slots/s + the latency
 # histogram overhead ratio + the VC router's overhead/saturation rows +
-# the heterogeneous-link overhead/express-saturation rows);
+# the heterogeneous-link overhead/express-saturation rows + the
+# fault-composition VC-under-schedule/faulted-express rows);
 # keep in sync with BENCH_baseline.json
-BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency,vc,hetero
+BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency,vc,hetero,compose
 
 .PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
         bench-nightly bench-check bench-baseline lint
@@ -54,7 +55,7 @@ bench-routing:
 # histogram-overhead rows); exercises the whole bench plumbing
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
-	    --only table1,table2,throughput,sim,scenarios,transient,latency,vc,hetero
+	    --only table1,table2,throughput,sim,scenarios,transient,latency,vc,hetero,compose
 
 # the nightly CI job: FULL mode, every section (incl. the fused-parity
 # differential cells in `sim` and the N=4096 sweeps), JSON for the

@@ -44,11 +44,21 @@ from .scenario import Scenario
 EVENT_KINDS = ("link_down", "link_up", "node_down", "node_up")
 
 
-def _canonical_link(g: LatticeGraph, u: int, p: int) -> tuple[int, int]:
+def _canonical_link(g: LatticeGraph, u: int, p: int,
+                    link_spec=None) -> tuple[int, int]:
     """Undirected identity of channel (u, p): min of the two directed
     endpoints, so kill/repair pairs match regardless of which side the
-    caller names."""
-    v = int(g.neighbor_indices[u, p])
+    caller names.  Express ports (p >= 2n) resolve their far endpoint
+    through `link_spec.extended_neighbors`."""
+    if p >= 2 * g.n:
+        if link_spec is None or not getattr(link_spec, "express", ()):
+            raise ValueError(
+                f"link event targets port {p} beyond the base lattice's "
+                f"{2 * g.n} ports; express-port events need the matching "
+                f"LinkSpec (SimConfig(links=...))")
+        v = int(link_spec.extended_neighbors(g)[u, p])
+    else:
+        v = int(g.neighbor_indices[u, p])
     return min((int(u), int(p)), (v, int(p) ^ 1))
 
 
@@ -112,16 +122,19 @@ class FaultSchedule:
         return not self.events
 
     # -- compilation --------------------------------------------------------
-    def compile(self, g: LatticeGraph, slots: int) -> "CompiledSchedule":
+    def compile(self, g: LatticeGraph, slots: int,
+                link_spec=None) -> "CompiledSchedule":
         """Partition a `slots`-long run into constant-fault epochs.
 
         Events at slot ≤ 0 fold into the initial state; events at
         slot ≥ `slots` never take effect in this run and are dropped.
         Consecutive identical fault states merge (no spurious epochs).
+        `link_spec=` resolves express-port link events (p >= 2n) to
+        their undirected identity; base-port schedules never need it.
         """
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
-        dead_links = {_canonical_link(g, u, p)
+        dead_links = {_canonical_link(g, u, p, link_spec)
                       for u, p in self.base.dead_links}
         dead_nodes = set(int(u) for u in self.base.dead_nodes)
         by_slot: dict[int, list] = {}
@@ -133,9 +146,9 @@ class FaultSchedule:
 
         def apply(kind, target):
             if kind == "link_down":
-                dead_links.add(_canonical_link(g, *target))
+                dead_links.add(_canonical_link(g, *target, link_spec))
             elif kind == "link_up":
-                dead_links.discard(_canonical_link(g, *target))
+                dead_links.discard(_canonical_link(g, *target, link_spec))
             elif kind == "node_down":
                 dead_nodes.add(target)
             else:
@@ -274,17 +287,18 @@ class CompiledSchedule:
                 self.slot2epoch.tobytes())
 
     # -- stacked masks -------------------------------------------------------
-    def link_ok_stack(self, g: LatticeGraph) -> np.ndarray:
-        """(E, N, 2n) per-epoch channel-liveness masks."""
-        return np.stack([e.link_ok(g) for e in self.epochs])
+    def link_ok_stack(self, g: LatticeGraph, link_spec=None) -> np.ndarray:
+        """(E, N, P) per-epoch channel-liveness masks (P = 2n, or 2n+2X
+        when `link_spec` carries express overlays)."""
+        return np.stack([e.link_ok(g, link_spec) for e in self.epochs])
 
     def node_ok_stack(self, g: LatticeGraph) -> np.ndarray:
         """(E, N) per-epoch node-liveness masks."""
         return np.stack([e.node_ok(g) for e in self.epochs])
 
 
-def ensure_compiled(schedule, g: LatticeGraph, slots: int
-                    ) -> CompiledSchedule:
+def ensure_compiled(schedule, g: LatticeGraph, slots: int,
+                    link_spec=None) -> CompiledSchedule:
     """Normalize a schedule argument (every schedule-taking API funnels
     through here): a `FaultSchedule` compiles against this run's length;
     an already-compiled `CompiledSchedule` must match it — a silent
@@ -295,4 +309,4 @@ def ensure_compiled(schedule, g: LatticeGraph, slots: int
                 f"schedule was compiled for {schedule.slots} slots, "
                 f"this run has {slots}")
         return schedule
-    return schedule.compile(g, slots)
+    return schedule.compile(g, slots, link_spec)

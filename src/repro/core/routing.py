@@ -431,9 +431,11 @@ def fault_aware_next_hop_device(g: LatticeGraph, link_ok: np.ndarray,
     `core.link_spec.LinkSpec`) and the relaxation runs over the EXTENDED
     port axis with per-port slot costs — `dist` becomes the weighted
     shortest-path cost, `next_hop` indexes the P = 2n + 2·X extended
-    ports.  The (…, N, 2n) `link_ok` input keeps its base shape: express
-    columns are appended all-live (overlay channels have no fault axis
-    yet) and a pillar mask is AND-ed into the base columns."""
+    ports.  A base-shaped (…, N, 2n) `link_ok` input gets its express
+    columns appended all-live; an already-extended (…, N, 2n+2X) mask —
+    e.g. `Scenario.link_ok(g, link_spec)` — is consumed as-is, so
+    express channels fault like any link.  A pillar mask is AND-ed into
+    the base columns either way."""
     import jax.numpy as jnp
 
     N, P = g.order, 2 * g.n
@@ -449,7 +451,7 @@ def fault_aware_next_hop_device(g: LatticeGraph, link_ok: np.ndarray,
         structural = link_spec.structural_mask(g)
         if structural is not None:
             link_ok = link_ok & structural
-        if P > 2 * g.n:
+        if P > 2 * g.n and link_ok.shape[-1] == 2 * g.n:
             ext = np.ones(link_ok.shape[:-1] + (P - 2 * g.n,), dtype=bool)
             link_ok = np.concatenate([link_ok, ext], axis=-1)
     if link_ok.ndim == 3:                                  # (E, N, P)

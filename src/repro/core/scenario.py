@@ -82,19 +82,34 @@ class Scenario:
                        name=f"{self.name}/{policy}")
 
     # -- masks --------------------------------------------------------------
-    def link_ok(self, g: LatticeGraph) -> np.ndarray:
-        """(N, 2n) bool: channel (u, p) is alive.  Symmetric by
+    def link_ok(self, g: LatticeGraph, link_spec=None) -> np.ndarray:
+        """(N, P) bool: channel (u, p) is alive.  Symmetric by
         construction: killing (u, p) kills (v, p^1) too, and a dead node
-        takes every incident channel (both directions) down with it."""
-        nbr = g.neighbor_indices
-        ok = np.ones((g.order, 2 * g.n), dtype=bool)
+        takes every incident channel (both directions) down with it.
+
+        P is 2n on the base lattice; passing a `LinkSpec` with express
+        overlays extends the axis to 2n+2X (`extended_neighbors` port
+        layout), so express channels die and repair like any link —
+        dead_links may then name express ports, and dead nodes take
+        their express channels down too."""
+        if link_spec is not None and getattr(link_spec, "express", ()):
+            nbr = np.asarray(link_spec.extended_neighbors(g))
+        else:
+            nbr = np.asarray(g.neighbor_indices)
+        P = nbr.shape[1]
+        ok = np.ones((g.order, P), dtype=bool)
         for u, p in self.dead_links:
+            if p >= P:
+                raise ValueError(
+                    f"dead link ({u}, {p}) names port {p} but this fabric "
+                    f"has only {P} ports (express ports need the matching "
+                    f"LinkSpec passed through SimConfig(links=...))")
             v = int(nbr[u, p])
             ok[u, p] = False
             ok[v, p ^ 1] = False
         for u in self.dead_nodes:
             ok[u, :] = False
-            for p in range(2 * g.n):
+            for p in range(P):
                 ok[int(nbr[u, p]), p ^ 1] = False
         return ok
 
@@ -105,11 +120,14 @@ class Scenario:
         return ok
 
     def fingerprint(self, g: LatticeGraph) -> tuple:
-        """Hashable identity for compiled-runner caches."""
+        """Hashable identity for compiled-runner caches.  Spec-based (not
+        mask-bytes) so a scenario naming express ports fingerprints
+        without needing the LinkSpec; two spellings of the same
+        undirected fault may compile twice, never wrongly share."""
         if self.is_trivial:
             return ("trivial",)
-        return (self.policy, self.link_ok(g).tobytes(),
-                self.node_ok(g).tobytes())
+        return (self.policy, tuple(sorted(self.dead_links)),
+                tuple(sorted(self.dead_nodes)))
 
     # -- constructors -------------------------------------------------------
     @classmethod

@@ -41,6 +41,48 @@ from .scenario import Scenario
 
 SIM_IMPLS = ("batched", "reference", "fused")
 
+
+def validate_feature_combo(*, impl: str | None = None, vcs: int = 1,
+                           links_trivial: bool = True,
+                           express: bool = False,
+                           policy: str = "dor") -> None:
+    """The single source of truth for unsupported feature combinations.
+
+    `SimConfig.__post_init__` calls this with the user-facing fields;
+    `simulation._make_ctx` / `_get_runner` call it again with the resolved
+    context so direct internal callers hit the SAME actionable message.
+    Passing `impl=None` skips the impl-specific cells (not yet known).
+
+    The remaining exclusion cells of the feature-compatibility matrix
+    (docs/simulator.md) are:
+
+      * fused × vcs>1            — the Pallas kernel is V=1-only
+      * fused × non-trivial links — the kernel is weight-1/no-overlay
+      * express × vcs=1 × adaptive/escape policy — faulted express
+        fabrics at V=1 route with greedy weighted DOR only; the V=1
+        adaptive/escape heuristics score base-lattice ports
+    """
+    if impl == "fused":
+        if vcs > 1:
+            raise ValueError(
+                "impl='fused' (the Pallas slot-step kernel) is V=1-only"
+                "; run vcs>1 with impl='batched' or 'reference' (see "
+                "docs/simulator.md, 'Virtual channels & credit flow')")
+        if not links_trivial:
+            raise ValueError(
+                "impl='fused' (the Pallas slot-step kernel) is "
+                "weight-1/no-overlay-only; run heterogeneous "
+                "LinkSpecs with impl='batched' or 'reference' "
+                "(see docs/simulator.md, 'Heterogeneous links')")
+    if express and vcs == 1 and policy in ("adaptive", "escape"):
+        raise ValueError(
+            f"express-channel overlays at vcs=1 route with greedy "
+            f"weighted DOR only (dead express hops fall back to base "
+            f"ports); the V=1 {policy!r} policy scores base-lattice "
+            f"ports — use policy='dor' or the VC router (vcs >= 2, "
+            f"whose adaptive lanes and escape fallback understand the "
+            f"extended port axis)")
+
 # fields an entry point may also receive as a legacy kwarg; used by
 # `from_kwargs` to build the config and to name conflicts precisely
 _FIELD_NAMES: tuple[str, ...] = (
@@ -102,42 +144,21 @@ class SimConfig:
                     f"need 2 <= credits <= queue={self.queue} (a window "
                     f"below 2 starves the injection/turn bubble), got "
                     f"{self.credits}")
-        if self.vcs > 1:
-            if self.impl == "fused":
-                raise ValueError(
-                    "impl='fused' (the Pallas slot-step kernel) is V=1-only"
-                    "; run vcs>1 with impl='batched' or 'reference' (see "
-                    "docs/simulator.md, 'Virtual channels & credit flow')")
-            if self.schedule is not None:
-                raise ValueError(
-                    "transient FaultSchedule timelines are V=1-only for "
-                    "now; run vcs>1 with a static scenario= instead")
-        if self.links is not None:
-            if not isinstance(self.links, LinkSpec):
-                raise TypeError(
-                    f"links= expects a LinkSpec, got "
-                    f"{type(self.links).__name__}")
-            if not self.links.is_trivial:
-                if self.impl == "fused":
-                    raise ValueError(
-                        "impl='fused' (the Pallas slot-step kernel) is "
-                        "weight-1/no-overlay-only; run heterogeneous "
-                        "LinkSpecs with impl='batched' or 'reference' "
-                        "(see docs/simulator.md, 'Heterogeneous links')")
-                if self.links.express:
-                    if self.vcs > 1:
-                        raise ValueError(
-                            "express-channel overlays are vcs=1-only "
-                            "(credit_vc_select scores the 2n base ports "
-                            "only); drop express= or run vcs=1")
-                    if self.schedule is not None or (
-                            self.scenario is not None
-                            and not self.scenario.is_trivial):
-                        raise ValueError(
-                            "express-channel overlays require a pristine "
-                            "fabric (no Scenario faults, no FaultSchedule)"
-                            " — the fault policies route over the 2n base "
-                            "ports only")
+        if self.links is not None and not isinstance(self.links, LinkSpec):
+            raise TypeError(
+                f"links= expects a LinkSpec, got "
+                f"{type(self.links).__name__}")
+        if self.schedule is not None:
+            policy = self.schedule.policy
+        elif self.scenario is not None:
+            policy = self.scenario.policy
+        else:
+            policy = "dor"
+        validate_feature_combo(
+            impl=self.impl, vcs=self.vcs,
+            links_trivial=self.links is None or self.links.is_trivial,
+            express=bool(self.links is not None and self.links.express),
+            policy=policy)
 
     # -- the legacy-kwarg shim ---------------------------------------------
     @classmethod

@@ -145,7 +145,7 @@ from .link_spec import LinkSpec
 from .routing import make_router
 from .routing_engine import canonical_reduce, credit_vc_select, policy_ports
 from .scenario import Scenario
-from .sim_config import SimConfig
+from .sim_config import SimConfig, validate_feature_combo
 
 PACKET_PHITS = 16
 
@@ -433,6 +433,26 @@ def _next_port_ext(rec, pdim, psgn, pspan):
     return jnp.argmax(jnp.where(ok, pspan, -1), axis=-1)
 
 
+def _next_port_ext_ok(rec, pdim, psgn, pspan, link_ok):
+    """`_next_port_ext` under faults: among the fitting ports of the
+    record's first nonzero dimension, prefer the largest-span LIVE one —
+    live beats span, so a dead express hop degrades onto the base span-1
+    port (which always fits) instead of wedging the packet.  Only a dead
+    BASE channel leaves the packet requesting a dead port, where it
+    blocks in place exactly like DOR through a fault.  `link_ok`
+    broadcasts to ``rec.shape[:-1] + (P,)``; with all-live masks this
+    selects exactly `_next_port_ext`."""
+    nz = jnp.abs(rec) > 0
+    dim = jnp.argmax(nz, axis=-1)
+    val = jnp.take_along_axis(rec, dim[..., None], -1)[..., 0]
+    val = val.astype(jnp.int32)
+    ok = ((pdim == dim[..., None]) & (psgn * val[..., None] > 0)
+          & (pspan <= jnp.abs(val)[..., None]))
+    lok = jnp.broadcast_to(link_ok, ok.shape)
+    key = jnp.where(ok, lok.astype(jnp.int32) * 4096 + pspan, -1)
+    return jnp.argmax(key, axis=-1)
+
+
 def _inject(state, key, new_dst, new_rec, new_birth, ctx, masks=None):
     """Reference injection stage (per-slot PRNG draws + scatter writes,
     bitwise-stable vs the pre-batching simulator for trivial scenarios).
@@ -478,7 +498,13 @@ def _inject(state, key, new_dst, new_rec, new_birth, ctx, masks=None):
         drop = None
         ipc = inj_port
     else:
-        inj_port = policy_ports(r, m["link_ok"], ctx["policy"])
+        if ctx.get("express"):
+            # greedy weighted DOR over the extended ports, liveness-aware
+            # (express at V=1 is dor-only; see validate_feature_combo)
+            inj_port = _next_port_ext_ok(r, ctx["pdim"], ctx["psgn"],
+                                         ctx["pspan"], m["link_ok"])
+        else:
+            inj_port = policy_ports(r, m["link_ok"], ctx["policy"])
         drop = want & ~m["dst_ok"][d]
         ipc = jnp.minimum(inj_port, P - 1)        # clamp the P sentinel
     freeq = jnp.take_along_axis(
@@ -705,7 +731,20 @@ def _make_slot_step_batched(ctx, warmup: int):
             elig = occ & (wait == 0)
         else:
             elig = occ
-        if scheduled and ctx["policy"] != "dor":
+        if express and not trivial:
+            # liveness-aware greedy weighted DOR: a carried express port
+            # goes stale when its channel dies (and becomes preferable
+            # again when it repairs) — re-consult against the current
+            # masks every slot.  All-live masks reproduce the carried
+            # port (same greedy argmax), keeping forced-mask/pristine
+            # lanes equivalent.
+            port = jnp.where(
+                occ,
+                _next_port_ext_ok(rec, ctx["pdim"], ctx["psgn"],
+                                  ctx["pspan"],
+                                  link_ok[:, None, None, :]
+                                  ).astype(jnp.int8), NO_PORT)
+        elif scheduled and ctx["policy"] != "dor":
             # adaptive/escape re-consult policy_ports against the CURRENT
             # epoch's masks: a carried port can go stale when the world
             # changes under a waiting packet.  With E = 1 the recompute is
@@ -835,7 +874,11 @@ def _make_slot_step_batched(ctx, warmup: int):
         slot_f = jnp.argmax(free_mask, axis=2)             # (N, P) first free
         slot_l = (Q - 1) - jnp.argmax(free_mask[:, :, ::-1], axis=2)
         wmask = acc[:, :, None] & (qi == slot_f[:, :, None])
-        if express:
+        if express and not trivial:
+            port_in = _next_port_ext_ok(rec_after, ctx["pdim"],
+                                        ctx["psgn"], ctx["pspan"],
+                                        link_ok[:, None, :])
+        elif express:
             port_in = _next_port_ext(rec_after, ctx["pdim"], ctx["psgn"],
                                      ctx["pspan"])         # (N, P) next hop
         elif trivial:
@@ -854,7 +897,16 @@ def _make_slot_step_batched(ctx, warmup: int):
         want = want_new | (backlog0 > 0)
         depcnt = dep_slot.reshape(N, P, Q).sum(axis=2)
         freeq_post = free0 + depcnt - acc                  # after transit
-        inj_port = tr["p"].astype(jnp.int32)
+        inj_p = tr["p"]
+        if express and not trivial:
+            # the pre-drawn port table is liveness-ignorant; recompute
+            # the greedy weighted-DOR port against the current masks so
+            # a new packet never queues behind a dead express channel
+            # while its base port is live
+            inj_p = _next_port_ext_ok(tr["r"], ctx["pdim"], ctx["psgn"],
+                                      ctx["pspan"],
+                                      link_ok).astype(jnp.int8)
+        inj_port = inj_p.astype(jnp.int32)
         if trivial:
             drop = None
             can = want & (jnp.take_along_axis(
@@ -870,7 +922,7 @@ def _make_slot_step_batched(ctx, warmup: int):
                 freeq_post, ipc[:, None], axis=1)[:, 0] >= 2)
                 & tr["v"] & (inj_port < P))
         imask = (can[:, None, None]
-                 & (ports8[None, :, None] == tr["p"][:, None, None])
+                 & (ports8[None, :, None] == inj_p[:, None, None])
                  & (qi == slot_l[:, :, None]))
         backlog = backlog0 + want_new - can
         if drop is not None:
@@ -884,7 +936,7 @@ def _make_slot_step_batched(ctx, warmup: int):
             imask, slot.astype(birth.dtype),
             jnp.where(wmask, in_birth[:, :, None], birth_cleared))
         new_port = jnp.where(
-            imask, tr["p"][:, None, None],
+            imask, inj_p[:, None, None],
             jnp.where(wmask, port_in[:, :, None].astype(jnp.int8), port))
 
         updates = dict(rec=new_rec, birth=new_birth, port=new_port,
@@ -1067,7 +1119,12 @@ def _make_slot_step_reference(ctx, warmup: int):
             link_ok = None if trivial else ctx["link_ok"]
             masks, qdrop = None, None
         occ = dst >= 0                                     # (N, P, Q)
-        if express:
+        if express and not trivial:
+            # liveness-aware greedy weighted DOR (see the batched step)
+            port = _next_port_ext_ok(rec, ctx["pdim"], ctx["psgn"],
+                                     ctx["pspan"],
+                                     link_ok[:, None, None, :])
+        elif express:
             port = _next_port_ext(rec, ctx["pdim"], ctx["psgn"],
                                   ctx["pspan"])             # (N, P, Q)
         elif trivial:
@@ -1246,7 +1303,13 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
 
     V=1 never reaches this builder — `_get_runner` dispatches to the
     pre-VC `_make_slot_step_batched`, keeping the vcs=1 program bitwise
-    identical.  Schedules and the fused kernel are V=1-only (rejected in
+    identical.  `FaultSchedule` timelines compose: the per-epoch mask
+    stacks are gathered in the scan carry exactly like the V=1 step, a
+    killed node's enqueued phits drop across all lanes with the freed
+    credits restored in the same slot, and a degenerate E=1 schedule is
+    bitwise-equal to the static `Scenario` run.  Express overlays extend
+    the port axis (geometry flows through `credit_vc_select`'s
+    port_geom); only the fused kernel stays V=1 (rejected in
     `SimConfig`)."""
     n, N, P, Q, V = ctx["n"], ctx["N"], ctx["P"], ctx["Q"], ctx["V"]
     nbr = ctx["nbr"]
@@ -1261,15 +1324,29 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
     opp = jnp.arange(P) ^ 1
     sender = nbr[:, opp]                           # (N, P): src of in-port p
     receiver = nbr                                 # (N, P): dst of out-port p
-    dim_p = ports // 2
-    sgn_p = 1 - 2 * (ports % 2)
-    hop = np.zeros((P, n), np.int64)
-    hop[np.arange(P), np.asarray(dim_p)] = np.asarray(sgn_p)
-    hop = jnp.asarray(hop, rec_dtype)
+    express = ctx.get("express", False)
+    if express:
+        # overlay ports hop span·e_dim; the table already carries signs,
+        # and `credit_vc_select` scores the extended axis via port_geom
+        hop = ctx["hop_tab"].astype(rec_dtype)
+        port_geom = (ctx["pdim"], ctx["psgn"], ctx["pspan"])
+    else:
+        dim_p = ports // 2
+        sgn_p = 1 - 2 * (ports % 2)
+        hop = np.zeros((P, n), np.int64)
+        hop[np.arange(P), np.asarray(dim_p)] = np.asarray(sgn_p)
+        hop = jnp.asarray(hop, rec_dtype)
+        port_geom = None
+    # fault-aware escape: only the "escape" policy opts into the PR 3
+    # misroute when VC0's DOR port is dead ("adaptive" keeps the packet
+    # blocking, like V=1 DOR through a fault); inert on live ports, so
+    # all-live masks select identically either way
+    esc_fb = policy == "escape" and not trivial
+    scheduled = ctx.get("scheduled", False)
     pvq32 = jnp.arange(PVQ, dtype=jnp.int32)
     qids = jnp.arange(PV, dtype=jnp.int32)
     varange = jnp.arange(V, dtype=jnp.int32)
-    weighted = ctx.get("weighted", False)   # express is vcs=1-only
+    weighted = ctx.get("weighted", False)
     if weighted:
         wgt = ctx["wgt"]                    # (P,) int32 slot costs
 
@@ -1285,8 +1362,29 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
 
     def slot_step(state, tr):
         rec, birth, credit = state["rec"], state["birth"], state["credit"]
-        link_ok = None if trivial else state["link_ok"]
         slot = state["slot"]
+        if scheduled:
+            # resolve the current epoch INSIDE the scan carry (one gather
+            # per mask stack, no per-epoch retrace).  A killed node's
+            # enqueued phits drop across ALL lanes; the dropped occupancy
+            # frees its queue space, so the lane's advertised credits are
+            # restored HERE — `credit == credit_init − occupancy` holds
+            # at every slot.  At E = 1 dead nodes never hold occupants
+            # (their channels are dead and their injection is masked from
+            # slot 0), so deadq ≡ False and the restore adds zero: the
+            # static Scenario run stays bitwise-equal.
+            e = tr["epoch"]
+            link_ok = state["link_ok"][e]
+            inj_ok_e = state["inj_ok"][e]
+            deadq = (birth >= 0) & ~inj_ok_e[:, None, None, None]
+            qdrop = deadq.sum()
+            birth = jnp.where(deadq, -1, birth)
+            credit = credit + deadq.sum(axis=3)
+            backlog0 = jnp.where(inj_ok_e, state["backlog"], 0)
+        else:
+            link_ok = None if trivial else state["link_ok"]
+            qdrop = None
+            backlog0 = state["backlog"]
         occ = birth >= 0                                   # (N, P, V, Q)
 
         # ---- per-packet (out-port, lane) request, credit-aware ----
@@ -1296,7 +1394,8 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
         lok = (jnp.ones((N, P), bool) if trivial else link_ok)
         sel_port, sel_vc = credit_vc_select(
             rec, lok[:, None, None, None, :],
-            cd[:, None, None, None, :, :], policy, rot=slot)
+            cd[:, None, None, None, :, :], policy, rot=slot,
+            port_geom=port_geom, escape_fallback=esc_fb)
         if weighted:
             # multi-slot crossings: waiting packets are ineligible
             busy, wait = state["busy"], state["wait"]
@@ -1391,27 +1490,32 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
 
         # ---- injection (after transit; local credits gate admission) --
         want_new = tr["u"] < state["load"]
-        if not trivial:
+        if scheduled:
+            want_new = want_new & inj_ok_e
+        elif not trivial:
             want_new = want_new & state["inj_ok"]
-        want = want_new | (state["backlog"] > 0)
+        want = want_new | (backlog0 > 0)
         depcnt = dep_slot.reshape(N, P, V, Q).sum(axis=3)  # (N, P, V)
         credit_post = credit + depcnt - accv.astype(jnp.int32)
         inj_port, inj_vc = credit_vc_select(tr["r"], lok, credit_post,
-                                            policy, rot=slot)
+                                            policy, rot=slot,
+                                            port_geom=port_geom,
+                                            escape_fallback=esc_fb)
         ipc = jnp.minimum(inj_port, P - 1)                 # clamp P sentinel
         freesel = take_q(credit_post.reshape(N, PV), ipc * V + inj_vc)
         can = want & (freesel >= 2) & tr["v"] & (inj_port < P)
         if trivial:
             drop = None
         else:
-            drop = want & ~state["dst_live_fixed"]
+            drop = want & ~(state["dst_live_fixed"][e] if scheduled
+                            else state["dst_live_fixed"])
             can = can & ~drop
         imask = (can[:, None, None, None]
                  & (ports[None, :, None, None] == ipc[:, None, None, None])
                  & (varange[None, None, :, None]
                     == inj_vc[:, None, None, None])
                  & (qi == slot_l[..., None]))
-        backlog = state["backlog"] + want_new - can
+        backlog = backlog0 + want_new - can
         if drop is not None:
             backlog = backlog - drop
         backlog = jnp.clip(backlog, 0, 1 << 30)
@@ -1457,8 +1561,9 @@ def _make_slot_step_vc_batched(ctx, warmup: int):
             updates["link_use"] = state["link_use"] + dep_port.astype(
                 jnp.int32)
         out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
-                           drop, **updates)
-        return out, None
+                           drop, qdrop=qdrop, **updates)
+        return out, (_timeline_y(out, new_birth, dep_port, link_ok)
+                     if scheduled else None)
 
     return slot_step
 
@@ -1479,20 +1584,53 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
     adaptive = policy in ("adaptive", "escape")
     PV, PVQ = P * V, P * V * Q
     varange = jnp.arange(V, dtype=jnp.int32)
-    weighted = ctx.get("weighted", False)   # express is vcs=1-only
+    scheduled = ctx.get("scheduled", False)
+    weighted = ctx.get("weighted", False)
+    express = ctx.get("express", False)
     wgt_of = (np.asarray(ctx["wgt"]).tolist() if weighted else [1] * P)
+    if express:
+        dim_of = np.asarray(ctx["pdim"]).tolist()
+        sgn_of = np.asarray(ctx["psgn"]).tolist()
+        span_of = np.asarray(ctx["pspan"]).tolist()
+        port_geom = (ctx["pdim"], ctx["psgn"], ctx["pspan"])
+    else:
+        dim_of = [p // 2 for p in range(P)]
+        sgn_of = [1 - 2 * (p % 2) for p in range(P)]
+        span_of = [1] * P
+        port_geom = None
+    esc_fb = policy == "escape" and not trivial
 
     def slot_step(state, key):
         dst, rec, birth = state["dst"], state["rec"], state["birth"]
         credit = state["credit"]
         slot = state["slot"]
-        link_ok = None if trivial else ctx["link_ok"]
+        if scheduled:
+            # epoch resolution from the slot counter (masks stay BAKED);
+            # dead-node drops mirror the batched VC step: occupancy at a
+            # killed node clears across all lanes and the freed queue
+            # space restores the lane's credits in the same slot
+            e = ctx["slot2epoch"][slot]
+            link_ok = ctx["link_ok"][e]
+            node_ok = ctx["inj_ok"][e]
+            masks = dict(link_ok=link_ok, inj_ok=node_ok, dst_ok=node_ok,
+                         live_tbl=ctx["live_tbl"][e],
+                         n_live=ctx["n_live"][e])
+            deadq = (dst >= 0) & ~node_ok[:, None, None, None]
+            qdrop = deadq.sum()
+            dst = jnp.where(deadq, -1, dst)
+            credit = credit + deadq.sum(axis=3)
+            state = dict(state,
+                         backlog=jnp.where(node_ok, state["backlog"], 0))
+        else:
+            link_ok = None if trivial else ctx["link_ok"]
+            masks, qdrop = None, None
         occ = dst >= 0                                     # (N, P, V, Q)
         lok = jnp.ones((N, P), bool) if trivial else link_ok
         cd = credit[nbr, jnp.arange(P)[None, :]]           # (N, P, V)
         sel_port, sel_vc = credit_vc_select(
             rec, lok[:, None, None, None, :],
-            cd[:, None, None, None, :, :], policy, rot=slot)
+            cd[:, None, None, None, :, :], policy, rot=slot,
+            port_geom=port_geom, escape_fallback=esc_fb)
         if weighted:
             busy, wait = state["busy"], state["wait"]
             sel_port = jnp.where(occ & (wait == 0), sel_port, -1)
@@ -1524,6 +1662,7 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
         delivered = jnp.int32(0)
         lat_sum = jnp.int32(0)
         lat_cnt = jnp.int32(0)
+        dead_crossings = jnp.int32(0)
         vc_del = jnp.zeros((V,), jnp.int32)
         age_l, meas_l, del_l = [], [], []
         new_dst, new_rec, new_birth = dst, rec, birth
@@ -1534,8 +1673,8 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
         link_use = None if trivial else state["link_use"]
         r_ = jnp.arange(N)
         for p in range(P):
-            d_p = p // 2
-            s_p = 1 - 2 * (p % 2)
+            d_p = dim_of[p]
+            s_p = sgn_of[p] * span_of[p]                   # signed hop span
             w_p = wgt_of[p]
             u = nbr[:, opp[p]]                             # sender for recv w
             has = whas[u, p]
@@ -1567,6 +1706,8 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
                 age_l.append(age_p)
                 meas_l.append(meas_p)
                 del_l.append(will_deliver)
+            if scheduled:
+                dead_crossings += (moved & ~link_ok[u, p]).sum()
             if link_use is not None:
                 link_use = link_use.at[u, p].add(moved.astype(jnp.int32))
             # clear the winner slot at the sender; its lane regains a credit
@@ -1600,7 +1741,7 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
             new_wait = jnp.where(new_dst >= 0, new_wait, 0)
 
         # ---- injection: credit-aware lane admission (bubble cost 2) ----
-        m = ctx
+        m = ctx if masks is None else {**ctx, **masks}
         k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 2), 3)
         want_new = jax.random.uniform(k1, (N,)) < state["load"]
         if not trivial:
@@ -1618,7 +1759,8 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
         coin = jax.random.uniform(k3, (N,)) < 0.5
         r = jnp.where(coin[:, None], ctx["rec_a"][di], ctx["rec_b"][di])
         inj_port, inj_vc = credit_vc_select(r, lok, credit_work, policy,
-                                            rot=slot)
+                                            rot=slot, port_geom=port_geom,
+                                            escape_fallback=esc_fb)
         ipc = jnp.minimum(inj_port, P - 1)
         freesel = jnp.take_along_axis(
             credit_work.reshape(N, PV), (ipc * V + inj_vc)[:, None],
@@ -1667,9 +1809,16 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
         if link_use is not None:
             updates["link_use"] = link_use
         out = _finish_slot(state, warmup, delivered, lat_sum, lat_cnt, can,
-                           drop, **updates)
+                           drop, qdrop=qdrop, **updates)
         y = None
-        if ctx.get("lat_trace"):
+        if scheduled:
+            y = dict(delivered=out["delivered"], injected=out["injected"],
+                     dropped=out["dropped"],
+                     in_flight=(new_dst >= 0).sum(),
+                     dead_crossings=dead_crossings)
+            if ctx["hist_bins"]:
+                y["lat_hist"] = out["lat_hist"]
+        elif ctx.get("lat_trace"):
             # the per-packet oracle, VC flavour: ages/flags per physical
             # in-port — same (slots, N, P) trace shape as the V=1 oracle
             y = dict(age=jnp.stack(age_l, 1), deliv=jnp.stack(del_l, 1),
@@ -1680,11 +1829,14 @@ def _make_slot_step_vc_reference(ctx, warmup: int):
 
 
 def _scenario_mask_fields(scenario: Scenario, g: LatticeGraph, N: int,
-                          dst_np, force_dead_nodes: bool = False) -> dict:
+                          dst_np, force_dead_nodes: bool = False,
+                          link_spec=None) -> dict:
     """The scenario-DEPENDENT traced arrays of a mask-threaded context —
     factored out so a K-scenario sweep derives per-scenario masks without
-    rebuilding the scenario-independent routing/label tables K times."""
-    link_ok = scenario.link_ok(g)
+    rebuilding the scenario-independent routing/label tables K times.
+    `link_spec` extends the link_ok axis over express overlay ports
+    (2n+2X), so express channels die and repair like any link."""
+    link_ok = scenario.link_ok(g, link_spec)
     node_ok = scenario.node_ok(g)
     live = np.flatnonzero(node_ok).astype(np.int32)
     if live.size == 0:
@@ -1709,13 +1861,15 @@ def _scenario_mask_fields(scenario: Scenario, g: LatticeGraph, N: int,
 
 def _schedule_mask_fields(compiled: CompiledSchedule, g: LatticeGraph,
                           N: int, dst_np, force_dead_nodes: bool = False,
-                          pad_to: int | None = None) -> dict:
+                          pad_to: int | None = None,
+                          link_spec=None) -> dict:
     """Per-EPOCH stacks of the scenario mask fields, plus the slot→epoch
     map — the traced time axis of a scheduled run.  `pad_to` repeats the
     final epoch so K schedules of differing epoch counts can share one
     compiled program (padded epochs are unreachable: the slot→epoch map
     never points at them)."""
-    per = [_scenario_mask_fields(s, g, N, dst_np, force_dead_nodes)
+    per = [_scenario_mask_fields(s, g, N, dst_np, force_dead_nodes,
+                                 link_spec)
            for s in compiled.epochs]
     E = pad_to if pad_to is not None else len(per)
     if E < len(per):
@@ -1763,27 +1917,17 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
         raise ValueError("lat_trace is exclusive with schedule=")
     if hist_bins < 0:
         raise ValueError(f"hist_bins must be >= 0, got {hist_bins}")
-    if vcs > 1:
-        # SimConfig raises this with friendlier wording; the internal
-        # guard keeps direct _make_ctx callers honest too
-        if schedule is not None:
-            raise ValueError("FaultSchedule timelines are V=1-only")
+    policy = schedule.policy if schedule is not None else scenario.policy
     ls = links if links is not None and not links.is_trivial else None
     if ls is not None:
         ls.validate(t.n)
-        if ls.express:
-            # SimConfig mirrors these; direct callers hit them here
-            if vcs > 1:
-                raise ValueError("express overlays are vcs=1-only")
-            if (schedule is not None or not scenario.is_trivial
-                    or force_masks or force_dead_nodes):
-                raise ValueError(
-                    "express overlays require a pristine fabric (no "
-                    "Scenario faults, no FaultSchedule, no forced masks)")
+        # SimConfig raises these with friendlier context; the shared
+        # validator keeps direct _make_ctx callers honest too
+        validate_feature_combo(vcs=vcs, links_trivial=False,
+                               express=bool(ls.express), policy=policy)
         # a pillar spec removes links: even a pristine Scenario must ride
         # the mask-threaded program so the structural mask is enforced
         force_masks = force_masks or ls.has_pillar
-    policy = schedule.policy if schedule is not None else scenario.policy
     trivial = (schedule is None and scenario.is_trivial
                and not force_masks)
     dst_np = pattern_table(g, pattern, seed)
@@ -1792,12 +1936,12 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     # memory traffic of the biggest per-slot tensors (int32 kept as a
     # fallback for enormous single-dimension graphs; escape misrouting can
     # grow records past the minimal bound, so it gets the wide dtype —
-    # only for V=1: the VC router's escape lane is restricted DOR, which
-    # never grows a record)
+    # at V=1 directly, and at V>1 via the VC0 escape-fallback misroute
+    # that kicks in when DOR's escape port is dead)
     rec_max = max(int(np.abs(t.records_a).max(initial=0)),
                   int(np.abs(t.records_b).max(initial=0)))
     rec_dtype = (jnp.int32
-                 if (policy == "escape" and vcs == 1) or rec_max > 120
+                 if policy == "escape" or rec_max > 120
                  else jnp.int8)
     # per-delta-index injection tables: record (Remark-30 pair) + its first
     # DOR port, so traffic generation is two gathers instead of routing work
@@ -1835,7 +1979,7 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
     if schedule is not None:
         fields = _schedule_mask_fields(
             schedule, g, t.N, dst_np if fixed_dst else None,
-            force_dead_nodes, pad_to=pad_epochs)
+            force_dead_nodes, pad_to=pad_epochs, link_spec=ls)
         E = int(fields["link_ok"].shape[0])
         scen: dict = dict(trivial=False, scheduled=True, policy=policy,
                           scen_fp=schedule.fingerprint(g),
@@ -1851,7 +1995,7 @@ def _make_ctx(t: SimTables, g: LatticeGraph, pattern: str, seed: int,
         if not trivial:
             scen.update(_scenario_mask_fields(
                 scenario, g, t.N, dst_np if fixed_dst else None,
-                force_dead_nodes))
+                force_dead_nodes, ls))
     # heterogeneous-link context: per-port weights, pillar structural
     # mask (AND-ed into every link_ok, so the dead-channel audit covers
     # missing pillars), express-extended neighbour/port-geometry tables
@@ -1996,15 +2140,9 @@ def _get_runner(t: SimTables, ctx, *, slots: int, warmup: int, impl: str,
     scheduled = ctx.get("scheduled", False)
     tracing = ctx["lat_trace"] and impl == "reference"
     V = ctx.get("V", 1)
-    if V > 1 and impl == "fused":
-        raise ValueError(
-            "impl='fused' (the Pallas slot-step kernel) is V=1-only; run "
-            "vcs>1 with impl='batched' or 'reference'")
-    if impl == "fused" and ctx.get("link_fp") is not None:
-        raise ValueError(
-            "impl='fused' (the Pallas slot-step kernel) is weight-1/"
-            "no-overlay-only; run heterogeneous LinkSpecs with "
-            "impl='batched' or 'reference'")
+    validate_feature_combo(
+        impl=impl, vcs=V, links_trivial=ctx.get("link_fp") is None,
+        express=ctx.get("express", False), policy=ctx["policy"])
     key = (t.neighbors.tobytes(), ctx["fixed_dst"], slots, warmup,
            ctx["Q"], impl, n_loads, n_seeds, n_scen, scen_key,
            ctx["hist_bins"], tracing, V, ctx.get("credit_init"),
@@ -2236,6 +2374,7 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
     stacked on the same outermost axis — K timelines, one trace, one
     compile."""
     t = tables or build_tables(g, seed)
+    ls = links if links is not None and not links.is_trivial else None
     if schedules is not None:
         E = max(c.E for c in schedules)
         fdn = any(c.has_dead_nodes for c in schedules)
@@ -2249,7 +2388,8 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
         if ctx["has_dead_nodes"]:
             sched_keys += ["live_tbl", "n_live"]
         masks = [{k: ctx[k] for k in sched_keys}] + [
-            _schedule_mask_fields(c, g, t.N, dst_np, fdn, pad_to=E)
+            _schedule_mask_fields(c, g, t.N, dst_np, fdn, pad_to=E,
+                                  link_spec=ls)
             for c in schedules[1:]]
     elif scenarios is None:
         ctx = _make_ctx(t, g, pattern, seed, queue, scenario,
@@ -2266,7 +2406,7 @@ def _sweep_plan(g: LatticeGraph, pattern: str, loads, *, slots, warmup,
                   else None)
         masks = [{k: ctx[k] for k in ("link_ok", "inj_ok", "live_tbl",
                                       "n_live", "dst_live_fixed")}] + [
-            _scenario_mask_fields(s, g, t.N, dst_np, fdn)
+            _scenario_mask_fields(s, g, t.N, dst_np, fdn, ls)
             for s in scenarios[1:]]
     if masks is not None and ctx.get("structural") is not None:
         # pillar structural mask: ctx lane 0 already has it AND-ed in
@@ -2364,8 +2504,9 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     the restricted-DOR escape lane (deadlock-free by CDG acyclicity —
     see docs/simulator.md).  `credits` caps the per-lane window (None =
     full queue depth).  vcs=1 (default) compiles the EXACT pre-VC
-    program; vcs>1 requires impl in (batched | reference) and a static
-    scenario (no schedule=).
+    program; vcs>1 requires impl in (batched | reference) and composes
+    with scenario= AND schedule= (a degenerate single-epoch schedule
+    stays bitwise-equal to the static scenario VC run).
 
     `links` (a `repro.core.LinkSpec`) turns on heterogeneous-link
     semantics — per-dimension slot weights, pillar Z-masks, express
@@ -2380,8 +2521,9 @@ def simulate(g: LatticeGraph, pattern: str, load: float, *,
     if cfg.schedule is not None:
         ctx = _make_ctx(t, g, pattern, cfg.seed, cfg.queue,
                         schedule=ensure_compiled(cfg.schedule, g,
-                                                 cfg.slots),
-                        hist_bins=cfg.hist_bins, links=cfg.links)
+                                                 cfg.slots, cfg.links),
+                        hist_bins=cfg.hist_bins, vcs=cfg.vcs,
+                        credits=cfg.credits, links=cfg.links)
     else:
         ctx = _make_ctx(t, g, pattern, cfg.seed, cfg.queue, cfg.scenario,
                         hist_bins=cfg.hist_bins, vcs=cfg.vcs,
@@ -2434,7 +2576,8 @@ def simulate_sweep(g: LatticeGraph, pattern: str, loads, *,
         queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
         impl=cfg.impl, scenario=cfg.scenario,
         schedules=(None if cfg.schedule is None
-                   else [ensure_compiled(cfg.schedule, g, cfg.slots)]),
+                   else [ensure_compiled(cfg.schedule, g, cfg.slots,
+                                         cfg.links)]),
         hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits,
         links=cfg.links)
     out = runner(state, keys)
@@ -2489,11 +2632,6 @@ def simulate_scenario_sweep(g: LatticeGraph, pattern: str, scenarios,
         raise ValueError(
             "simulate_scenario_sweep takes its fault patterns from the "
             "`scenarios` list; leave config.scenario/config.schedule unset")
-    if cfg.links is not None and cfg.links.express:
-        raise ValueError(
-            "express overlays require a pristine fabric; "
-            "simulate_scenario_sweep rides the traced-mask program — "
-            "drop links.express or use simulate/simulate_sweep")
     scenarios = [s if s is not None else Scenario() for s in scenarios]
     if not scenarios:
         raise ValueError("simulate_scenario_sweep needs >= 1 scenario")
@@ -2549,6 +2687,8 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
                             tables: SimTables | None = None,
                             impl: str | None = None,
                             hist_bins: int | None = None,
+                            vcs: int | None = None,
+                            credits: int | None = None,
                             links: LinkSpec | None = None):
     """K transient-fault TIMELINES × (loads × seeds) as ONE device
     program — `simulate_scenario_sweep` generalized along the time axis.
@@ -2574,20 +2714,12 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
     `SimResult` carries its per-slot `SimTimeline`."""
     cfg = SimConfig.from_kwargs(
         config, slots=slots, warmup=warmup, queue=queue, seed=seed,
-        tables=tables, impl=impl, hist_bins=hist_bins, links=links)
+        tables=tables, impl=impl, hist_bins=hist_bins, vcs=vcs,
+        credits=credits, links=links)
     if cfg.scenario is not None or cfg.schedule is not None:
         raise ValueError(
             "simulate_schedule_sweep takes its timelines from the "
             "`schedules` list; leave config.scenario/config.schedule unset")
-    if cfg.links is not None and cfg.links.express:
-        raise ValueError(
-            "express-channel overlays require a pristine fabric (no "
-            "FaultSchedule timelines) — drop links.express or use "
-            "simulate/simulate_sweep")
-    if cfg.vcs > 1:
-        raise ValueError(
-            "transient FaultSchedule timelines are V=1-only for now; run "
-            "vcs>1 with a static scenario= instead")
     schedules = [s if isinstance(s, FaultSchedule)
                  else FaultSchedule.from_scenario(s) for s in schedules]
     if not schedules:
@@ -2608,12 +2740,14 @@ def simulate_schedule_sweep(g: LatticeGraph, pattern: str, schedules,
                      for s in schedules]
     loads = [float(l) for l in np.asarray(loads).ravel()]
     sl = _seed_list(cfg.seed, seeds)
-    compiled = [ensure_compiled(s, g, cfg.slots) for s in schedules]
+    compiled = [ensure_compiled(s, g, cfg.slots, cfg.links)
+                for s in schedules]
     runner, state, keys, t, _ = _sweep_plan(
         g, pattern, loads, slots=cfg.slots, warmup=cfg.warmup,
         queue=cfg.queue, seed=cfg.seed, seed_list=sl, tables=cfg.tables,
         impl=cfg.impl, scenario=None, schedules=compiled,
-        hist_bins=cfg.hist_bins, links=cfg.links)
+        hist_bins=cfg.hist_bins, vcs=cfg.vcs, credits=cfg.credits,
+        links=cfg.links)
     out = runner(state, keys)
     K, L, S = len(compiled), len(loads), len(sl or [cfg.seed])
     res = _result_grid(out, (K, L, S), cfg.impl, slots=cfg.slots,

@@ -254,18 +254,32 @@ def fault_aware_saturation_throughput(g: LatticeGraph, scenario,
 
 
 def fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
-                              pairs: int = 20_000,
-                              seed: int = 0) -> np.ndarray:
+                              pairs: int = 20_000, seed: int = 0,
+                              link_spec=None) -> np.ndarray:
     """Per-EPOCH Monte-Carlo channel loads of a transient-fault timeline
     (`repro.core.fault_schedule.FaultSchedule` / `CompiledSchedule`):
     the fault-aware BFS tables for ALL epochs are rebuilt in one compiled
     device program (`routing.fault_aware_next_hop_device`'s stacked-epoch
     mode), then each epoch's live-pair traffic is walked along its own
-    tables.  Returns (E, N, 2n) loads — the per-epoch load curve the
-    degraded saturation bound below derives from."""
+    tables.  Returns (E, N, 2n) loads — or (E, N, 2n+2X) with a
+    `link_spec` carrying express overlays, where the walk follows
+    weighted-shortest-path tables over the extended port axis and link
+    events may kill/repair express channels — the per-epoch load curve
+    the degraded saturation bound below derives from."""
     from .fault_schedule import ensure_compiled
     from .routing import fault_aware_next_hop_device
-    compiled = ensure_compiled(schedule, g, slots)
+    ls = link_spec if link_spec is not None and not link_spec.is_trivial \
+        else None
+    compiled = ensure_compiled(schedule, g, slots, ls)
+    if ls is not None:
+        dist, nh = fault_aware_next_hop_device(
+            g, compiled.link_ok_stack(g, ls), compiled.node_ok_stack(g),
+            link_spec=ls)
+        nbr = ls.extended_neighbors(g)
+        return np.stack([
+            _walk_loads(nbr, dist[e], nh[e], scen.node_ok(g), pairs, seed,
+                        link_ok=scen.link_ok(g, ls))
+            for e, scen in enumerate(compiled.epochs)])
     dist, nh = fault_aware_next_hop_device(
         g, compiled.link_ok_stack(g), compiled.node_ok_stack(g))
     return np.stack([
@@ -276,17 +290,57 @@ def fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
 
 def fault_aware_schedule_saturation(g: LatticeGraph, schedule,
                                     slots: int = 512, pairs: int = 20_000,
-                                    seed: int = 0) -> np.ndarray:
-    """(E,) per-epoch saturation bounds 1/max-load of a transient-fault
-    timeline — how the fabric's degraded capacity moves as links flap and
-    nodes die/return."""
-    loads = fault_aware_schedule_load(g, schedule, slots, pairs, seed)
+                                    seed: int = 0,
+                                    link_spec=None) -> np.ndarray:
+    """(E,) per-epoch saturation bounds of a transient-fault timeline —
+    how the fabric's degraded capacity moves as links flap and nodes
+    die/return.  Uniform fabrics use 1/max-load; a weighted `link_spec`
+    scales each channel's load by its slot cost first (the
+    `weighted_saturation_throughput` convention)."""
+    loads = fault_aware_schedule_load(g, schedule, slots, pairs, seed,
+                                      link_spec=link_spec)
+    if link_spec is not None and not link_spec.is_trivial:
+        w = link_spec.port_weights(g.n).astype(np.float64)
+        loads = loads * w[None, None, :]
     return 1.0 / loads.reshape(loads.shape[0], -1).max(axis=1)
 
 
 # ---------------------------------------------------------------------------
 # heterogeneous-link (LinkSpec) loads: weighted tables over extended ports
 # ---------------------------------------------------------------------------
+
+def _walk_loads(nbr: np.ndarray, dist: np.ndarray, next_hop: np.ndarray,
+                node_ok: np.ndarray, pairs: int, seed: int,
+                link_ok: np.ndarray | None = None) -> np.ndarray:
+    """Shared Monte-Carlo table walk over an arbitrary (N, P) port axis:
+    `pairs` uniform live-src → live-dst draws stepped along `next_hop`,
+    unreachable/self pairs redrawn out of the sample, loads scaled to one
+    packet per live node.  With `link_ok` every step additionally asserts
+    it never crosses a dead channel (express columns included)."""
+    N, P = nbr.shape
+    node_ok = np.asarray(node_ok, dtype=bool)
+    live = np.flatnonzero(node_ok)
+    if live.size < 2:
+        raise ValueError("scenario leaves fewer than 2 live nodes")
+    rng = np.random.default_rng(seed)
+    srcs = live[rng.integers(0, live.size, pairs)]
+    dsts = live[rng.integers(0, live.size, pairs)]
+    use = dist[srcs, dsts] > 0                   # reachable, not self
+    pos, dst = srcs[use].copy(), dsts[use]
+    n_used = pos.size
+    load = np.zeros((N, P), dtype=np.float64)
+    while pos.size:
+        p = next_hop[pos, dst]
+        assert (p >= 0).all(), "fault-aware walk hit an unreachable pair"
+        if link_ok is not None:
+            assert link_ok[pos, p].all(), \
+                "fault-aware walk stepped onto a dead channel"
+        np.add.at(load, (pos, p), 1.0)
+        pos = nbr[pos, p]
+        alive = pos != dst
+        pos, dst = pos[alive], dst[alive]
+    return load * (live.size / max(n_used, 1))
+
 
 def weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
                           seed: int = 0, scenario=None) -> np.ndarray:
@@ -297,41 +351,24 @@ def weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
     divert Z-traffic through the pillar columns.  Returns (N, P) with
     P = 2n + 2·X (the base (N, 2n) block keeps the `channel_load`
     convention; express columns follow).  Scaled to one packet per live
-    node.  An optional fault `scenario` composes — its masks restrict
-    the base columns exactly as in `fault_aware_channel_load`."""
+    node.  An optional fault `scenario` composes over the FULL extended
+    axis — dead_links may name express ports (they die like any link)
+    and traffic reroutes around them through the base lattice."""
     from .routing import fault_aware_next_hop_device
+    ls = link_spec if link_spec is not None and not link_spec.is_trivial \
+        else None
     if scenario is not None:
-        link_ok = scenario.link_ok(g)
+        link_ok = scenario.link_ok(g, ls)
         node_ok = np.asarray(scenario.node_ok(g), dtype=bool)
     else:
         link_ok = np.ones((g.order, 2 * g.n), dtype=bool)
         node_ok = np.ones(g.order, dtype=bool)
     dist, next_hop = fault_aware_next_hop_device(
         g, link_ok, node_ok, link_spec=link_spec)
-    if link_spec is not None and not link_spec.is_trivial:
-        P = link_spec.num_ports(g.n)
-        nbr = link_spec.extended_neighbors(g)
-    else:
-        P = 2 * g.n
-        nbr = g.neighbor_indices
-    live = np.flatnonzero(node_ok)
-    if live.size < 2:
-        raise ValueError("scenario leaves fewer than 2 live nodes")
-    rng = np.random.default_rng(seed)
-    srcs = live[rng.integers(0, live.size, pairs)]
-    dsts = live[rng.integers(0, live.size, pairs)]
-    use = dist[srcs, dsts] > 0                   # reachable, not self
-    pos, dst = srcs[use].copy(), dsts[use]
-    n_used = pos.size
-    load = np.zeros((g.order, P), dtype=np.float64)
-    while pos.size:
-        p = next_hop[pos, dst]
-        assert (p >= 0).all(), "weighted walk hit an unreachable pair"
-        np.add.at(load, (pos, p), 1.0)
-        pos = nbr[pos, p]
-        alive = pos != dst
-        pos, dst = pos[alive], dst[alive]
-    return load * (live.size / max(n_used, 1))
+    nbr = ls.extended_neighbors(g) if ls is not None else g.neighbor_indices
+    return _walk_loads(nbr, dist, next_hop, node_ok, pairs, seed,
+                       link_ok=None if scenario is None else
+                       scenario.link_ok(g, ls))
 
 
 def weighted_saturation_throughput(g: LatticeGraph, link_spec,

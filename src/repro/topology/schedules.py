@@ -51,7 +51,7 @@ class RingSchedule:
 
 
 def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray,
-                  link_spec=None) -> RingSchedule:
+                  link_spec=None, scenario=None) -> RingSchedule:
     """ring_labels: (k, n) lattice labels of the chips of one logical axis,
     in ring order.  Paths follow DOR over minimal routing records (all k
     logical edges routed in one batched engine call).
@@ -64,16 +64,37 @@ def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray,
     weights steer paths onto cheap dimensions.  The returned schedule
     then carries `edge_costs` (weighted slots per logical edge) and
     `port_weights`, which `verify_contention_free` /
-    `effective_ring_bandwidth` fold into their contention accounting."""
+    `effective_ring_bandwidth` fold into their contention accounting.
+
+    `scenario=` (a faulted `repro.core.Scenario`) routes the logical ring
+    edges AROUND dead links/nodes via the fault-aware BFS next-hop tables
+    (composes with `link_spec=` — dead_links may name express ports).  A
+    ring chip that is itself dead, or a logical edge the live fabric
+    disconnects, raises with the offending node/edge named — the caller
+    must re-place the ring, not silently run a broken collective."""
     ls = (link_spec if link_spec is not None
           and not link_spec.is_trivial else None)
+    scen = (scenario if scenario is not None
+            and (scenario.dead_links or scenario.dead_nodes) else None)
     k = ring_labels.shape[0]
     order = g.label_to_index(ring_labels)
-    if ls is not None:
+    if ls is not None or scen is not None:
         from repro.core.routing import fault_aware_next_hop_device
-        link_ok = np.ones((g.order, 2 * g.n), dtype=bool)
-        dist, nh = fault_aware_next_hop_device(g, link_ok, link_spec=ls)
-        nbr = ls.extended_neighbors(g)
+        if scen is not None:
+            link_ok = scen.link_ok(g, ls)
+            node_ok = np.asarray(scen.node_ok(g), dtype=bool)
+            dead = [int(u) for u in order if not node_ok[u]]
+            if dead:
+                raise ValueError(
+                    f"ring chip(s) {dead} are dead in scenario "
+                    f"{scen.name!r}; re-place the ring on live nodes")
+        else:
+            link_ok = np.ones((g.order, 2 * g.n), dtype=bool)
+            node_ok = None
+        dist, nh = fault_aware_next_hop_device(g, link_ok, node_ok,
+                                               link_spec=ls)
+        nbr = (ls.extended_neighbors(g) if ls is not None
+               else g.neighbor_indices)
         dsts = np.roll(np.asarray(order), -1)
         paths = []
         costs = []
@@ -81,8 +102,10 @@ def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray,
             u, d = int(order[t]), int(dsts[t])
             if u != d and dist[u, d] < 0:
                 raise ValueError(
-                    f"ring edge {u} -> {d} is unreachable under this "
-                    "LinkSpec (pillar mask cut the fabric)")
+                    f"ring edge {u} -> {d} is unreachable — the live "
+                    "fabric disconnects the ring"
+                    + (f" (scenario {scen.name!r})" if scen is not None
+                       else " (pillar mask cut the fabric)"))
             path = []
             pos = u
             while pos != d:
@@ -95,7 +118,8 @@ def ring_schedule(g: LatticeGraph, ring_labels: np.ndarray,
         return RingSchedule(node_order=order, edge_paths=paths,
                             dilation=float(np.mean(hops)),
                             edge_costs=np.asarray(costs, dtype=np.int64),
-                            port_weights=ls.port_weights(g.n))
+                            port_weights=(None if ls is None
+                                          else ls.port_weights(g.n)))
     router = make_router(g.matrix)
     recs = np.asarray(router(np.roll(ring_labels, -1, axis=0) - ring_labels))
     paths = []

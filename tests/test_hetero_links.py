@@ -282,11 +282,17 @@ def test_fused_rejects_nontrivial_spec():
 
 
 def test_express_config_guards():
-    with pytest.raises(ValueError, match="express"):
-        SimConfig(vcs=2, links=LinkSpec(express=((0, 2, 1),)))
-    with pytest.raises(ValueError, match="express"):
+    # ISSUE 9 lifted the pristine-fabric and vcs=1-only guards: express
+    # now composes with VCs and with fault scenarios/schedules.  The one
+    # remaining exclusion is the V=1 adaptive/escape heuristics, whose
+    # port scoring is base-lattice-only.
+    assert SimConfig(vcs=2, links=LinkSpec(express=((0, 2, 1),))).vcs == 2
+    assert SimConfig(links=LinkSpec(express=((0, 2, 1),)),
+                     scenario=Scenario(dead_links=((0, 0),))).links.express
+    with pytest.raises(ValueError, match="greedy"):
         SimConfig(links=LinkSpec(express=((0, 2, 1),)),
-                  scenario=Scenario(dead_links=((0, 0),)))
+                  scenario=Scenario(dead_links=((0, 0),),
+                                    policy="adaptive"))
     with pytest.raises(ValueError):
         LinkSpec(express=((0, 2, 1),), pillar_dim=2, pillar_every=2)
     with pytest.raises(ValueError):

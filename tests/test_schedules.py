@@ -43,6 +43,42 @@ def test_torus_axis_ring_is_dilation_one():
     assert verify_contention_free(sched)["contention_free"]
 
 
+def test_ring_schedule_routes_around_dead_link():
+    from repro.core import Scenario
+    g = Torus(8, 8)
+    labels = np.zeros((8, 2), dtype=np.int64)
+    labels[:, 0] = np.arange(8)           # a dimension-0 ring
+    pristine = ring_schedule(g, labels)
+    assert pristine.dilation == 1.0
+    # kill the +x link of chip (0,0): the 0 -> 1 logical edge must detour
+    scen = Scenario(dead_links=((0, 0),))
+    faulted = ring_schedule(g, labels, scenario=scen)
+    assert faulted.dilation > 1.0
+    dead = {(0, 0), (g.neighbor_indices[0, 0], 1)}
+    for path in faulted.edge_paths:
+        assert not dead & set(path)
+    # every path still ends at its logical destination
+    order = faulted.node_order
+    for t, path in enumerate(faulted.edge_paths):
+        pos = int(order[t])
+        for u, p in path:
+            assert u == pos
+            pos = int(g.neighbor_indices[u, p])
+        assert pos == int(order[(t + 1) % len(order)])
+
+
+def test_ring_schedule_dead_chip_and_disconnect_raise():
+    from repro.core import Scenario
+    g = Torus(8)
+    labels = np.arange(4, dtype=np.int64)[:, None] * 2
+    with pytest.raises(ValueError, match="dead in scenario"):
+        ring_schedule(g, labels, scenario=Scenario(dead_nodes=(2,)))
+    # cutting both arcs between chips 0 and 2 disconnects the ring
+    cut = Scenario(dead_links=((0, 0), (7, 0)))
+    with pytest.raises(ValueError, match="unreachable"):
+        ring_schedule(g, labels, scenario=cut)
+
+
 def test_ppermute_ring_allreduce_equals_psum():
     out = run_in_subprocess("""
         from repro.topology.schedules import ppermute_ring_allreduce

@@ -54,10 +54,15 @@ def test_post_init_validation(bad, match):
         SimConfig(**bad)
 
 
-def test_vcs_rejects_schedule():
+def test_vcs_composes_with_schedule():
+    """ISSUE 9 inverted the V=1-only guard: vcs>=2 + schedule= is now a
+    supported cell (the VC slot steps thread the per-epoch masks)."""
     sched = FaultSchedule(events=((10, "link_down", (0, 0)),))
-    with pytest.raises(ValueError, match="V=1-only"):
-        SimConfig(vcs=2, schedule=sched)
+    cfg = SimConfig(vcs=2, schedule=sched, slots=64, warmup=0, seed=1,
+                    tables=TAB)
+    r = simulate(G, "uniform", 0.4, config=cfg)
+    assert r.timeline is not None and r.timeline.conservation_ok()
+    assert r.vc_delivered is not None and int(r.vc_delivered.sum()) > 0
 
 
 def test_from_kwargs_conflict_and_unknown():
@@ -111,9 +116,14 @@ def test_simulate_schedule_sweep_accepts_config():
     rows = simulate_schedule_sweep(G, "uniform", scheds, loads=(0.4,),
                                    config=CFG)
     assert len(rows) == 2
-    with pytest.raises(ValueError, match="V=1-only"):
-        simulate_schedule_sweep(G, "uniform", scheds,
-                                config=CFG.replace(vcs=2))
+    # vcs>=2 rides the same sweep program since ISSUE 9 (warmup=0: the
+    # per-slot ledger only balances when every injection is counted)
+    vrows = simulate_schedule_sweep(G, "uniform", scheds, loads=(0.4,),
+                                    config=CFG.replace(vcs=2, warmup=0))
+    assert len(vrows) == 2
+    for row in vrows:
+        assert row[0].timeline is not None
+        assert row[0].timeline.conservation_ok()
 
 
 def test_scenario_schedule_exclusion_same_error_everywhere():
