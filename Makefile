@@ -13,12 +13,14 @@ BENCH_TOLERANCE ?= 0.30
 # simulator, scenario-engine & transient-timeline slots/s + the latency
 # histogram overhead ratio + the VC router's overhead/saturation rows +
 # the heterogeneous-link overhead/express-saturation rows + the
-# fault-composition VC-under-schedule/faulted-express rows);
+# fault-composition VC-under-schedule/faulted-express rows + the
+# topology explorer's candidates/s and front-quality rows);
 # keep in sync with BENCH_baseline.json
-BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency,vc,hetero,compose
+BENCH_GATE_SECTIONS = routing,sim,scenarios,transient,latency,vc,hetero,compose,explore
 
 .PHONY: test test-fast bench bench-quick bench-routing bench-smoke \
-        bench-nightly bench-check bench-baseline lint
+        bench-nightly bench-check bench-baseline lint \
+        explore explore-smoke
 
 # --durations surfaces the slowest tests so suite-time regressions are
 # visible in every CI log
@@ -36,7 +38,7 @@ test-fast:
 	    tests/test_routing_engine.py tests/test_symmetry.py \
 	    tests/test_fault_bfs.py tests/test_fault_schedule.py \
 	    tests/test_propcheck.py tests/test_check_regression.py \
-	    tests/test_bench_driver.py
+	    tests/test_bench_driver.py tests/test_explore.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -55,7 +57,7 @@ bench-routing:
 # histogram-overhead rows); exercises the whole bench plumbing
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
-	    --only table1,table2,throughput,sim,scenarios,transient,latency,vc,hetero,compose
+	    --only table1,table2,throughput,sim,scenarios,transient,latency,vc,hetero,compose,explore
 
 # the nightly CI job: FULL mode, every section (incl. the fused-parity
 # differential cells in `sim` and the N=4096 sweeps), JSON for the
@@ -80,6 +82,18 @@ bench-check:
 bench-baseline:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick \
 	    --only $(BENCH_GATE_SECTIONS) --json BENCH_baseline.json
+
+# closed-loop topology exploration (ISSUE 10): seeded evolutionary
+# search over HNF lattices + mixed-radix tori, Pareto front over
+# throughput x p99 x faulted capacity with RTT/FCC/BCC + torus pinned.
+# `explore` is the full acceptance demo; `explore-smoke` is the CI
+# budget (<=8 generations, analytic p99, N <= a few hundred cells) and
+# FAILS unless a discovered lattice still dominates the torus baseline.
+explore:
+	PYTHONPATH=src $(PY) -m repro.explore --require-dominance
+
+explore-smoke:
+	PYTHONPATH=src $(PY) -m repro.explore --smoke --require-dominance
 
 # ruff config lives in pyproject.toml [tool.ruff]; skips politely when
 # ruff isn't installed (offline containers)

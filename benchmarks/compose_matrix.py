@@ -11,7 +11,7 @@ Two committed records of the composed fault machinery:
     (four gathers and a dead-queue reconciliation per slot).
 
   * `compose/express_fault` — routed saturation
-    (`weighted_channel_load` Monte-Carlo, deterministic given the seed)
+    (`channel_load_stats` Monte-Carlo, deterministic given the seed)
     of the T(8,4) express overlay pristine, with half of its
     express channels dead, and the bare base fabric.  All three carry
     the `_sat_phits` gate suffix: the gate pins GRACEFUL degradation —
@@ -25,7 +25,7 @@ import time
 import numpy as np
 
 from repro.core import (FaultSchedule, LinkSpec, Scenario, SimConfig,
-                        Torus, weighted_channel_load)
+                        Torus, channel_load_stats)
 from repro.core.simulation import build_tables, simulate
 
 from .util import emit
@@ -70,8 +70,8 @@ def main(quick: bool = False) -> None:
     w = ls.port_weights(mixed.n).astype(np.float64)
 
     def sat(scenario=None):
-        load = weighted_channel_load(mixed, ls, pairs=pairs, seed=1,
-                                     scenario=scenario)
+        load = channel_load_stats(mixed, links=ls, scenario=scenario,
+                                  pairs=pairs, seed=1)["load"]
         return float(1.0 / (load * w[None, :]).max())
 
     # every 2nd node's +express port: enough kills to move the routed
@@ -80,8 +80,8 @@ def main(quick: bool = False) -> None:
     dead = Scenario(dead_links=tuple(
         (u, 2 * mixed.n) for u in range(0, mixed.order, 2)))
     pristine, faulted = sat(), sat(dead)
-    base_load = weighted_channel_load(mixed, LinkSpec(dim_weights=(1, 1)),
-                                      pairs=pairs, seed=1)
+    base_load = channel_load_stats(mixed, links=LinkSpec(dim_weights=(1, 1)),
+                                   pairs=pairs, seed=1)["load"]
     base = float(1.0 / base_load.max())
     emit(f"compose/express_fault/N={mixed.order}", 0.0,
          f"express_sat_phits={pristine:.4f};"

@@ -1,0 +1,61 @@
+"""Topology-explorer throughput + front quality (ISSUE 10).
+
+Two committed records of the closed-loop search:
+
+  * `explore/loop` — wall-clock candidate throughput of the analytic
+    evolutionary loop (`candidates_per_s`, gated): every candidate pays
+    three scored objectives (pristine saturation, worst-epoch faulted
+    saturation under the canonical schedule, the analytic p99 proxy)
+    through the unified surface on the host backend, so this row prices
+    the whole evaluate-and-archive path.
+
+  * `explore/front/seed0` — deterministic front quality at the
+    committed seed (analytic mode + host BFS + seeded numpy walks ⇒
+    bit-stable): the best discovered candidate's saturation and faulted
+    capacity carry the `_sat_phits` gate suffix, and `dominates_torus`
+    records the acceptance fact itself — a regression here means the
+    search stopped rediscovering BCC-class lattices that beat the
+    same-order mixed-radix torus, not a timing.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.explore import EvalSettings, SearchSpace, dominates, explore
+
+from .util import emit
+
+SEED = 0
+
+
+def main(quick: bool = False) -> None:
+    generations, population = (2, 4) if quick else (4, 6)
+    settings = EvalSettings(mode="analytic", pairs=1024 if quick else 2048,
+                            seed=SEED)
+    space = SearchSpace()
+
+    t0 = time.perf_counter()
+    result = explore(space, settings, generations=generations,
+                     population=population, seed=SEED)
+    elapsed = time.perf_counter() - t0
+    offered = result.candidates + len(space.baselines())
+    emit(f"explore/loop/gen={generations}", elapsed * 1e6 / offered,
+         f"candidates_per_s={offered / elapsed:.2f};"
+         f"evaluations={result.evaluations};"
+         f"mode=analytic")
+
+    archive = result.archive
+    torus = next(e for e in archive.entries
+                 if e.baseline and e.candidate.name.startswith("T("))
+    disc = archive.discovered()
+    best = max(disc, key=lambda e: e.objectives.throughput)
+    wins = any(dominates(e.objectives, torus.objectives) for e in disc)
+    emit(f"explore/front/seed{SEED}", 0.0,
+         f"front_best_sat_phits={best.objectives.throughput:.4f};"
+         f"front_fault_sat_phits={best.objectives.faulted:.4f};"
+         f"torus_sat_phits={torus.objectives.throughput:.4f};"
+         f"dominates_torus={int(wins)}")
+
+
+if __name__ == "__main__":
+    main()

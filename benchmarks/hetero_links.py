@@ -11,7 +11,7 @@ Two committed records of the ISSUE 8 overlay machinery:
     handful of wheres on top of the V=1 step).
 
   * `hetero/express` — the mixed-radix acceptance cell: routed
-    saturation (`weighted_channel_load` Monte-Carlo, deterministic given
+    saturation (`channel_load_stats` Monte-Carlo, deterministic given
     the seed) of T(8,4) bare, T(8,4) with a span-2 express overlay on
     the long axis, and the same-order BCC(2) lattice peer.  All three
     carry the `_sat_phits` gate suffix, so the gate pins the express win
@@ -22,8 +22,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (BCC, LinkSpec, SimConfig, Torus,
-                        weighted_saturation_throughput)
+from repro.core import BCC, LinkSpec, SimConfig, Torus, saturation
 from repro.core.simulation import build_tables, simulate
 
 from .util import emit
@@ -60,12 +59,12 @@ def main(quick: bool = False) -> None:
     # ---- express overlay vs the mixed-radix ceiling and the BCC peer ----
     pairs = 5_000 if quick else 20_000
     mixed = Torus(8, 4)
-    base = weighted_saturation_throughput(
-        mixed, LinkSpec(dim_weights=(1, 1)), pairs=pairs)
-    ex = weighted_saturation_throughput(
-        mixed, LinkSpec(express=((0, 2, 1),)), pairs=pairs)
-    peer = weighted_saturation_throughput(
-        BCC(2), LinkSpec(dim_weights=(1, 1, 1)), pairs=pairs)
+    base = saturation(mixed, links=LinkSpec(dim_weights=(1, 1)),
+                      pairs=pairs)
+    ex = saturation(mixed, links=LinkSpec(express=((0, 2, 1),)),
+                    pairs=pairs)
+    peer = saturation(BCC(2), links=LinkSpec(dim_weights=(1, 1, 1)),
+                      pairs=pairs)
     emit(f"hetero/express/N={mixed.order}", 0.0,
          f"express_sat_phits={ex:.4f};base_sat_phits={base:.4f};"
          f"peer_sat_phits={peer:.4f};"

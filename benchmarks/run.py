@@ -16,11 +16,11 @@ import platform
 import sys
 import traceback
 
-from . import (compose_matrix, fig5_8_simulation, hetero_links,
-               latency_telemetry, roofline, routing_throughput,
-               scenario_sim, sim_throughput, table1_distances,
-               table2_lattices, throughput_bounds, topology_collectives,
-               transient_sim, util, vc_router)
+from . import (compose_matrix, explore_bench, fig5_8_simulation,
+               hetero_links, latency_telemetry, roofline,
+               routing_throughput, scenario_sim, sim_throughput,
+               table1_distances, table2_lattices, throughput_bounds,
+               topology_collectives, transient_sim, util, vc_router)
 from .util import header
 
 SECTIONS = {
@@ -35,6 +35,7 @@ SECTIONS = {
     "vc": vc_router.main,
     "hetero": hetero_links.main,
     "compose": compose_matrix.main,
+    "explore": explore_bench.main,
     "fig5_8": fig5_8_simulation.main,
     "topology": topology_collectives.main,
     "roofline": roofline.main,

@@ -7,14 +7,14 @@ import numpy as np
 
 from repro.core import BCC, FCC, PC, Torus
 from repro.core.simulation import simulate
-from repro.topology.collective_model import analyze_pod
+from repro.topology.collective_model import PodOptions, analyze_pod
 from repro.topology.placement import best_embedding
 from repro.topology.upgrade import migration_stats, upgrade_plan, upgrade_path_names
 
 print("== pod topologies (paper §3.4 at TPU scale) ==")
 for name, g, ts in [("BCC(4)/256", BCC(4), None), ("T(8,8,4)", Torus(8, 8, 4), (8, 8, 4)),
                     ("FCC(8)/1024", FCC(8), None), ("T(16,8,8)", Torus(16, 8, 8), (16, 8, 8))]:
-    r = analyze_pod(name, g, ts, measure_routed=True)
+    r = analyze_pod(name, g, ts, options=PodOptions(measure_routed=True))
     print(f"  {r.name:12} D={r.diameter:<3} k̄={r.avg_distance:.2f} "
           f"capacity={r.uniform_capacity:.3f} (routed {r.routed_capacity:.3f}) "
           f"phits/cyc/node all-to-all(256MB)={r.alltoall_256MB_ms:.1f} ms")

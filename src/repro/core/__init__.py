@@ -2,20 +2,21 @@
 contribution), exact integer-matrix machinery, symmetry, routing, distance
 analysis and throughput bounds."""
 from . import intmat
+from .condition import NetworkCondition
 from .crystals import (BCC, FCC, PC, RTT, FourD_BCC, FourD_FCC, Lip, Torus,
                        bcc_matrix, boxplus, crystal_for_order, direct_sum,
                        fcc_matrix, fourd_bcc_matrix, fourd_fcc_matrix,
                        lip_matrix, nd_bcc_matrix, nd_fcc_matrix, nd_pc_matrix,
                        pc_matrix, rtt_matrix, torus_matrix, upgrade_path)
 from .distances import (DistanceSummary, bcc_average_distance, bcc_diameter,
-                        faulted_average_distance, faulted_diameter,
-                        faulted_distance_matrix, faulted_distance_profile,
-                        faulted_distance_sweep, faulted_schedule_stats,
-                        fcc_average_distance, fcc_diameter,
-                        mixed_torus_diameter, pc_average_distance,
-                        pc_diameter, summarize, torus_average_distance,
-                        weighted_average_distance, weighted_diameter,
-                        weighted_distance_matrix)
+                        distance_stats, faulted_average_distance,
+                        faulted_diameter, faulted_distance_matrix,
+                        faulted_distance_profile, faulted_distance_sweep,
+                        faulted_schedule_stats, fcc_average_distance,
+                        fcc_diameter, mixed_torus_diameter,
+                        pc_average_distance, pc_diameter, summarize,
+                        torus_average_distance, weighted_average_distance,
+                        weighted_diameter, weighted_distance_matrix)
 from .fault_schedule import CompiledSchedule, FaultSchedule
 from .lattice import LatticeGraph
 from .link_spec import LinkSpec
@@ -36,14 +37,15 @@ from .symmetry import (bcc_lift_is_never_symmetric, is_linear_automorphism,
                        theorem12_matrix_first_family,
                        theorem12_matrix_second_family)
 from .throughput import (bcc_throughput_bound, channel_load,
-                         channel_load_device, channel_load_uniform,
-                         fault_aware_channel_load,
+                         channel_load_device, channel_load_stats,
+                         channel_load_uniform, fault_aware_channel_load,
                          fault_aware_saturation_throughput,
                          fault_aware_schedule_load,
                          fault_aware_schedule_saturation,
                          fcc_throughput_bound, measured_saturation_throughput,
                          mixed_torus_throughput_bound, pc_throughput_bound,
-                         symmetric_throughput_bound, weighted_channel_load,
+                         saturation, symmetric_throughput_bound,
+                         weighted_channel_load,
                          weighted_saturation_throughput)
 
 __all__ = [
@@ -76,6 +78,7 @@ __all__ = [
     "FaultSchedule", "CompiledSchedule", "faulted_schedule_stats",
     "fault_aware_schedule_load", "fault_aware_schedule_saturation",
     "SimConfig", "credit_vc_select", "LinkSpec",
+    "NetworkCondition", "distance_stats", "channel_load_stats", "saturation",
     "weighted_distance_matrix", "weighted_average_distance",
     "weighted_diameter", "weighted_channel_load",
     "weighted_saturation_throughput",

@@ -1,0 +1,148 @@
+"""Unified analytic evaluation condition (`NetworkCondition`).
+
+PRs 3–9 grew the analytic layer eleven entry points — `faulted_*`,
+`weighted_*`, `fault_aware_*`, `fault_aware_schedule_*` — one per
+combination of {static faults, fault timeline, heterogeneous links} ×
+{distances, channel loads, saturation}.  `NetworkCondition` bundles the
+*condition* of the fabric into ONE frozen value object, and the three
+facades dispatch on it:
+
+    cond = NetworkCondition(scenario=Scenario.random_link_faults(g, 4),
+                            links=LinkSpec(dim_weights=(1, 1, 2)))
+    distances.distance_stats(g, condition=cond)
+    throughput.channel_load_stats(g, condition=cond)
+    throughput.saturation(g, condition=cond)
+
+This mirrors the PR 7 `SimConfig` migration exactly: the facades also
+accept the condition fields as keyword arguments, resolved through
+`NetworkCondition.from_kwargs`, which raises when a kwarg is passed
+ALONGSIDE a condition carrying the same field (an ambiguous call is a
+bug at the call site, never a silent preference).  Validation that used
+to be duplicated per entry point (`scenario`/`schedule` mutual
+exclusion, backend vocabulary) lives once in `__post_init__`.
+
+`SimConfig` names *how to run the simulator*; `NetworkCondition` names
+*what state the fabric is in* — the two compose (e.g. the explorer's
+evaluator holds one of each per candidate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields, replace
+
+from .fault_schedule import CompiledSchedule, FaultSchedule
+from .link_spec import LinkSpec
+from .scenario import Scenario
+
+BFS_BACKENDS = ("auto", "device", "host")
+
+# fields a facade may also receive as a keyword argument; used by
+# `from_kwargs` to build the condition and to name conflicts precisely
+_FIELD_NAMES: tuple[str, ...] = (
+    "scenario", "schedule", "links", "slots", "pairs", "seed", "backend")
+
+
+@dataclass(frozen=True)
+class NetworkCondition:
+    """Frozen bundle of every fabric-state parameter the analytic layer
+    dispatches on (the per-call inputs — the graph itself — stay call
+    arguments: they name *what* to evaluate, the condition names *under
+    which faults/links/sampling*).
+
+      * ``scenario`` — static fault pattern (`repro.core.Scenario`);
+      * ``schedule`` — transient fault timeline (`FaultSchedule` or an
+        already-compiled `CompiledSchedule`); mutually exclusive with
+        ``scenario``, and switches every facade to per-epoch output;
+      * ``links``    — heterogeneous `LinkSpec` (weights / pillars /
+        express), composable with either of the above;
+      * ``slots``    — timeline horizon used to compile a ``schedule``;
+      * ``pairs``/``seed`` — Monte-Carlo sample size and RNG seed for
+        the channel-load walks;
+      * ``backend``  — "auto" | "device" | "host" for the BFS table
+        rebuilds and the pristine routing walk.
+    """
+
+    scenario: Scenario | None = None
+    schedule: FaultSchedule | CompiledSchedule | None = None
+    links: LinkSpec | None = None
+    slots: int = 512
+    pairs: int = 20_000
+    seed: int = 0
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.scenario is not None and self.schedule is not None:
+            # same home, same message as SimConfig's exclusivity check
+            raise ValueError("pass either scenario= or schedule=, not both")
+        if self.scenario is not None and not isinstance(self.scenario,
+                                                        Scenario):
+            raise TypeError(
+                f"scenario= expects a Scenario, got "
+                f"{type(self.scenario).__name__}")
+        if self.schedule is not None and not isinstance(
+                self.schedule, (FaultSchedule, CompiledSchedule)):
+            raise TypeError(
+                f"schedule= expects a FaultSchedule or CompiledSchedule, "
+                f"got {type(self.schedule).__name__}")
+        if self.links is not None and not isinstance(self.links, LinkSpec):
+            raise TypeError(
+                f"links= expects a LinkSpec, got "
+                f"{type(self.links).__name__}")
+        if self.slots <= 0:
+            raise ValueError(f"slots must be positive, got {self.slots}")
+        if self.pairs <= 0:
+            raise ValueError(f"pairs must be positive, got {self.pairs}")
+        if self.backend not in BFS_BACKENDS:
+            raise ValueError(
+                f"unknown analytic backend {self.backend!r}; expected one "
+                f"of {BFS_BACKENDS}")
+
+    # -- dispatch helpers ---------------------------------------------------
+    @property
+    def is_pristine(self) -> bool:
+        """No faults, no timeline, no (non-trivial) heterogeneity."""
+        return ((self.scenario is None or self.scenario.is_trivial)
+                and self.schedule is None
+                and (self.links is None or self.links.is_trivial))
+
+    @property
+    def router_backend(self) -> str:
+        """This condition's backend in `routing.make_router` vocabulary
+        ("host" → the numpy oracle, "device" → the jitted engine)."""
+        return {"auto": "auto", "device": "jax", "host": "numpy"}[self.backend]
+
+    # -- the facade-kwarg shim ----------------------------------------------
+    @classmethod
+    def from_kwargs(cls, condition: "NetworkCondition | None" = None,
+                    **kwargs) -> "NetworkCondition":
+        """Resolve `condition=` plus per-call kwargs into one
+        `NetworkCondition`.  kwargs valued None mean "not passed"; passing
+        a real value for a field while also passing `condition` raises —
+        the call is ambiguous, and silently preferring either side would
+        hide bugs (the `SimConfig.from_kwargs` contract)."""
+        unknown = set(kwargs) - set(_FIELD_NAMES)
+        if unknown:
+            raise TypeError(
+                f"unknown condition kwargs: {sorted(unknown)}; "
+                f"NetworkCondition fields are {list(_FIELD_NAMES)}")
+        given = {k: v for k, v in kwargs.items() if v is not None}
+        if condition is None:
+            return cls(**given)
+        if not isinstance(condition, cls):
+            raise TypeError(
+                f"condition= expects a NetworkCondition, got "
+                f"{type(condition).__name__}")
+        if given:
+            raise ValueError(
+                f"both condition= and kwarg(s) {sorted(given)} were "
+                "passed; put every fabric parameter on the "
+                "NetworkCondition (e.g. replace(condition, ...)) or drop "
+                "condition= and use kwargs")
+        return condition
+
+    def replace(self, **changes) -> "NetworkCondition":
+        """`dataclasses.replace` convenience (re-validates)."""
+        return replace(self, **changes)
+
+    def as_kwargs(self) -> dict:
+        """The condition as a keyword dict (field name → value)."""
+        return {f.name: getattr(self, f.name) for f in fields(self)}

@@ -2,14 +2,32 @@
 BFS-based measurement utilities.
 
 Average-distance convention (matches Table 1): k̄ = Σ_v d(0, v) / (N − 1).
+
+Degraded/weighted summaries route through ONE facade,
+`distance_stats(g, condition=...)` — a `repro.core.NetworkCondition`
+names the fabric state (static scenario, fault timeline, heterogeneous
+links) and the facade dispatches to the matching engine.  The historical
+per-combination names (`faulted_average_distance`, `weighted_diameter`,
+`faulted_schedule_stats`, ...) remain as `DeprecationWarning` shims.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
+from .condition import NetworkCondition
 from .lattice import LatticeGraph
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """One shared DeprecationWarning voice for the analytic shims (see
+    docs/simulator.md, 'Unified analytic surface')."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (docs/simulator.md, "
+        f"'Unified analytic surface')",
+        DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -187,8 +205,8 @@ def faulted_distance_sweep(g: LatticeGraph, scenarios) -> dict:
             "reachable_pairs": np.asarray(pairs, np.int64)}
 
 
-def faulted_schedule_stats(g: LatticeGraph, schedule, slots: int = 512
-                           ) -> dict:
+def _faulted_schedule_stats(g: LatticeGraph, schedule, slots: int = 512
+                            ) -> dict:
     """Per-EPOCH degraded-distance curves of a transient-fault timeline
     (`repro.core.fault_schedule.FaultSchedule`, or an already-compiled
     `CompiledSchedule`): the schedule's epochs are static scenarios, so
@@ -215,8 +233,8 @@ def faulted_distance_profile(g: LatticeGraph, scenario,
     return np.bincount(d) if d.size else np.zeros(1, dtype=np.int64)
 
 
-def faulted_average_distance(g: LatticeGraph, scenario,
-                             dist: np.ndarray | None = None) -> float:
+def _faulted_average_distance(g: LatticeGraph, scenario,
+                              dist: np.ndarray | None = None) -> float:
     """Mean distance over ordered live reachable pairs of the degraded
     graph — the k̄ entering the Δ/k̄-style saturation intuition once links
     or nodes die."""
@@ -228,8 +246,8 @@ def faulted_average_distance(g: LatticeGraph, scenario,
     return float(d.mean())
 
 
-def faulted_diameter(g: LatticeGraph, scenario,
-                     dist: np.ndarray | None = None) -> int:
+def _faulted_diameter(g: LatticeGraph, scenario,
+                      dist: np.ndarray | None = None) -> int:
     """Max live-pair distance of the degraded graph."""
     if dist is None:
         dist = faulted_distance_matrix(g, scenario)
@@ -258,8 +276,8 @@ def weighted_distance_matrix(g: LatticeGraph, link_spec,
         g, link_ok, node_ok, link_spec=link_spec)[0]
 
 
-def weighted_average_distance(g: LatticeGraph, link_spec,
-                              dist: np.ndarray | None = None) -> float:
+def _weighted_average_distance(g: LatticeGraph, link_spec,
+                               dist: np.ndarray | None = None) -> float:
     """Mean weighted cost over ordered reachable pairs — the k̄ entering
     the Δ/k̄ saturation intuition once slot costs are non-uniform."""
     if dist is None:
@@ -270,12 +288,126 @@ def weighted_average_distance(g: LatticeGraph, link_spec,
     return float(d.mean())
 
 
-def weighted_diameter(g: LatticeGraph, link_spec,
-                      dist: np.ndarray | None = None) -> int:
+def _weighted_diameter(g: LatticeGraph, link_spec,
+                       dist: np.ndarray | None = None) -> int:
     """Max weighted pair cost (slots) of the heterogeneous fabric."""
     if dist is None:
         dist = weighted_distance_matrix(g, link_spec)
     return int(dist.max())
+
+
+# ---------------------------------------------------------------------------
+# unified analytic surface: distance_stats facade + deprecation shims
+# ---------------------------------------------------------------------------
+
+def _matrix_stats(dist: np.ndarray) -> dict:
+    """Reduce one (N, N) distance/cost matrix (−1 = unreachable) to the
+    facade's summary dict, keeping the shim conventions exactly."""
+    d = dist[dist > 0]
+    if d.size == 0:
+        raise ValueError("no reachable pairs under this condition")
+    return {"average_distance": float(d.mean()),
+            "diameter": int(dist.max()),
+            "reachable_pairs": int(d.size)}
+
+
+def distance_stats(g: LatticeGraph,
+                   condition: NetworkCondition | None = None,
+                   **kwargs) -> dict:
+    """Distance summary of `g` under one `repro.core.NetworkCondition` —
+    THE entry point for degraded/weighted distance metrics (the shimmed
+    `faulted_*`/`weighted_*` names all dispatch through here).
+
+    Returns {"average_distance", "diameter", "reachable_pairs"}:
+
+      * pristine condition — the closed BFS values (`g.average_distance`,
+        `g.diameter`) over all N·(N−1) ordered pairs;
+      * static `scenario` — live-pair statistics of the degraded graph
+        (fault-aware BFS rebuild, `condition.backend` selects the
+        engine);
+      * `links` (LinkSpec) — weighted shortest-path costs over the
+        extended port axis, composable with a static `scenario`;
+      * `schedule` (FaultSchedule) — per-EPOCH arrays plus
+        `epoch_start_slot` ((E,) — epoch e covers slots
+        [start[e], start[e+1])); lanes left totally disconnected report
+        average_distance=NaN / diameter=0 / reachable_pairs=0 (the
+        `faulted_distance_sweep` convention) instead of raising.
+
+    Condition fields may also be passed as kwargs (`scenario=...`,
+    `links=...`); passing both a `condition` and kwargs raises."""
+    cond = NetworkCondition.from_kwargs(condition, **kwargs)
+    links = cond.links if cond.links is not None else None
+    if cond.schedule is not None:
+        if links is not None and not links.is_trivial:
+            # weighted × timeline: per-epoch min-plus relaxations (the
+            # sweep engine is hop-count only, so this walks epochs on
+            # host — E is small by construction)
+            from .fault_schedule import ensure_compiled
+            compiled = ensure_compiled(cond.schedule, g, cond.slots, links)
+            avg, diam, pairs = [], [], []
+            for scen in compiled.epochs:
+                dist = weighted_distance_matrix(g, links, scenario=scen)
+                d = dist[dist > 0]
+                avg.append(float(d.mean()) if d.size else float("nan"))
+                diam.append(int(dist.max()) if d.size else 0)
+                pairs.append(int(d.size))
+            return {"average_distance": np.asarray(avg, np.float64),
+                    "diameter": np.asarray(diam, np.int64),
+                    "reachable_pairs": np.asarray(pairs, np.int64),
+                    "epoch_start_slot": np.asarray(compiled.starts,
+                                                   np.int64)}
+        return _faulted_schedule_stats(g, cond.schedule, cond.slots)
+    if links is not None:
+        return _matrix_stats(
+            weighted_distance_matrix(g, links, scenario=cond.scenario))
+    if cond.scenario is not None:
+        return _matrix_stats(
+            faulted_distance_matrix(g, cond.scenario, cond.backend))
+    return {"average_distance": float(g.average_distance),
+            "diameter": int(g.diameter),
+            "reachable_pairs": g.order * (g.order - 1)}
+
+
+def faulted_average_distance(g: LatticeGraph, scenario,
+                             dist: np.ndarray | None = None) -> float:
+    """Deprecated shim — `distance_stats(g, scenario=...)`."""
+    _warn_deprecated(
+        "faulted_average_distance",
+        "distance_stats(g, scenario=...)['average_distance']")
+    return _faulted_average_distance(g, scenario, dist)
+
+
+def faulted_diameter(g: LatticeGraph, scenario,
+                     dist: np.ndarray | None = None) -> int:
+    """Deprecated shim — `distance_stats(g, scenario=...)`."""
+    _warn_deprecated("faulted_diameter",
+                     "distance_stats(g, scenario=...)['diameter']")
+    return _faulted_diameter(g, scenario, dist)
+
+
+def faulted_schedule_stats(g: LatticeGraph, schedule, slots: int = 512
+                           ) -> dict:
+    """Deprecated shim — `distance_stats(g, schedule=...)`."""
+    _warn_deprecated("faulted_schedule_stats",
+                     "distance_stats(g, schedule=..., slots=...)")
+    return _faulted_schedule_stats(g, schedule, slots)
+
+
+def weighted_average_distance(g: LatticeGraph, link_spec,
+                              dist: np.ndarray | None = None) -> float:
+    """Deprecated shim — `distance_stats(g, links=...)`."""
+    _warn_deprecated(
+        "weighted_average_distance",
+        "distance_stats(g, links=...)['average_distance']")
+    return _weighted_average_distance(g, link_spec, dist)
+
+
+def weighted_diameter(g: LatticeGraph, link_spec,
+                      dist: np.ndarray | None = None) -> int:
+    """Deprecated shim — `distance_stats(g, links=...)`."""
+    _warn_deprecated("weighted_diameter",
+                     "distance_stats(g, links=...)['diameter']")
+    return _weighted_diameter(g, link_spec, dist)
 
 
 @dataclass(frozen=True)

@@ -9,8 +9,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from .distances import (bcc_average_distance, fcc_average_distance,
-                        pc_average_distance)
+from .condition import NetworkCondition
+from .distances import (_warn_deprecated, bcc_average_distance,
+                        fcc_average_distance, pc_average_distance)
 from .lattice import LatticeGraph
 
 
@@ -193,9 +194,10 @@ def simulated_saturation_load(g: LatticeGraph, loads, *, pattern="uniform",
 # degraded-graph (scenario) loads: fault-aware table rebuild
 # ---------------------------------------------------------------------------
 
-def fault_aware_channel_load(g: LatticeGraph, scenario,
-                             pairs: int = 20_000, seed: int = 0,
-                             tables=None, backend: str = "auto") -> np.ndarray:
+def _fault_aware_channel_load(g: LatticeGraph, scenario,
+                              pairs: int = 20_000, seed: int = 0,
+                              tables=None,
+                              backend: str = "auto") -> np.ndarray:
     """Monte-Carlo channel loads on a *degraded* graph: `pairs` uniform
     live-src → live-dst pairs are walked along the fault-aware BFS
     next-hop tables (`routing.fault_aware_next_hop`), so the load
@@ -244,18 +246,18 @@ def fault_aware_channel_load(g: LatticeGraph, scenario,
     return load * (live.size / max(n_used, 1))
 
 
-def fault_aware_saturation_throughput(g: LatticeGraph, scenario,
-                                      pairs: int = 20_000,
-                                      seed: int = 0) -> float:
+def _fault_aware_saturation_throughput(g: LatticeGraph, scenario,
+                                       pairs: int = 20_000,
+                                       seed: int = 0) -> float:
     """1/max-link-load of the degraded graph under uniform live-pair
     traffic routed around the faults (phits/cycle/node)."""
     return float(
-        1.0 / fault_aware_channel_load(g, scenario, pairs, seed).max())
+        1.0 / _fault_aware_channel_load(g, scenario, pairs, seed).max())
 
 
-def fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
-                              pairs: int = 20_000, seed: int = 0,
-                              link_spec=None) -> np.ndarray:
+def _fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
+                               pairs: int = 20_000, seed: int = 0,
+                               link_spec=None) -> np.ndarray:
     """Per-EPOCH Monte-Carlo channel loads of a transient-fault timeline
     (`repro.core.fault_schedule.FaultSchedule` / `CompiledSchedule`):
     the fault-aware BFS tables for ALL epochs are rebuilt in one compiled
@@ -283,22 +285,22 @@ def fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
     dist, nh = fault_aware_next_hop_device(
         g, compiled.link_ok_stack(g), compiled.node_ok_stack(g))
     return np.stack([
-        fault_aware_channel_load(g, scen, pairs, seed,
-                                 tables=(dist[e], nh[e]))
+        _fault_aware_channel_load(g, scen, pairs, seed,
+                                  tables=(dist[e], nh[e]))
         for e, scen in enumerate(compiled.epochs)])
 
 
-def fault_aware_schedule_saturation(g: LatticeGraph, schedule,
-                                    slots: int = 512, pairs: int = 20_000,
-                                    seed: int = 0,
-                                    link_spec=None) -> np.ndarray:
+def _fault_aware_schedule_saturation(g: LatticeGraph, schedule,
+                                     slots: int = 512, pairs: int = 20_000,
+                                     seed: int = 0,
+                                     link_spec=None) -> np.ndarray:
     """(E,) per-epoch saturation bounds of a transient-fault timeline —
     how the fabric's degraded capacity moves as links flap and nodes
     die/return.  Uniform fabrics use 1/max-load; a weighted `link_spec`
     scales each channel's load by its slot cost first (the
     `weighted_saturation_throughput` convention)."""
-    loads = fault_aware_schedule_load(g, schedule, slots, pairs, seed,
-                                      link_spec=link_spec)
+    loads = _fault_aware_schedule_load(g, schedule, slots, pairs, seed,
+                                       link_spec=link_spec)
     if link_spec is not None and not link_spec.is_trivial:
         w = link_spec.port_weights(g.n).astype(np.float64)
         loads = loads * w[None, None, :]
@@ -342,8 +344,8 @@ def _walk_loads(nbr: np.ndarray, dist: np.ndarray, next_hop: np.ndarray,
     return load * (live.size / max(n_used, 1))
 
 
-def weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
-                          seed: int = 0, scenario=None) -> np.ndarray:
+def _weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
+                           seed: int = 0, scenario=None) -> np.ndarray:
     """Monte-Carlo channel loads on a HETEROGENEOUS fabric: `pairs`
     uniform pairs walked along weighted-shortest-path next-hop tables
     over the extended (base + express) port axis — express channels
@@ -371,17 +373,165 @@ def weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
                        scenario.link_ok(g, ls))
 
 
-def weighted_saturation_throughput(g: LatticeGraph, link_spec,
-                                   pairs: int = 20_000,
-                                   seed: int = 0) -> float:
+def _weighted_saturation_throughput(g: LatticeGraph, link_spec,
+                                    pairs: int = 20_000,
+                                    seed: int = 0, scenario=None) -> float:
     """Saturation bound of the heterogeneous fabric (phits/cycle/node):
     ``1 / max_c(load_c · w_c)`` — a weight-w channel serves one packet
     every w slots, so its effective service demand is its Monte-Carlo
     load times its slot cost.  With a trivial spec this is exactly the
-    unweighted 1/max-link-load bound."""
-    load = weighted_channel_load(g, link_spec, pairs, seed)
-    if link_spec is not None and not link_spec.is_trivial:
-        w = link_spec.port_weights(g.n).astype(np.float64)
-    else:
-        w = np.ones(2 * g.n)
+    unweighted 1/max-link-load bound.  An optional fault `scenario`
+    composes (the facade's weighted × faulted cell — the legacy
+    `weighted_saturation_throughput` never grew this axis)."""
+    load = _weighted_channel_load(g, link_spec, pairs, seed,
+                                  scenario=scenario)
+    w = _effective_port_weights(g, link_spec, load.shape[-1])
     return float(1.0 / (load * w[None, :]).max())
+
+
+def _effective_port_weights(g: LatticeGraph, link_spec,
+                            n_ports: int) -> np.ndarray:
+    """(P,) slot costs matching a load array's port axis: the LinkSpec's
+    per-port weights when heterogeneous, all-ones otherwise."""
+    if link_spec is not None and not link_spec.is_trivial:
+        return link_spec.port_weights(g.n).astype(np.float64)
+    return np.ones(n_ports, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# unified analytic surface: channel_load_stats / saturation facades + shims
+# ---------------------------------------------------------------------------
+
+def channel_load_stats(g: LatticeGraph,
+                       condition: NetworkCondition | None = None,
+                       **kwargs) -> dict:
+    """Monte-Carlo channel-load summary of `g` under one
+    `repro.core.NetworkCondition` — THE entry point for degraded/weighted
+    load metrics (the shimmed `fault_aware_*`/`weighted_*` names all
+    dispatch through here).
+
+    Returns {"load", "max_load", "saturation"} where `load` is the
+    (N, P) per-channel phit-crossing array (P = 2n, or 2n+2X with
+    express overlays), `max_load` is the peak *effective* service demand
+    ``max_c(load_c · w_c)`` and `saturation` is its reciprocal — so
+    ``saturation == saturation(g, condition)`` always.  A `schedule`
+    condition returns per-EPOCH arrays ((E, N, P) / (E,)) plus
+    `epoch_start_slot`.
+
+    Dispatch: `links` → weighted tables over the extended port axis
+    (composable with `scenario`); `scenario` → fault-aware BFS tables;
+    `schedule` → per-epoch stacked tables; pristine → DOR minimal-record
+    crossings (`channel_load_uniform`)."""
+    cond = NetworkCondition.from_kwargs(condition, **kwargs)
+    if cond.schedule is not None:
+        load = _fault_aware_schedule_load(
+            g, cond.schedule, cond.slots, cond.pairs, cond.seed,
+            link_spec=cond.links)
+        w = _effective_port_weights(g, cond.links, load.shape[-1])
+        max_load = (load * w[None, None, :]).reshape(
+            load.shape[0], -1).max(axis=1)
+        from .fault_schedule import ensure_compiled
+        ls = cond.links if cond.links is not None \
+            and not cond.links.is_trivial else None
+        compiled = ensure_compiled(cond.schedule, g, cond.slots, ls)
+        return {"load": load, "max_load": max_load,
+                "saturation": 1.0 / max_load,
+                "epoch_start_slot": np.asarray(compiled.starts, np.int64)}
+    if cond.links is not None:
+        load = _weighted_channel_load(g, cond.links, cond.pairs, cond.seed,
+                                      scenario=cond.scenario)
+    elif cond.scenario is not None:
+        load = _fault_aware_channel_load(g, cond.scenario, cond.pairs,
+                                         cond.seed, backend=cond.backend)
+    else:
+        load = channel_load_uniform(g, cond.pairs, cond.seed,
+                                    cond.router_backend)
+    w = _effective_port_weights(g, cond.links, load.shape[-1])
+    max_load = float((load * w[None, :]).max())
+    return {"load": load, "max_load": max_load,
+            "saturation": 1.0 / max_load}
+
+
+def saturation(g: LatticeGraph,
+               condition: NetworkCondition | None = None,
+               **kwargs) -> float | np.ndarray:
+    """Saturation throughput of `g` under one
+    `repro.core.NetworkCondition` (phits/cycle/node): the reciprocal of
+    the peak effective channel demand ``max_c(load_c · w_c)`` under
+    uniform (live-pair) Monte-Carlo traffic.  Scalar for static
+    conditions; (E,) per-epoch array for a `schedule`.
+
+    This subsumes `measured_saturation_throughput` (pristine),
+    `fault_aware_saturation_throughput` (scenario),
+    `weighted_saturation_throughput` (links — now composable with a
+    scenario) and `fault_aware_schedule_saturation` (schedule)."""
+    cond = NetworkCondition.from_kwargs(condition, **kwargs)
+    if cond.schedule is not None:
+        return _fault_aware_schedule_saturation(
+            g, cond.schedule, cond.slots, cond.pairs, cond.seed,
+            link_spec=cond.links)
+    if cond.links is not None:
+        return _weighted_saturation_throughput(
+            g, cond.links, cond.pairs, cond.seed, scenario=cond.scenario)
+    if cond.scenario is not None:
+        return _fault_aware_saturation_throughput(
+            g, cond.scenario, cond.pairs, cond.seed)
+    return measured_saturation_throughput(g, cond.pairs, cond.seed,
+                                          cond.router_backend)
+
+
+def fault_aware_channel_load(g: LatticeGraph, scenario,
+                             pairs: int = 20_000, seed: int = 0,
+                             tables=None, backend: str = "auto") -> np.ndarray:
+    """Deprecated shim — `channel_load_stats(g, scenario=...)`."""
+    _warn_deprecated("fault_aware_channel_load",
+                     "channel_load_stats(g, scenario=...)['load']")
+    return _fault_aware_channel_load(g, scenario, pairs, seed, tables,
+                                     backend)
+
+
+def fault_aware_saturation_throughput(g: LatticeGraph, scenario,
+                                      pairs: int = 20_000,
+                                      seed: int = 0) -> float:
+    """Deprecated shim — `saturation(g, scenario=...)`."""
+    _warn_deprecated("fault_aware_saturation_throughput",
+                     "saturation(g, scenario=...)")
+    return _fault_aware_saturation_throughput(g, scenario, pairs, seed)
+
+
+def fault_aware_schedule_load(g: LatticeGraph, schedule, slots: int = 512,
+                              pairs: int = 20_000, seed: int = 0,
+                              link_spec=None) -> np.ndarray:
+    """Deprecated shim — `channel_load_stats(g, schedule=...)`."""
+    _warn_deprecated("fault_aware_schedule_load",
+                     "channel_load_stats(g, schedule=...)['load']")
+    return _fault_aware_schedule_load(g, schedule, slots, pairs, seed,
+                                      link_spec)
+
+
+def fault_aware_schedule_saturation(g: LatticeGraph, schedule,
+                                    slots: int = 512, pairs: int = 20_000,
+                                    seed: int = 0,
+                                    link_spec=None) -> np.ndarray:
+    """Deprecated shim — `saturation(g, schedule=...)`."""
+    _warn_deprecated("fault_aware_schedule_saturation",
+                     "saturation(g, schedule=...)")
+    return _fault_aware_schedule_saturation(g, schedule, slots, pairs, seed,
+                                            link_spec)
+
+
+def weighted_channel_load(g: LatticeGraph, link_spec, pairs: int = 20_000,
+                          seed: int = 0, scenario=None) -> np.ndarray:
+    """Deprecated shim — `channel_load_stats(g, links=...)`."""
+    _warn_deprecated("weighted_channel_load",
+                     "channel_load_stats(g, links=...)['load']")
+    return _weighted_channel_load(g, link_spec, pairs, seed, scenario)
+
+
+def weighted_saturation_throughput(g: LatticeGraph, link_spec,
+                                   pairs: int = 20_000,
+                                   seed: int = 0) -> float:
+    """Deprecated shim — `saturation(g, links=...)`."""
+    _warn_deprecated("weighted_saturation_throughput",
+                     "saturation(g, links=...)")
+    return _weighted_saturation_throughput(g, link_spec, pairs, seed)

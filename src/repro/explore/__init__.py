@@ -1,0 +1,28 @@
+"""Closed-loop topology exploration over the paper's design space.
+
+`python -m repro.explore` (or `make explore` / `make explore-smoke`)
+runs a seeded evolutionary search over 3D HNF lattice matrices and
+mixed-radix tori crossed with router/fabric parameters, scoring each
+candidate on saturation throughput × p99 latency × faulted capacity
+through the unified analytic surface, and emits an epsilon-Pareto front
+with RTT/FCC/BCC and the same-order torus pinned as baselines.
+"""
+from .evaluate import EvalSettings, Evaluator, canonical_schedule
+from .optimizer import ExploreResult, explore, load_checkpoint
+from .pareto import ArchiveEntry, Objectives, ParetoArchive, dominates
+from .space import Candidate, SearchSpace
+
+__all__ = [
+    "ArchiveEntry",
+    "Candidate",
+    "EvalSettings",
+    "Evaluator",
+    "ExploreResult",
+    "Objectives",
+    "ParetoArchive",
+    "SearchSpace",
+    "canonical_schedule",
+    "dominates",
+    "explore",
+    "load_checkpoint",
+]

@@ -1,0 +1,129 @@
+"""Seeded evolutionary search over the topology design space.
+
+Dependency-free (numpy only) and offline-friendly: the loop is a plain
+(mu + lambda)-style archive evolution — each generation draws a fresh
+`np.random.default_rng([seed, generation])` stream, mutates archive
+members (or samples fresh when the archive is thin), scores them
+through the memoised `Evaluator`, and offers them to the epsilon-Pareto
+`ParetoArchive`.
+
+Determinism contract (tested): the per-generation RNG streams plus the
+JSON-round-trip-exact archive/memo mean
+
+  * the same seed produces byte-identical archive JSON, and
+  * killing the run after any generation and resuming from its
+    checkpoint produces the SAME final archive as the uninterrupted run.
+
+Checkpoints are a single JSON file: archive + evaluator memo + the next
+generation index + the settings fingerprint (resume refuses a
+checkpoint recorded under different settings/seed — silently mixing
+protocols would corrupt the front).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from .evaluate import EvalSettings, Evaluator
+from .pareto import ParetoArchive
+from .space import SearchSpace
+
+CHECKPOINT_VERSION = 1
+
+
+@dataclass(frozen=True)
+class ExploreResult:
+    archive: ParetoArchive
+    generations: int            # generations actually completed (total)
+    evaluations: int            # fresh (non-memoised) evaluations this run
+    candidates: int             # candidates offered this run (incl. memo hits)
+
+
+def _checkpoint_payload(archive: ParetoArchive, evaluator: Evaluator,
+                        next_generation: int, seed: int) -> dict:
+    return {"version": CHECKPOINT_VERSION,
+            "seed": seed,
+            "settings": evaluator.settings.to_json(),
+            "generation": next_generation,
+            "archive": archive.to_json(),
+            "memo": evaluator.memo_to_json()}
+
+
+def _write_checkpoint(path: str, payload: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)       # atomic: a killed run never half-writes
+
+
+def load_checkpoint(path: str, settings: EvalSettings,
+                    seed: int) -> tuple[ParetoArchive, list, int]:
+    """Read and validate a checkpoint; returns (archive, memo-items,
+    next generation).  Raises ValueError on a protocol mismatch."""
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("version") != CHECKPOINT_VERSION:
+        raise ValueError(
+            f"checkpoint version {d.get('version')!r} != "
+            f"{CHECKPOINT_VERSION}")
+    if int(d["seed"]) != seed:
+        raise ValueError(
+            f"checkpoint seed {d['seed']} != requested seed {seed}")
+    if EvalSettings.from_json(d["settings"]) != settings:
+        raise ValueError(
+            "checkpoint was recorded under different EvalSettings; "
+            "refusing to resume a different protocol")
+    return (ParetoArchive.from_json(d["archive"]), d["memo"],
+            int(d["generation"]))
+
+
+def explore(space: SearchSpace | None = None,
+            settings: EvalSettings | None = None, *,
+            generations: int = 8, population: int = 8, seed: int = 0,
+            eps: float = 1e-3, checkpoint: str | None = None,
+            resume: bool = False, progress=None) -> ExploreResult:
+    """Run (or resume) the evolutionary loop and return the archive.
+
+    `progress`, when given, is called once per completed generation with
+    ``(generation, archive)`` — the CLI uses it for its per-generation
+    front line; tests leave it None.
+    """
+    space = space or SearchSpace()
+    settings = settings or EvalSettings()
+    evaluator = Evaluator(settings)
+
+    start_gen = 0
+    if resume and checkpoint and os.path.exists(checkpoint):
+        archive, memo_items, start_gen = load_checkpoint(
+            checkpoint, settings, seed)
+        evaluator.load_memo(memo_items)
+    else:
+        archive = ParetoArchive(eps=eps)
+        # score + pin the paper's reference points before generation 0
+        for b in space.baselines():
+            archive.add(b, evaluator.evaluate(b), baseline=True)
+
+    offered = 0
+    for gen in range(start_gen, generations):
+        rng = np.random.default_rng([seed, gen])
+        parents = archive.discovered()
+        for _ in range(population):
+            if parents and rng.integers(0, 3) > 0:   # exploit 2/3 of draws
+                parent = parents[int(rng.integers(0, len(parents)))]
+                cand = space.mutate(parent.candidate, rng)
+            else:                                    # explore the rest
+                cand = space.sample(rng)
+            archive.add(cand, evaluator.evaluate(cand))
+            offered += 1
+            parents = archive.discovered()
+        if checkpoint:
+            _write_checkpoint(checkpoint, _checkpoint_payload(
+                archive, evaluator, gen + 1, seed))
+        if progress is not None:
+            progress(gen, archive)
+    return ExploreResult(archive=archive, generations=generations,
+                         evaluations=evaluator.evaluations,
+                         candidates=offered)

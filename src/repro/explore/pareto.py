@@ -1,0 +1,144 @@
+"""Multi-objective bookkeeping: objective vectors, epsilon-Pareto
+dominance, and the archive the evolutionary loop selects from.
+
+Objectives (the ROADMAP's deliverable axes): saturation throughput
+(phits/cycle/node, maximise), p99 latency at the evaluator's fixed
+offered load (cycles, minimise), and faulted capacity — the worst-epoch
+saturation under the canonical `FaultSchedule` (maximise).  Internally
+every axis is maximised (`p99` is negated); NaN/inf scores clamp to
+worst so a broken candidate can never dominate anything.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .space import Candidate
+
+
+@dataclass(frozen=True)
+class Objectives:
+    throughput: float          # saturation, phits/cycle/node (higher better)
+    p99: float                 # p99 latency at fixed load, cycles (lower)
+    faulted: float             # worst-epoch degraded saturation (higher)
+
+    def maximized(self) -> tuple[float, float, float]:
+        """All-maximised view with NaN/±inf clamped to worst."""
+        def up(x):
+            return x if math.isfinite(x) else -math.inf
+
+        def down(x):
+            return -x if math.isfinite(x) else -math.inf
+        return (up(self.throughput), down(self.p99), up(self.faulted))
+
+    def to_json(self) -> dict:
+        return {"throughput": self.throughput, "p99": self.p99,
+                "faulted": self.faulted}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Objectives":
+        return cls(throughput=float(d["throughput"]), p99=float(d["p99"]),
+                   faulted=float(d["faulted"]))
+
+    @classmethod
+    def worst(cls) -> "Objectives":
+        """The sentinel for candidates whose evaluation failed (e.g. the
+        canonical schedule disconnected the graph)."""
+        return cls(throughput=0.0, p99=math.inf, faulted=0.0)
+
+
+def dominates(a: Objectives, b: Objectives, eps: float = 0.0) -> bool:
+    """True iff `a` epsilon-Pareto-dominates `b`: a ≥ b − eps on every
+    maximised axis and a > b on at least one (strictly, the eps=0
+    textbook definition; eps > 0 coarsens acceptance so near-duplicates
+    don't flood the archive)."""
+    av, bv = a.maximized(), b.maximized()
+    ge_all = all(x >= y - eps for x, y in zip(av, bv))
+    gt_any = any(x > y for x, y in zip(av, bv))
+    return ge_all and gt_any
+
+
+@dataclass(frozen=True)
+class ArchiveEntry:
+    candidate: Candidate
+    objectives: Objectives
+    baseline: bool = False
+
+    def to_json(self) -> dict:
+        return {"candidate": self.candidate.to_json(),
+                "objectives": self.objectives.to_json(),
+                "baseline": self.baseline}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ArchiveEntry":
+        return cls(candidate=Candidate.from_json(d["candidate"]),
+                   objectives=Objectives.from_json(d["objectives"]),
+                   baseline=bool(d["baseline"]))
+
+
+class ParetoArchive:
+    """Epsilon-Pareto archive with pinned baselines.
+
+    `add` keeps the archive mutually non-dominated over the NON-baseline
+    members: a newcomer dominated by any member (with `eps` slack) is
+    rejected; an accepted newcomer evicts every member it strictly
+    dominates.  Baseline entries are reference points — they are never
+    evicted and never block a newcomer (a discovered candidate must be
+    able to beat them, that is the whole point) but they do appear in
+    the front output."""
+
+    def __init__(self, eps: float = 0.0):
+        self.eps = float(eps)
+        self._entries: list[ArchiveEntry] = []
+
+    # -- membership ---------------------------------------------------------
+    def add(self, candidate: Candidate, objectives: Objectives,
+            baseline: bool = False) -> bool:
+        """Offer one scored candidate; returns True iff it was retained."""
+        entry = ArchiveEntry(candidate, objectives, baseline)
+        if baseline:
+            self._entries.append(entry)
+            return True
+        key = candidate.key()
+        for e in self._entries:
+            if not e.baseline and e.candidate.key() == key:
+                return False        # identical design point, not progress
+            if not e.baseline and dominates(e.objectives, objectives,
+                                            self.eps):
+                return False
+        self._entries = [
+            e for e in self._entries
+            if e.baseline or not dominates(objectives, e.objectives)]
+        self._entries.append(entry)
+        return True
+
+    @property
+    def entries(self) -> tuple[ArchiveEntry, ...]:
+        return tuple(self._entries)
+
+    def front(self) -> tuple[ArchiveEntry, ...]:
+        """Archive sorted for stable output: baselines first (in insert
+        order), then discovered members by descending throughput."""
+        base = [e for e in self._entries if e.baseline]
+        rest = sorted((e for e in self._entries if not e.baseline),
+                      key=lambda e: (-e.objectives.throughput,
+                                     e.objectives.p99,
+                                     e.candidate.label()))
+        return tuple(base + rest)
+
+    def discovered(self) -> tuple[ArchiveEntry, ...]:
+        return tuple(e for e in self._entries if not e.baseline)
+
+    # -- persistence --------------------------------------------------------
+    def to_json(self) -> dict:
+        # raw insertion order, NOT front() order: `discovered()` drives
+        # parent selection, so a resumed archive must replay the exact
+        # member order of the uninterrupted run
+        return {"eps": self.eps,
+                "entries": [e.to_json() for e in self._entries]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ParetoArchive":
+        out = cls(eps=float(d["eps"]))
+        out._entries = [ArchiveEntry.from_json(e) for e in d["entries"]]
+        return out

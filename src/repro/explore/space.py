@@ -1,0 +1,279 @@
+"""Declarative search space over candidate pod topologies.
+
+A `Candidate` is one point of the paper's design space: an integral
+lattice matrix (stored in Hermite normal form, so unimodular-equivalent
+matrices — the same graph, Definition 6 — collapse onto one key) plus
+the router/fabric parameters the simulator and the heterogeneous-link
+layer expose (queue depth, virtual channels + credits, routing policy,
+`LinkSpec` dimension weights and express overlays).
+
+`SearchSpace` samples and mutates candidates inside a validity envelope:
+node count in [min_nodes, max_nodes], degree ≤ degree_cap, matrix in
+exact HNF (`intmat.hermite_normal_form`), diagonal ≥ 2 (no degenerate
+one-node dimensions).  Mutation composes a random unimodular column op
+(moving inside the equivalence class so the jitter lands on a different
+representative entry) with an integer entry jitter, then re-normalises
+to HNF — plus parameter jitter over the declared choices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core import LatticeGraph, LinkSpec, intmat
+from repro.core.crystals import bcc_matrix, fcc_matrix, rtt_matrix
+
+POLICIES = ("dor", "adaptive", "escape")
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the topology design space.  `matrix` is the HNF
+    lattice matrix as a tuple-of-tuples (hashable); `kind` tags how the
+    point entered the space ("lattice" sampled/mutated HNF,
+    "torus" diagonal mixed-radix, "baseline" pinned reference)."""
+
+    matrix: tuple[tuple[int, ...], ...]
+    kind: str = "lattice"
+    name: str = ""
+    queue: int = 4
+    vcs: int = 1
+    credits: int | None = None
+    policy: str = "dor"
+    dim_weights: tuple[int, ...] | None = None
+    express: tuple[tuple[int, int, int], ...] | None = None
+
+    def graph(self) -> LatticeGraph:
+        return LatticeGraph(np.asarray(self.matrix, dtype=np.int64))
+
+    def link_spec(self) -> LinkSpec | None:
+        """The candidate's LinkSpec, or None when the fabric is uniform."""
+        if self.dim_weights is None and self.express is None:
+            return None
+        kw = {}
+        if self.dim_weights is not None:
+            kw["dim_weights"] = self.dim_weights
+        if self.express is not None:
+            kw["express"] = self.express
+        ls = LinkSpec(**kw)
+        return None if ls.is_trivial else ls
+
+    def key(self) -> tuple:
+        """Dedup key: HNF matrix (unimodular-equivalence class) plus the
+        non-topology parameters.  `kind`/`name` are labels, not state."""
+        return (self.matrix, self.queue, self.vcs, self.credits,
+                self.policy, self.dim_weights, self.express)
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        diag = "x".join(str(r[i]) for i, r in enumerate(self.matrix))
+        extras = []
+        if self.queue != 4:
+            extras.append(f"q{self.queue}")
+        if self.vcs != 1:
+            extras.append(f"v{self.vcs}")
+        if self.dim_weights is not None:
+            extras.append("w" + "".join(map(str, self.dim_weights)))
+        if self.express is not None:
+            extras.append("ex")
+        tag = ("+" + "+".join(extras)) if extras else ""
+        return f"H[{diag}]{tag}"
+
+    def to_json(self) -> dict:
+        return {"matrix": [list(r) for r in self.matrix], "kind": self.kind,
+                "name": self.name, "queue": self.queue, "vcs": self.vcs,
+                "credits": self.credits, "policy": self.policy,
+                "dim_weights": (list(self.dim_weights)
+                                if self.dim_weights is not None else None),
+                "express": ([list(e) for e in self.express]
+                            if self.express is not None else None)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Candidate":
+        return cls(
+            matrix=tuple(tuple(int(x) for x in r) for r in d["matrix"]),
+            kind=d["kind"], name=d["name"], queue=int(d["queue"]),
+            vcs=int(d["vcs"]),
+            credits=None if d["credits"] is None else int(d["credits"]),
+            policy=d["policy"],
+            dim_weights=(None if d["dim_weights"] is None
+                         else tuple(int(x) for x in d["dim_weights"])),
+            express=(None if d["express"] is None
+                     else tuple(tuple(int(x) for x in e)
+                                for e in d["express"])))
+
+
+def _as_hnf(M: np.ndarray) -> tuple[tuple[int, ...], ...]:
+    H = intmat.hermite_normal_form(M)
+    return tuple(tuple(int(x) for x in row) for row in H)
+
+
+@dataclass(frozen=True)
+class SearchSpace:
+    """The candidate envelope: 3D HNF lattices (spanning PC/FCC/BCC and
+    every twisted relative) plus mixed-radix tori at matched node count,
+    crossed with router/fabric parameters."""
+
+    dims: int = 3
+    min_nodes: int = 96
+    max_nodes: int = 160
+    degree_cap: int = 6
+    queues: tuple[int, ...] = (4,)
+    vcs_choices: tuple[int, ...] = (1,)
+    policies: tuple[str, ...] = ("dor",)
+    weight_choices: tuple[tuple[int, ...] | None, ...] = (None,)
+    express_choices: tuple[tuple[tuple[int, int, int], ...] | None, ...] \
+        = (None,)
+
+    def __post_init__(self):
+        if self.dims < 2:
+            raise ValueError(f"dims must be >= 2, got {self.dims}")
+        if not 2 <= self.min_nodes <= self.max_nodes:
+            raise ValueError(
+                f"need 2 <= min_nodes <= max_nodes, got "
+                f"[{self.min_nodes}, {self.max_nodes}]")
+        for p in self.policies:
+            if p not in POLICIES:
+                raise ValueError(f"unknown policy {p!r}")
+
+    # -- validity -----------------------------------------------------------
+    def valid(self, cand: Candidate) -> bool:
+        """HNF-form (upper-triangular, positive diagonal ≥ 2, reduced
+        off-diagonals), node count in band, degree under the cap."""
+        M = np.asarray(cand.matrix, dtype=np.int64)
+        if M.shape[0] != M.shape[1]:
+            return False
+        n = M.shape[0]
+        for i in range(n):
+            if M[i, i] < 2:
+                return False
+            for j in range(n):
+                if j < i and M[i, j] != 0:
+                    return False
+                if j > i and not 0 <= M[i, j] < M[i, i]:
+                    return False
+        if not np.array_equal(M, intmat.hermite_normal_form(M)):
+            return False
+        order = abs(int(intmat.det(M)))
+        if not self.min_nodes <= order <= self.max_nodes:
+            return False
+        if 2 * n > self.degree_cap:
+            return False
+        if cand.queue < 2 or cand.vcs < 1:
+            return False
+        if cand.credits is not None and not (cand.vcs >= 2
+                                             and 2 <= cand.credits
+                                             <= cand.queue):
+            return False
+        # express overlays at vcs=1 must route greedy DOR (the V=1
+        # adaptive/escape heuristics score base ports only — the
+        # validate_feature_combo exclusion cell)
+        if cand.express is not None and cand.vcs == 1 \
+                and cand.policy != "dor":
+            return False
+        return cand.policy in POLICIES
+
+    # -- sampling -----------------------------------------------------------
+    def _diag_in_band(self, rng: np.random.Generator) -> list[int]:
+        """Random diagonal (each ≥ 2) whose product lands in the node
+        band — rejection-sampled from per-entry geometric-ish draws."""
+        for _ in range(256):
+            diag = [int(rng.integers(2, 9)) for _ in range(self.dims)]
+            order = int(np.prod(diag))
+            if self.min_nodes <= order <= self.max_nodes:
+                return diag
+        # deterministic fallback: balanced factorisation of min_nodes
+        side = max(2, round(self.min_nodes ** (1 / self.dims)))
+        diag = [side] * (self.dims - 1)
+        last = max(2, -(-self.min_nodes // int(np.prod(diag))))
+        return diag + [last]
+
+    def sample(self, rng: np.random.Generator) -> Candidate:
+        """One uniform-ish draw from the envelope: torus (diagonal) with
+        probability ~1/4, otherwise a random reduced upper-triangular
+        HNF matrix; parameters drawn from the declared choices."""
+        diag = self._diag_in_band(rng)
+        M = np.diag(diag).astype(np.int64)
+        kind = "torus"
+        if rng.integers(0, 4) > 0:       # twisted lattice 3 times in 4
+            kind = "lattice"
+            for i in range(self.dims):
+                for j in range(i + 1, self.dims):
+                    M[i, j] = int(rng.integers(0, diag[i]))
+        cand = Candidate(matrix=_as_hnf(M), kind=kind,
+                         **self._sample_params(rng))
+        return cand if self.valid(cand) else \
+            replace(cand, matrix=_as_hnf(np.diag(diag)))
+
+    def _sample_params(self, rng: np.random.Generator) -> dict:
+        queue = int(_choice(rng, self.queues))
+        vcs = int(_choice(rng, self.vcs_choices))
+        credits = None
+        if vcs >= 2 and rng.integers(0, 2):
+            credits = int(rng.integers(2, queue + 1))
+        policy = str(_choice(rng, self.policies))
+        weights = _choice(rng, self.weight_choices)
+        express = _choice(rng, self.express_choices)
+        if express is not None and vcs == 1:
+            policy = "dor"               # the feature-combo exclusion cell
+        return {"queue": queue, "vcs": vcs, "credits": credits,
+                "policy": policy, "dim_weights": weights,
+                "express": express}
+
+    # -- mutation -----------------------------------------------------------
+    def mutate(self, cand: Candidate,
+               rng: np.random.Generator) -> Candidate:
+        """One evolutionary step: with equal odds either (a) a matrix
+        move — a random unimodular column op (same graph, different
+        representative) followed by a ±1/±2 entry jitter and
+        re-normalisation to HNF — or (b) a parameter jitter.  Invalid
+        offspring fall back to a fresh sample, so the loop never stalls
+        on a boundary candidate."""
+        if rng.integers(0, 2) == 0 and cand.kind != "baseline":
+            M = np.asarray(cand.matrix, dtype=np.int64)
+            n = M.shape[0]
+            i, j = rng.integers(0, n, size=2)
+            if i != j:                   # column op: col_j += ±col_i
+                U = np.eye(n, dtype=np.int64)
+                U[i, j] = int(rng.choice((-1, 1)))
+                M = M @ U
+            r, c = int(rng.integers(0, n)), int(rng.integers(0, n))
+            M = M.copy()
+            M[r, c] += int(rng.choice((-2, -1, 1, 2)))
+            if abs(int(intmat.det(M))) >= 2:
+                out = replace(cand, matrix=_as_hnf(M), kind="lattice",
+                              name="")
+                if self.valid(out):
+                    return out
+            return self.sample(rng)
+        out = replace(cand, name="", **self._sample_params(rng))
+        out = replace(out, kind=cand.kind if cand.kind != "baseline"
+                      else "lattice")
+        return out if self.valid(out) else self.sample(rng)
+
+    # -- pinned baselines ---------------------------------------------------
+    def baselines(self) -> tuple[Candidate, ...]:
+        """The paper's reference points at matched order: RTT/FCC/BCC plus
+        the same-order mixed-radix torus (the Table 1 comparison set)."""
+        return (
+            Candidate(matrix=_as_hnf(fcc_matrix(4)), kind="baseline",
+                      name="FCC(4)/128"),
+            Candidate(matrix=_as_hnf(bcc_matrix(3)), kind="baseline",
+                      name="BCC(3)/108"),
+            Candidate(matrix=_as_hnf(rtt_matrix(8)), kind="baseline",
+                      name="RTT(8)/128"),
+            Candidate(matrix=_as_hnf(np.diag((8, 4, 4))), kind="baseline",
+                      name="T(8,4,4)/128"),
+        )
+
+    def torus_baseline(self) -> Candidate:
+        """The mixed-radix torus the acceptance demo must dominate."""
+        return self.baselines()[-1]
+
+
+def _choice(rng: np.random.Generator, seq):
+    """rng.choice over heterogeneous/None-bearing sequences (numpy's
+    choice coerces; index instead)."""
+    return seq[int(rng.integers(0, len(seq)))]

@@ -17,14 +17,14 @@ Hardware constants default to TPU v5e: 50 GB/s per ICI link per direction.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
-from repro.core import LatticeGraph, Torus
+from repro.core import LatticeGraph, NetworkCondition
 from repro.core.throughput import (measured_saturation_throughput,
                                    mixed_torus_throughput_bound,
-                                   symmetric_throughput_bound)
+                                   saturation, symmetric_throughput_bound)
 
 LINK_BW = 50e9          # bytes/s per link per direction (ICI)
 PEAK_FLOPS = 197e12     # bf16 per chip
@@ -102,52 +102,124 @@ class PodTopologyReport:
     hetero_capacity: float | None = None
 
 
+@dataclass(frozen=True)
+class PodOptions:
+    """Frozen bundle of `analyze_pod`'s measurement knobs (what to measure
+    and how hard — the fabric *state* lives on a `NetworkCondition`, the
+    simulator shape on a `SimConfig`).
+
+      * ``measure_routed`` — also measure the empirical 1/max-link-load
+        saturation (`routed_pairs` pairs, `routed_backend` engine);
+      * ``sim_loads``      — offered-load grid for the slot-level
+        simulated-capacity sweep (used when a `sim_config` is given).
+    """
+
+    measure_routed: bool = False
+    routed_pairs: int = 20_000
+    routed_backend: str = "auto"
+    sim_loads: tuple[float, ...] = (0.2, 0.4, 0.6, 0.8)
+
+    def __post_init__(self):
+        if self.routed_pairs <= 0:
+            raise ValueError(
+                f"routed_pairs must be positive, got {self.routed_pairs}")
+        if self.routed_backend not in ("auto", "jax", "numpy"):
+            raise ValueError(
+                f"unknown routed backend {self.routed_backend!r}")
+        if not self.sim_loads:
+            raise ValueError("sim_loads must name at least one load")
+
+    @classmethod
+    def from_kwargs(cls, options: "PodOptions | None" = None,
+                    **kwargs) -> "PodOptions":
+        """Resolve `options=` plus legacy per-call kwargs into one
+        `PodOptions` — the `SimConfig.from_kwargs` contract: kwargs
+        valued None mean "not passed", and a real kwarg alongside an
+        `options` object raises (the call is ambiguous)."""
+        given = {k: v for k, v in kwargs.items() if v is not None}
+        if options is None:
+            return cls(**given)
+        if not isinstance(options, cls):
+            raise TypeError(
+                f"options= expects a PodOptions, got "
+                f"{type(options).__name__}")
+        if given:
+            raise ValueError(
+                f"both options= and legacy kwarg(s) {sorted(given)} were "
+                "passed; put every measurement knob on the PodOptions "
+                "(e.g. replace(options, ...)) or drop options= and use "
+                "kwargs")
+        return options
+
+    def replace(self, **changes) -> "PodOptions":
+        return replace(self, **changes)
+
+
 def analyze_pod(name: str, g: LatticeGraph,
                 torus_sides: tuple[int, ...] | None = None, *,
-                measure_routed: bool = False,
-                routed_pairs: int = 20_000,
-                routed_backend: str = "auto",
-                scenario=None,
+                condition: NetworkCondition | None = None,
                 sim_config=None,
-                sim_loads=(0.2, 0.4, 0.6, 0.8),
+                options: PodOptions | None = None,
+                measure_routed: bool | None = None,
+                routed_pairs: int | None = None,
+                routed_backend: str | None = None,
+                sim_loads: tuple[float, ...] | None = None,
+                scenario=None,
                 link_spec=None) -> PodTopologyReport:
-    """Price a pod topology.  With `measure_routed=True` the analytic
-    capacity bound is accompanied by an empirical saturation throughput:
-    `routed_pairs` uniform pairs routed through the batched engine and
-    reduced to 1/max directional-link load, with both the routing and the
-    DOR link-crossing walk on device (`routed_backend="numpy"` forces the
-    host oracle end-to-end).  With a `repro.core.scenario.Scenario` the
-    report also carries the degraded capacity: uniform live-pair traffic
+    """Price a pod topology.
+
+    The fabric state rides on ONE `repro.core.NetworkCondition`: its
+    `scenario` adds the degraded capacity (uniform live-pair traffic
     walked over fault-aware rebuilt routing tables — how much all-to-all
-    headroom the pod keeps after losing links or chips.  With a
-    `repro.core.SimConfig` in `sim_config` the report additionally carries
-    the slot-level simulator's peak accepted load over `sim_loads` — the
-    dynamic saturation point under queue contention (and, for
-    ``sim_config.vcs > 1``, the VC credit-flow router).  With a
-    `repro.core.LinkSpec` in `link_spec` the report carries the
-    heterogeneous capacity — uniform traffic walked over weighted
-    shortest-path tables across the extended port axis, reduced to
-    ``1/max(load·weight)`` — pricing express-augmented or slow-Z pods
-    against their uniform peers."""
+    headroom the pod keeps after losing links or chips), its `links`
+    adds the heterogeneous capacity (weighted shortest-path walk over
+    the extended port axis, reduced to ``1/max(load·weight)``), and both
+    compose.  A `repro.core.SimConfig` in `sim_config` adds the
+    slot-level simulator's peak accepted load over `options.sim_loads` —
+    the dynamic saturation point under queue contention (and, for
+    ``sim_config.vcs > 1``, the VC credit-flow router).  `options`
+    (a `PodOptions`) bundles the measurement knobs: with
+    ``measure_routed=True`` the analytic capacity bound is accompanied
+    by an empirical saturation throughput (`routed_pairs` uniform pairs
+    routed through the batched engine and reduced to 1/max
+    directional-link load; ``routed_backend="numpy"`` forces the host
+    oracle end-to-end).
+
+    The historical kwargs (`measure_routed`, `routed_pairs`,
+    `routed_backend`, `sim_loads`, `scenario`, `link_spec`) remain as a
+    conflict-raising shim over `PodOptions.from_kwargs` /
+    `NetworkCondition.from_kwargs` — passing one alongside the matching
+    bundle raises, exactly like the `SimConfig` migration."""
+    opts = PodOptions.from_kwargs(
+        options, measure_routed=measure_routed, routed_pairs=routed_pairs,
+        routed_backend=routed_backend,
+        sim_loads=tuple(sim_loads) if sim_loads is not None else None)
+    cond = NetworkCondition.from_kwargs(
+        condition, scenario=scenario, links=link_spec)
+    if condition is None:
+        # legacy path priced capacities with `routed_pairs` draws; an
+        # explicit condition= keeps its own Monte-Carlo sample size
+        cond = cond.replace(pairs=opts.routed_pairs)
     sym = torus_sides is None
     test_bytes = 256 * 2**20
     cap = (symmetric_throughput_bound(g) if sym
            else mixed_torus_throughput_bound(*torus_sides))
     faulted = None
-    if scenario is not None and not scenario.is_trivial:
-        from repro.core.throughput import fault_aware_saturation_throughput
-        faulted = fault_aware_saturation_throughput(g, scenario,
-                                                    pairs=routed_pairs)
+    if cond.scenario is not None and not cond.scenario.is_trivial:
+        faulted = float(saturation(g, cond.replace(links=None)))
+    elif cond.schedule is not None:
+        # a fault timeline prices as its WORST epoch — the capacity floor
+        # the pod is guaranteed across the whole schedule
+        faulted = float(np.min(saturation(g, cond.replace(links=None))))
     simulated = None
     if sim_config is not None:
         from repro.core.throughput import simulated_saturation_load
-        simulated = simulated_saturation_load(g, sim_loads,
+        simulated = simulated_saturation_load(g, opts.sim_loads,
                                               config=sim_config)
     hetero = None
-    if link_spec is not None and not link_spec.is_trivial:
-        from repro.core.throughput import weighted_saturation_throughput
-        hetero = weighted_saturation_throughput(g, link_spec,
-                                                pairs=routed_pairs)
+    if cond.links is not None and not cond.links.is_trivial:
+        hetero = float(saturation(
+            g, cond.replace(scenario=None)))
     return PodTopologyReport(
         name=name,
         chips=g.order,
@@ -159,8 +231,8 @@ def analyze_pod(name: str, g: LatticeGraph,
         alltoall_256MB_ms=1e3 * all_to_all_time(
             g, test_bytes, edge_symmetric=sym, torus_sides=torus_sides),
         routed_capacity=(measured_saturation_throughput(
-            g, routed_pairs, backend=routed_backend)
-            if measure_routed else None),
+            g, opts.routed_pairs, backend=opts.routed_backend)
+            if opts.measure_routed else None),
         faulted_capacity=faulted,
         simulated_capacity=simulated,
         hetero_capacity=hetero)

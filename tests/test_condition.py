@@ -1,0 +1,217 @@
+"""The unified analytic surface (ISSUE 10 satellite 1 + 2):
+`NetworkCondition` validation, the `distance_stats` /
+`channel_load_stats` / `saturation` facades, result-identity of the
+eleven deprecated `faulted_*`/`weighted_*`/`fault_aware_*` shims, the
+`analyze_pod(condition=..., options=...)` collapse, and deprecation
+hygiene (every shim warns exactly ONCE per call)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (FCC, FaultSchedule, LinkSpec, NetworkCondition,
+                        Scenario, Torus, channel_load_stats, distance_stats,
+                        saturation)
+from repro.core import distances as D
+from repro.core import throughput as T
+from repro.core.simulation import simulate_load_sweep, throughput_curve
+
+G = FCC(2)                       # N=16: big enough to route, fast to walk
+SCEN = Scenario(dead_links=((0, 0), (3, 2)))
+LS = LinkSpec(dim_weights=(2, 1, 1))
+PAIRS, SEED = 2000, 1
+
+
+def sched():
+    return FaultSchedule.random_events(G, 3, 128, seed=4)
+
+
+def one_warning(fn, *args, **kwargs):
+    """Run fn asserting exactly one DeprecationWarning; return result."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, (fn.__name__, [str(x.message) for x in w])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NetworkCondition validation (the SimConfig pattern, mirrored)
+# ---------------------------------------------------------------------------
+
+def test_condition_defaults_are_pristine():
+    c = NetworkCondition()
+    assert c.is_pristine and c.router_backend == "auto"
+
+
+def test_condition_scenario_xor_schedule():
+    with pytest.raises(ValueError, match="not both"):
+        NetworkCondition(scenario=SCEN, schedule=sched())
+
+
+@pytest.mark.parametrize("kw", [{"slots": 0}, {"pairs": -1},
+                                {"backend": "devcie"},
+                                {"scenario": "nope"},
+                                {"links": (1, 2, 3)},
+                                {"schedule": SCEN}])
+def test_condition_rejects_bad_fields(kw):
+    with pytest.raises((ValueError, TypeError)):
+        NetworkCondition(**kw)
+
+
+def test_condition_backend_vocabulary():
+    assert NetworkCondition(backend="device").router_backend == "jax"
+    assert NetworkCondition(backend="host").router_backend == "numpy"
+
+
+def test_from_kwargs_conflict_and_unknown():
+    c = NetworkCondition(scenario=SCEN)
+    with pytest.raises(ValueError, match="both condition="):
+        NetworkCondition.from_kwargs(c, scenario=SCEN)
+    with pytest.raises(TypeError, match="unknown condition kwargs"):
+        NetworkCondition.from_kwargs(None, scenari=SCEN)
+    assert NetworkCondition.from_kwargs(c) is c
+    assert NetworkCondition.from_kwargs(None, pairs=7).pairs == 7
+
+
+def test_condition_replace_and_as_kwargs_round_trip():
+    c = NetworkCondition(scenario=SCEN, pairs=123)
+    assert c.replace(pairs=5).pairs == 5
+    assert NetworkCondition(**c.as_kwargs()) == c
+
+
+# ---------------------------------------------------------------------------
+# shim-vs-facade result identity: the five distance names
+# ---------------------------------------------------------------------------
+
+def test_faulted_average_distance_shim_matches_facade():
+    assert one_warning(D.faulted_average_distance, G, SCEN) == \
+        distance_stats(G, scenario=SCEN)["average_distance"]
+
+
+def test_faulted_diameter_shim_matches_facade():
+    assert one_warning(D.faulted_diameter, G, SCEN) == \
+        distance_stats(G, scenario=SCEN)["diameter"]
+
+
+def test_faulted_schedule_stats_shim_matches_facade():
+    old = one_warning(D.faulted_schedule_stats, G, sched(), 128)
+    new = distance_stats(G, schedule=sched(), slots=128)
+    assert old.keys() == new.keys()
+    for k in old:
+        np.testing.assert_array_equal(np.asarray(old[k]),
+                                      np.asarray(new[k]))
+
+
+def test_weighted_average_distance_shim_matches_facade():
+    assert one_warning(D.weighted_average_distance, G, LS) == \
+        distance_stats(G, links=LS)["average_distance"]
+
+
+def test_weighted_diameter_shim_matches_facade():
+    assert one_warning(D.weighted_diameter, G, LS) == \
+        distance_stats(G, links=LS)["diameter"]
+
+
+# ---------------------------------------------------------------------------
+# shim-vs-facade result identity: the six throughput names
+# ---------------------------------------------------------------------------
+
+def test_fault_aware_channel_load_shim_matches_facade():
+    old = one_warning(T.fault_aware_channel_load, G, SCEN, PAIRS, SEED)
+    new = channel_load_stats(G, scenario=SCEN, pairs=PAIRS, seed=SEED)
+    np.testing.assert_array_equal(old, new["load"])
+
+
+def test_fault_aware_schedule_load_shim_matches_facade():
+    old = one_warning(T.fault_aware_schedule_load, G, sched(), 128,
+                      PAIRS, SEED)
+    new = channel_load_stats(G, schedule=sched(), slots=128, pairs=PAIRS,
+                             seed=SEED)
+    np.testing.assert_array_equal(old, new["load"])
+
+
+def test_weighted_channel_load_shim_matches_facade():
+    old = one_warning(T.weighted_channel_load, G, LS, PAIRS, SEED)
+    new = channel_load_stats(G, links=LS, pairs=PAIRS, seed=SEED)
+    np.testing.assert_array_equal(old, new["load"])
+
+
+def test_fault_aware_saturation_shim_matches_facade():
+    assert one_warning(T.fault_aware_saturation_throughput, G, SCEN,
+                       PAIRS, SEED) == \
+        saturation(G, scenario=SCEN, pairs=PAIRS, seed=SEED)
+
+
+def test_fault_aware_schedule_saturation_shim_matches_facade():
+    old = one_warning(T.fault_aware_schedule_saturation, G, sched(), 128,
+                      PAIRS, SEED)
+    new = saturation(G, schedule=sched(), slots=128, pairs=PAIRS, seed=SEED)
+    np.testing.assert_array_equal(old, new)
+
+
+def test_weighted_saturation_shim_matches_facade():
+    assert one_warning(T.weighted_saturation_throughput, G, LS,
+                       PAIRS, SEED) == \
+        saturation(G, links=LS, pairs=PAIRS, seed=SEED)
+
+
+# ---------------------------------------------------------------------------
+# facade semantics
+# ---------------------------------------------------------------------------
+
+def test_pristine_facades_match_graph_properties():
+    s = distance_stats(G)
+    assert s["average_distance"] == float(G.average_distance)
+    assert s["diameter"] == int(G.diameter)
+    assert s["reachable_pairs"] == G.order * (G.order - 1)
+
+
+def test_channel_load_stats_saturation_consistent():
+    st = channel_load_stats(G, pairs=PAIRS, seed=SEED)
+    assert st["saturation"] == pytest.approx(1.0 / st["max_load"])
+    assert st["saturation"] == saturation(G, pairs=PAIRS, seed=SEED)
+
+
+def test_weighted_times_schedule_distance_cell_runs():
+    out = distance_stats(G, schedule=sched(), slots=128, links=LS)
+    assert np.asarray(out["average_distance"]).ndim == 1
+
+
+# ---------------------------------------------------------------------------
+# deprecation hygiene: the PRE-existing simulator aliases still warn once
+# ---------------------------------------------------------------------------
+
+def test_simulate_load_sweep_and_throughput_curve_warn_once():
+    g = Torus(4, 4)
+    for fn in (simulate_load_sweep, throughput_curve):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            fn(g, "uniform", [0.2], slots=32, warmup=8)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1, fn
+
+
+def test_shim_warning_names_the_replacement():
+    with pytest.warns(DeprecationWarning,
+                      match=r"distance_stats\(g, scenario="):
+        D.faulted_average_distance(G, SCEN)
+    with pytest.warns(DeprecationWarning, match="Unified analytic"):
+        T.weighted_saturation_throughput(G, LS, 500, 0)
+
+
+# ---------------------------------------------------------------------------
+# analyze_pod: condition= / options= collapse (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_analyze_pod_condition_options_equal_legacy_kwargs():
+    from repro.topology.collective_model import PodOptions, analyze_pod
+    g = Torus(4, 4)
+    legacy = analyze_pod("t44", g, (4, 4), scenario=SCEN, routed_pairs=1500)
+    new = analyze_pod("t44", g, (4, 4),
+                      condition=NetworkCondition(scenario=SCEN, pairs=1500),
+                      options=PodOptions(routed_pairs=1500))
+    assert legacy == new
+    with pytest.raises(ValueError, match="both options="):
+        analyze_pod("t44", g, options=PodOptions(), measure_routed=True)

@@ -8,10 +8,10 @@ K-scenario distance sweep must match per-scenario host statistics.
 import numpy as np
 import pytest
 
-from repro.core import (BCC, FCC, RTT, Scenario, Torus, fault_aware_channel_load,
-                        fault_aware_next_hop, fault_aware_next_hop_device,
-                        faulted_average_distance, faulted_diameter,
-                        faulted_distance_matrix, faulted_distance_sweep)
+from repro.core import (BCC, FCC, RTT, Scenario, Torus, channel_load_stats,
+                        distance_stats, fault_aware_next_hop,
+                        fault_aware_next_hop_device, faulted_distance_matrix,
+                        faulted_distance_sweep)
 
 GRAPHS = {"T4444": Torus(4, 4, 4, 4), "RTT4": RTT(4), "FCC2": FCC(2),
           "BCC2": BCC(2)}
@@ -63,11 +63,11 @@ def test_faulted_distance_sweep_matches_host_stats():
     scens = [Scenario.random_link_faults(g, k, seed=k) for k in (0, 2, 4, 6)]
     sw = faulted_distance_sweep(g, scens)
     for i, s in enumerate(scens):
-        dist = faulted_distance_matrix(g, s, backend="host")
+        st = distance_stats(g, scenario=s, backend="host")
         assert np.isclose(sw["average_distance"][i],
-                          faulted_average_distance(g, s, dist), atol=1e-5)
-        assert sw["diameter"][i] == faulted_diameter(g, s, dist)
-        assert sw["reachable_pairs"][i] == int((dist > 0).sum())
+                          st["average_distance"], atol=1e-5)
+        assert sw["diameter"][i] == st["diameter"]
+        assert sw["reachable_pairs"][i] == st["reachable_pairs"]
 
 
 def test_sweep_disconnected_lane_reports_nan_not_zero():
@@ -89,10 +89,10 @@ def test_channel_load_walk_accepts_device_tables():
     are identical (identical tables ⇒ identical walk)."""
     g = Torus(4, 4)
     scen = Scenario.random_link_faults(g, 3, seed=5)
-    ld = fault_aware_channel_load(g, scen, pairs=2000, seed=1)
-    lh = fault_aware_channel_load(g, scen, pairs=2000, seed=1,
-                                  backend="host")
+    ld = channel_load_stats(g, scenario=scen, pairs=2000, seed=1)["load"]
+    lh = channel_load_stats(g, scenario=scen, pairs=2000, seed=1,
+                            backend="host")["load"]
     assert np.array_equal(ld, lh)
     assert ld[~scen.link_ok(g)].sum() == 0
-    with pytest.raises(ValueError, match="unknown BFS backend"):
-        fault_aware_channel_load(g, scen, pairs=100, backend="devcie")
+    with pytest.raises(ValueError, match="unknown analytic backend"):
+        channel_load_stats(g, scenario=scen, pairs=100, backend="devcie")

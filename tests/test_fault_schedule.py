@@ -218,16 +218,16 @@ def test_precompiled_schedule_slots_mismatch_raises():
     """Every schedule-taking API funnels through `ensure_compiled`: a
     CompiledSchedule bound to a different run length must fail loudly,
     not silently report epochs the run never reaches."""
-    from repro.core.distances import faulted_schedule_stats
+    from repro.core.distances import distance_stats
     from repro.core.fault_schedule import ensure_compiled
-    from repro.core.throughput import fault_aware_schedule_load
+    from repro.core.throughput import channel_load_stats
     c = FaultSchedule.link_flap((1, 0), 8, 16).compile(G, 128)
     with pytest.raises(ValueError, match="compiled for 128"):
         ensure_compiled(c, G, 64)
     with pytest.raises(ValueError, match="compiled for 128"):
-        faulted_schedule_stats(G, c, slots=64)
+        distance_stats(G, schedule=c, slots=64)
     with pytest.raises(ValueError, match="compiled for 128"):
-        fault_aware_schedule_load(G, c, slots=64)
+        channel_load_stats(G, schedule=c, slots=64)
     assert ensure_compiled(c, G, 128) is c
 
 

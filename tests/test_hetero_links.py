@@ -25,9 +25,8 @@ import numpy as np
 import pytest
 
 from repro.core import (BCC, FaultSchedule, LinkSpec, Scenario, SimConfig,
-                        Torus, weighted_average_distance,
-                        weighted_channel_load, weighted_distance_matrix,
-                        weighted_saturation_throughput)
+                        Torus, channel_load_stats, distance_stats,
+                        saturation, weighted_distance_matrix)
 from repro.core.distances import faulted_distance_matrix
 from repro.core.simulation import build_tables, simulate
 
@@ -138,12 +137,10 @@ def test_express_raises_mixed_radix_saturation_toward_lattice_peer():
     ceiling, closing more than half the gap to the same-order (32-node)
     BCC(2) lattice peer measured with the identical methodology."""
     g = Torus(8, 4)
-    base = weighted_saturation_throughput(
-        g, LinkSpec(dim_weights=(1, 1)), pairs=20_000)
-    ex = weighted_saturation_throughput(
-        g, LinkSpec(express=((0, 2, 1),)), pairs=20_000)
-    peer = weighted_saturation_throughput(
-        BCC(2), LinkSpec(dim_weights=(1, 1, 1)), pairs=20_000)
+    base = saturation(g, links=LinkSpec(dim_weights=(1, 1)), pairs=20_000)
+    ex = saturation(g, links=LinkSpec(express=((0, 2, 1),)), pairs=20_000)
+    peer = saturation(BCC(2), links=LinkSpec(dim_weights=(1, 1, 1)),
+                      pairs=20_000)
     assert ex > 1.5 * base, (base, ex)
     assert ex > 1.0                    # beats the analytic mixed ceiling
     assert peer > base
@@ -317,20 +314,24 @@ def test_uniform_weight_scaling_doubles_costs_exactly():
     d1 = weighted_distance_matrix(g, LinkSpec(dim_weights=(1, 1)))
     d2 = weighted_distance_matrix(g, LinkSpec(dim_weights=(2, 2)))
     np.testing.assert_array_equal(d2, 2 * d1)
-    a1 = weighted_average_distance(g, LinkSpec(dim_weights=(1, 1)))
-    a2 = weighted_average_distance(g, LinkSpec(dim_weights=(2, 2)))
+    a1 = distance_stats(
+        g, links=LinkSpec(dim_weights=(1, 1)))["average_distance"]
+    a2 = distance_stats(
+        g, links=LinkSpec(dim_weights=(2, 2)))["average_distance"]
     assert a2 == pytest.approx(2 * a1)
 
 
 def test_weighted_channel_load_shapes_and_saturation():
     g = Torus(4, 4)
     ls = LinkSpec(dim_weights=(1, 2))
-    load = weighted_channel_load(g, ls, pairs=5_000, seed=1)
+    stats = channel_load_stats(g, links=ls, pairs=5_000, seed=1)
+    load = stats["load"]
     assert load.shape == (g.order, 4)
     w = ls.port_weights(g.n)
-    theta = weighted_saturation_throughput(g, ls, pairs=5_000, seed=1)
+    theta = saturation(g, links=ls, pairs=5_000, seed=1)
     assert theta == pytest.approx(1.0 / float((load * w[None, :]).max()))
+    assert stats["saturation"] == pytest.approx(theta)
     # heavier dim-1 channels cap saturation below the uniform fabric's
-    theta1 = weighted_saturation_throughput(
-        g, LinkSpec(dim_weights=(1, 1)), pairs=5_000, seed=1)
+    theta1 = saturation(g, links=LinkSpec(dim_weights=(1, 1)),
+                        pairs=5_000, seed=1)
     assert theta < theta1

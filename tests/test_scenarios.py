@@ -329,33 +329,43 @@ def test_faulted_distances_and_saturation_degrade():
     """Dead links can only lengthen distances and add channel load: the
     degraded k̄/diameter are ≥ pristine and the degraded saturation bound
     is ≤ the pristine measured one (MC noise margin)."""
-    from repro.core import (fault_aware_channel_load,
-                            fault_aware_saturation_throughput,
-                            faulted_average_distance, faulted_diameter,
+    from repro.core import (channel_load_stats, distance_stats,
                             faulted_distance_matrix,
-                            measured_saturation_throughput)
+                            measured_saturation_throughput, saturation)
     g = Torus(4, 4, 4)
     scen = Scenario.random_link_faults(g, 4, seed=7)
     assert scenario_connected(g, scen)
     dist = faulted_distance_matrix(g, scen)
     assert (dist > 0).any() and (dist[dist > 0] >= 1).all()
-    assert faulted_diameter(g, scen, dist) >= g.diameter
-    assert faulted_average_distance(g, scen, dist) >= g.average_distance
-    load = fault_aware_channel_load(g, scen, pairs=4000, seed=1)
+    dstats = distance_stats(g, scenario=scen)
+    assert dstats["diameter"] >= g.diameter
+    assert dstats["average_distance"] >= g.average_distance
+    load = channel_load_stats(g, scenario=scen, pairs=4000, seed=1)["load"]
     assert load[~scen.link_ok(g)].sum() == 0
-    sat_f = fault_aware_saturation_throughput(g, scen, pairs=4000)
+    sat_f = saturation(g, scenario=scen, pairs=4000)
     sat_0 = measured_saturation_throughput(g, pairs=4000)
     assert 0 < sat_f <= sat_0 * 1.05, (sat_f, sat_0)
 
 
 def test_analyze_pod_reports_faulted_capacity():
-    from repro.topology.collective_model import analyze_pod
+    from repro.core import NetworkCondition
+    from repro.topology.collective_model import PodOptions, analyze_pod
     g = BCC(2)
     scen = Scenario.random_link_faults(g, 2, seed=3)
-    rep = analyze_pod("BCC2", g, scenario=scen, routed_pairs=2000)
+    rep = analyze_pod("BCC2", g,
+                      condition=NetworkCondition(scenario=scen, pairs=2000))
     assert rep.faulted_capacity is not None and rep.faulted_capacity > 0
-    rep0 = analyze_pod("BCC2", g, routed_pairs=2000)
+    rep0 = analyze_pod("BCC2", g, options=PodOptions(routed_pairs=2000))
     assert rep0.faulted_capacity is None
+    # the legacy kwargs survive as a conflict-raising shim
+    legacy = analyze_pod("BCC2", g, scenario=scen, routed_pairs=2000)
+    assert legacy.faulted_capacity == rep.faulted_capacity
+    with pytest.raises(ValueError, match="both condition="):
+        analyze_pod("BCC2", g, scenario=scen,
+                    condition=NetworkCondition(scenario=scen))
+    with pytest.raises(ValueError, match="both options="):
+        analyze_pod("BCC2", g, routed_pairs=2000,
+                    options=PodOptions(routed_pairs=2000))
 
 
 def test_dead_node_scenario_masks_everything():
